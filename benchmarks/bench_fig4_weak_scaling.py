@@ -1,0 +1,70 @@
+"""Paper Fig. 4: weak scaling of FusedMM algorithms (setups 1 and 2).
+
+Setup 1: p doubles with the sparse side-length; nnz/row and r constant
+         (phi constant, density decays).
+Setup 2: p quadruples; side-length and nnz/row both double (density
+         constant, phi doubles).
+
+CPU-host scale-down of the paper's 2..256-node runs: p in {2, 4, 8}
+forced host devices, side length 2^10 * p (setup 1).  Reported per cell:
+wall time of the jitted FusedMM and the loop-aware HLO wire-GB (the
+communication metric the paper plots); the costmodel projection extends
+the curve to the paper's node counts.
+"""
+import numpy as np
+
+from benchmarks import common
+from repro.core import costmodel, d15, s15
+
+
+def run(out):
+    r = 64
+    for setup in (1, 2):
+        for p in (2, 4, 8):
+            if setup == 1:
+                m = n = 1024 * p
+                nnz_row = 8
+            else:
+                if p not in (2, 8):      # quadrupling: 2 -> 8
+                    continue
+                scale = int(np.sqrt(p // 2))
+                m = n = 2048 * scale
+                nnz_row = 8 * scale
+            rows, cols, vals, A, B = common.er_problem(m, n, r, nnz_row,
+                                                       seed=p)
+            nnz = len(vals)
+            for alg, elis in (("d15", "none"), ("d15", "reuse"),
+                              ("d15", "fused"), ("s15", "reuse")):
+                cm_name = {("d15", "none"): "d15_no_elision",
+                           ("d15", "reuse"): "d15_replication_reuse",
+                           ("d15", "fused"): "d15_local_fusion",
+                           ("s15", "reuse"): "s15_replication_reuse"}[
+                               (alg, elis)]
+                best = costmodel.best_c(cm_name, p=p, n=n, r=r, nnz=nnz)
+                c = best.c
+                if alg == "d15":
+                    g, plan, Ash, Bsh = common.build_d15(
+                        c, rows, cols, vals, m, n, r, A, B,
+                        transpose=(elis == "reuse"))
+                    fn = lambda: d15.fusedmm_d15(g, plan, Ash, Bsh,
+                                                 elision=elis)
+                    low = d15.fusedmm_d15.lower(g, plan, Ash, Bsh,
+                                                elision=elis)
+                else:
+                    g, plan, Ash, Bsh = common.build_s15(
+                        c, rows, cols, vals, m, n, r, A, B)
+                    fn = lambda: s15.fusedmm_s15(g, plan, Ash, Bsh,
+                                                 elision="reuse")
+                    low = s15.fusedmm_s15.lower(g, plan, Ash, Bsh,
+                                                elision="reuse")
+                t = common.timeit(fn)
+                gb = common.wire_gb(low)
+                proj256 = costmodel.best_c(cm_name, p=256, n=n * 256 // p,
+                                           r=r, nnz=nnz * 256 // p).words
+                out(common.csv_line(
+                    f"fig4.setup{setup}.p{p}.{cm_name}.c{c}", t,
+                    f"wireGB={gb:.4f};proj256words={proj256:.3e}"))
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,40 @@
+"""Paper Fig. 5: weak-scaling time breakdown (communication vs compute).
+
+Per (p, algorithm): the predicted communication seconds on the paper's
+hardware model (beta = 1/ICI link bw) vs the local-kernel compute seconds
+(gamma = 1/peak), from the same cost model the paper uses — plus the
+measured wire bytes from the compiled HLO as ground truth for the
+communication volume.
+"""
+from benchmarks import common
+from repro.core import costmodel, d15
+
+LINK_BW = 50e9      # B/s
+PEAK = 197e12       # FLOP/s
+
+
+def run(out):
+    r, nnz_row = 64, 8
+    for p in (2, 4, 8):
+        m = n = 1024 * p
+        rows, cols, vals, A, B = common.er_problem(m, n, r, nnz_row, seed=p)
+        nnz = len(vals)
+        for cm_name, elis, transpose in (
+                ("d15_no_elision", "none", False),
+                ("d15_replication_reuse", "reuse", True),
+                ("d15_local_fusion", "fused", False)):
+            best = costmodel.best_c(cm_name, p=p, n=n, r=r, nnz=nnz)
+            comm_s = best.words * 4 / LINK_BW
+            comp_s = costmodel.flops_fusedmm(nnz, r) / p / PEAK
+            g, plan, Ash, Bsh = common.build_d15(
+                best.c, rows, cols, vals, m, n, r, A, B, transpose=transpose)
+            low = d15.fusedmm_d15.lower(g, plan, Ash, Bsh, elision=elis)
+            gb = common.wire_gb(low)
+            frac = comm_s / (comm_s + comp_s)
+            out(common.csv_line(
+                f"fig5.p{p}.{cm_name}", comm_s + comp_s,
+                f"comm_frac={frac:.3f};hlo_wireGB={gb:.4f}"))
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,63 @@
+"""Paper Fig. 6: best algorithm as a function of (r, nnz) — the phi regime.
+
+Predicted winner from Table III at the paper's p=32, m=2^22 setting, and
+the observed winner by measured wall time at the CPU scale-down (p=8).
+The paper's conclusion to reproduce: 1.5D sparse-shifting wins at low
+phi = nnz/(n r); 1.5D dense-shifting wins at high phi.
+"""
+import numpy as np
+
+from benchmarks import common
+from repro.core import costmodel, d15, s15
+
+CANDIDATES = ("d15_replication_reuse", "d15_local_fusion",
+              "s15_replication_reuse")
+
+
+def observed_winner(p, rows, cols, vals, m, n, r, A, B):
+    times = {}
+    for name in CANDIDATES:
+        best = costmodel.best_c(name, p=p, n=n, r=r, nnz=len(vals))
+        if name.startswith("d15"):
+            elis = "reuse" if "reuse" in name else "fused"
+            g, plan, Ash, Bsh = common.build_d15(
+                best.c, rows, cols, vals, m, n, r, A, B,
+                transpose=(elis == "reuse"))
+            fn = lambda: d15.fusedmm_d15(g, plan, Ash, Bsh, elision=elis)
+        else:
+            g, plan, Ash, Bsh = common.build_s15(best.c, rows, cols, vals,
+                                                 m, n, r, A, B)
+            fn = lambda: s15.fusedmm_s15(g, plan, Ash, Bsh)
+        times[name] = common.timeit(fn, iters=2)
+    return min(times, key=times.get), times
+
+
+def run(out):
+    p = 8
+    m = n = 4096
+    agree = 0
+    cells = 0
+    for r in (32, 128):
+        for nnz_row in (2, 16, 64):
+            rows, cols, vals, A, B = common.er_problem(m, n, r, nnz_row,
+                                                       seed=r + nnz_row)
+            nnz = len(vals)
+            phi = nnz / (n * r)
+            pred = next(iter(costmodel.select_algorithm(
+                p=p, n=n, r=r, nnz=nnz, candidates=CANDIDATES)))
+            obs, times = observed_winner(p, rows, cols, vals, m, n, r, A, B)
+            # paper-scale prediction (p=32, m=2^22, same phi)
+            pred32 = next(iter(costmodel.select_algorithm(
+                p=32, n=1 << 22, r=r, nnz=int(phi * (1 << 22) * r),
+                candidates=CANDIDATES)))
+            cells += 1
+            agree += (pred == obs)
+            out(common.csv_line(
+                f"fig6.r{r}.nnz{nnz_row}", times[obs],
+                f"phi={phi:.3f};pred={pred};obs={obs};paperscale={pred32}"))
+    out(common.csv_line("fig6.agreement", 0.0,
+                        f"predicted==observed in {agree}/{cells} cells"))
+
+
+if __name__ == "__main__":
+    run(print)

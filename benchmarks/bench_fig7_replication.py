@@ -1,0 +1,45 @@
+"""Paper Fig. 7 / Table IV: predicted vs observed optimal replication c.
+
+For each d15 elision strategy at p=8: Table IV's closed-form c*, the best
+integer c by the cost model, and the observed best c by measured HLO wire
+bytes (communication volume is the observable the theory predicts).
+Reproduces the paper's ordering: c*(fused) <= c*(none) <= c*(reuse).
+"""
+from benchmarks import common
+from repro.core import costmodel, d15
+
+
+def run(out):
+    p, r, nnz_row = 8, 64, 8
+    m = n = 4096
+    rows, cols, vals, A, B = common.er_problem(m, n, r, nnz_row, seed=0)
+    nnz = len(vals)
+    best_cs = {}
+    for cm_name, elis, transpose in (
+            ("d15_no_elision", "none", False),
+            ("d15_replication_reuse", "reuse", True),
+            ("d15_local_fusion", "fused", False)):
+        cstar = costmodel.optimal_c(cm_name, p=p)
+        model_c = costmodel.best_c(cm_name, p=p, n=n, r=r, nnz=nnz).c
+        measured = {}
+        for c in (1, 2, 4, 8):
+            g, plan, Ash, Bsh = common.build_d15(
+                c, rows, cols, vals, m, n, r, A, B, transpose=transpose)
+            low = d15.fusedmm_d15.lower(g, plan, Ash, Bsh, elision=elis)
+            measured[c] = common.wire_gb(low)
+        obs_c = min(measured, key=measured.get)
+        best_cs[cm_name] = obs_c
+        out(common.csv_line(
+            f"fig7.{cm_name}", measured[obs_c],
+            f"cstar={cstar:.2f};model_c={model_c};observed_c={obs_c};"
+            + ";".join(f"wire(c={c})={v:.4f}GB" for c, v in
+                       measured.items())))
+    ordered = (best_cs["d15_local_fusion"]
+               <= best_cs["d15_no_elision"]
+               <= best_cs["d15_replication_reuse"])
+    out(common.csv_line("fig7.ordering", 0.0,
+                        f"fusion<=none<=reuse holds: {ordered}"))
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,54 @@
+"""Paper Fig. 9: ALS and GAT application performance.
+
+Timed end-to-end on the CPU scale-down, split into time inside the FusedMM
+/ SDDMM / SpMM kernels vs the rest of the application (CG vector algebra,
+softmax, activations) — the same decomposition the paper plots.
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.apps import als, gat
+from repro.kernels import ops
+
+
+def run(out):
+    # --- ALS: 20 CG iterations (10 for A, 10 for B), paper's setting
+    prob = als.make_problem(2048, 2048, 16, 64, seed=0)
+    rng = np.random.default_rng(0)
+    import jax.numpy as jnp
+    A = jnp.asarray(rng.standard_normal((2048, 64)) * 0.1, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((2048, 64)) * 0.1, jnp.float32)
+
+    # kernel-only time: the FusedMM matvecs of 20 CG iterations
+    t_kernel = common.timeit(
+        lambda: als.fusedmm_matvec(prob.mask, A, B, prob.reg, prob.m),
+        iters=3) * 20
+    t_total = common.timeit(
+        lambda: als.als_round(prob, A, B, cg_iters=10), iters=1)
+    out(common.csv_line("fig9.als.total", t_total,
+                        f"fusedmm_frac={min(t_kernel / t_total, 1.0):.2f}"))
+    out(common.csv_line("fig9.als.fusedmm", t_kernel, "20 CG matvecs"))
+
+    # --- GAT forward (2 layers, 4 heads), paper's workload
+    S = gat.make_graph(4096, 16, seed=1)
+    H = jnp.asarray(rng.standard_normal((4096, 64)), jnp.float32)
+    layers = [gat.init_gat_layer(jax.random.PRNGKey(i), 64, 64)
+              for i in range(2)]
+    t_gat = common.timeit(
+        lambda: gat.gat_forward(S, H, layers, n_heads=4), iters=2)
+    # kernel-only: SDDMM + SpMM per head per layer
+    Wh = H @ layers[0].W[:, :16]
+    u = Wh @ layers[0].a1[:16]
+    v = Wh @ layers[0].a2[:16]
+    t_k = (common.timeit(lambda: gat.attention_scores(S, u, v), iters=3)
+           + common.timeit(lambda: ops.spmm(S, Wh, m=4096), iters=3)) * 8
+    out(common.csv_line("fig9.gat.total", t_gat,
+                        f"kernel_frac={min(t_k / t_gat, 1.0):.2f}"))
+    out(common.csv_line("fig9.gat.kernels", t_k, "8 head-layers"))
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,38 @@
+"""Local kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On-CPU interpret timings are functional, not TPU projections; the derived
+column reports useful GFLOP/s and the Pallas/ref ratio so regressions in
+the kernel structure show up in CI.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import sparse
+from repro.kernels import ops, ref
+
+
+def run(out):
+    for (m, n, r, k) in ((2048, 2048, 64, 8), (4096, 4096, 128, 16)):
+        rows, cols, vals, A, B = common.er_problem(m, n, r, k, seed=0)
+        S = sparse.pack_row_tiled(rows, cols, vals, (m, n), row_tile=256,
+                                  nz_block=256)
+        Aj, Bj = jnp.asarray(A), jnp.asarray(B)
+        nnz = len(vals)
+        for name, fn_p, fn_r, flops in (
+            ("sddmm", lambda: ops.sddmm(Aj, Bj, S),
+             lambda: ref.sddmm(Aj, Bj, S), 2 * nnz * r),
+            ("spmm", lambda: ops.spmm(S, Bj),
+             lambda: ref.spmm(S, Bj), 2 * nnz * r),
+            ("fusedmm", lambda: ops.fusedmm(Aj, Bj, S),
+             lambda: ref.fusedmm(Aj, Bj, S), 4 * nnz * r),
+        ):
+            tp = common.timeit(fn_p, iters=2)
+            tr = common.timeit(fn_r, iters=2)
+            out(common.csv_line(
+                f"kernel.{name}.m{m}.r{r}", tp,
+                f"gflops={flops / tp / 1e9:.2f};ref_ratio={tp / tr:.2f}"))
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: timing, grids, problem builders, CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time (s) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_line(name, seconds, derived=""):
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def wire_gb(lowered):
+    from repro.roofline.hlo_parse import collective_summary
+    s = collective_summary(lowered.compile().as_text())
+    return s["total_wire_bytes"] / 1e9
+
+
+def build_d15(c, rows, cols, vals, m, n, r, A, B, transpose=False,
+              row_tile=64, nz_block=64):
+    from repro.core import d15
+    from repro.core.grid import make_grid15
+    g = make_grid15(c)
+    Ash = jax.device_put(jnp.asarray(A), g.sharding(("layer", "fiber")))
+    Bsh = jax.device_put(jnp.asarray(B), g.sharding(("layer", "fiber")))
+    plan = d15.plan_d15(g, rows, cols, vals, m, n, r, transpose=transpose,
+                        row_tile=row_tile, nz_block=nz_block)
+    return g, plan, Ash, Bsh
+
+
+def build_s15(c, rows, cols, vals, m, n, r, A, B, row_tile=64,
+              nz_block=64):
+    from repro.core import s15
+    from repro.core.grid import make_grid15
+    g = make_grid15(c)
+    Ash = jax.device_put(jnp.asarray(A), g.sharding(None, ("layer", "fiber")))
+    Bsh = jax.device_put(jnp.asarray(B), g.sharding(None, ("layer", "fiber")))
+    plan = s15.plan_s15(g, rows, cols, vals, m, n, r, row_tile=row_tile,
+                        nz_block=nz_block)
+    return g, plan, Ash, Bsh
+
+
+def er_problem(m, n, r, nnz_per_row, seed=0):
+    from repro.core import sparse
+    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_per_row, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    A = rng.standard_normal((m, r)).astype(np.float32)
+    B = rng.standard_normal((n, r)).astype(np.float32)
+    return rows, cols, vals, A, B

@@ -1,0 +1,23 @@
+"""Batched serving demo: prefill a batch of prompts, decode greedily.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import ParallelConfig
+from repro.configs import llama32_1b
+from repro.models import model as M
+from repro.serving import engine
+
+if __name__ == "__main__":
+    cfg = llama32_1b.reduced()
+    pcfg = ParallelConfig(compute_dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+    out = engine.greedy_generate(cfg, pcfg, params, {"tokens": prompts},
+                                 steps=16)
+    print("generated:", out.shape)
+    print(np.asarray(out[:2]))

@@ -1,0 +1,110 @@
+"""Shared planner utilities for the distributed sparse algorithms.
+
+Planners run once on the host (numpy) — the analogue of the paper's
+amortized preprocessing — and produce static-shape, device-placed pytrees
+that the jitted shard_map executors consume repeatedly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import RowTiledCOO, pack_row_tiled
+
+
+def extract_block(rows, cols, vals, r0, r1, c0, c1):
+    """Nonzeros of S falling in the [r0,r1) x [c0,c1) block, rebased."""
+    msk = (rows >= r0) & (rows < r1) & (cols >= c0) & (cols < c1)
+    return rows[msk] - r0, cols[msk] - c0, vals[msk]
+
+
+def block_partition(rows, cols, vals, row_size, col_size, n_col_blocks):
+    """Group nonzeros by (row-block, col-block) in one O(nnz log nnz) pass.
+
+    Returns {(bu, bj): (rows_rebased, cols_rebased, vals)}.  Replaces
+    per-block full-array masking, which is O(nnz * blocks) — prohibitive
+    for production-scale planning (millions of nnz x thousands of blocks).
+    """
+    bid = (rows // row_size).astype(np.int64) * n_col_blocks \
+        + (cols // col_size)
+    order = np.argsort(bid, kind="stable")
+    rows, cols, vals, bid = (rows[order], cols[order], vals[order],
+                             bid[order])
+    uniq, starts = np.unique(bid, return_index=True)
+    ends = np.append(starts[1:], len(bid))
+    out = {}
+    for u, s, e in zip(uniq, starts, ends):
+        bu, bj = int(u) // n_col_blocks, int(u) % n_col_blocks
+        out[(bu, bj)] = (rows[s:e] - bu * row_size,
+                         cols[s:e] - bj * col_size, vals[s:e])
+    return out
+
+
+def pack_block_list(blocks, shape, row_tile, nz_block):
+    """Pack a list of COO blocks to RowTiled arrays with a common nblocks.
+
+    blocks: list of (rows, cols, vals) numpy triples, all logical `shape`.
+    Returns stacked numpy arrays (N, nb, k), (N, nb, k), (N, nb, k), (N, nb).
+    """
+    packs = [pack_row_tiled(r, c, v, shape, row_tile=row_tile,
+                            nz_block=nz_block) for (r, c, v) in blocks]
+    nbmax = max(p.nblocks for p in packs)
+    rl = np.zeros((len(packs), nbmax, nz_block), np.int32)
+    cl = np.zeros((len(packs), nbmax, nz_block), np.int32)
+    vl = np.zeros((len(packs), nbmax, nz_block), np.float32)
+    tb = np.zeros((len(packs), nbmax), np.int32)
+    for i, p in enumerate(packs):
+        nb = p.nblocks
+        rl[i, :nb] = np.asarray(p.rows_local)
+        cl[i, :nb] = np.asarray(p.cols)
+        vl[i, :nb] = np.asarray(p.vals)
+        tb[i, :nb] = np.asarray(p.tile_base)
+        tb[i, nb:] = tb[i, nb - 1] if nb else 0   # keep bases monotone
+    return rl, cl, vl, tb
+
+
+def coo_of(rows_local, cols, vals, tile_base, shape, row_tile) -> RowTiledCOO:
+    """Assemble a RowTiledCOO inside traced code from raw arrays."""
+    return RowTiledCOO(rows_local, cols, vals, tile_base, shape, row_tile)
+
+
+def choose_row_tile(height: int, want: int = 256) -> int:
+    """Largest divisor of `height` that is <= want (prefers multiples of 8)."""
+    t = min(want, height)
+    while height % t:
+        t -= 1
+    return t
+
+
+@dataclasses.dataclass(frozen=True, eq=False)   # identity semantics:
+# numpy arrays inside static pytree metadata must not be __eq__-compared
+class BlockMeta:
+    """Host-side metadata to reassemble stacked sparse outputs densely."""
+    row_offsets: np.ndarray  # (...,) global row offset per block
+    col_offsets: np.ndarray  # (...,) global col offset per block
+    shape: Tuple[int, int]
+
+    def to_dense(self, rows_local, cols, vals, tile_base, row_tile=None):
+        """Scatter stacked (..., nb, k) block arrays into a dense matrix."""
+        rows_local = np.asarray(rows_local)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals)
+        tile_base = np.asarray(tile_base)
+        out = np.zeros(self.shape, np.float64)
+        flat_ro = self.row_offsets.reshape(-1)
+        flat_co = self.col_offsets.reshape(-1)
+        nblk = rows_local.shape[:-2]
+        rl = rows_local.reshape(-1, *rows_local.shape[-2:])
+        cl = cols.reshape(-1, *cols.shape[-2:])
+        vl = vals.reshape(-1, *vals.shape[-2:])
+        tb = tile_base.reshape(-1, tile_base.shape[-1])
+        for b in range(rl.shape[0]):
+            r = (rl[b] + tb[b][:, None]).reshape(-1) + flat_ro[b]
+            c = cl[b].reshape(-1) + flat_co[b]
+            v = vl[b].reshape(-1)
+            np.add.at(out, (r[v != 0], c[v != 0]), v[v != 0])
+        return out.astype(np.float32)

@@ -1,0 +1,151 @@
+"""Alpha-beta-gamma communication model for FusedMM algorithms.
+
+Implements the paper's Table III (latency/bandwidth costs per algorithm,
+embedded in the FusedMM procedure) and Table IV (optimal replication
+factors), plus the regime-selection rule of §V-E: sparse-shifting /
+sparse-replicating algorithms win for low phi = nnz(S)/(n*r); dense-shifting
+/ dense-replicating win for high phi.
+
+All word counts are *per processor* (the max over processors, assuming the
+random-permutation load balancing of §VI), matching the paper's "maximum
+amount of time any processor spends sending and receiving".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+ALGORITHMS = (
+    "d15_no_elision",        # 1.5D dense shift, unoptimized SDDMM;SpMM
+    "d15_replication_reuse", # 1.5D dense shift + replication reuse
+    "d15_local_fusion",      # 1.5D dense shift + local kernel fusion
+    "s15_replication_reuse", # 1.5D sparse shift + replication reuse
+    "d25_no_elision",        # 2.5D dense replicating, unoptimized
+    "d25_replication_reuse", # 2.5D dense replicating + replication reuse
+    "s25_no_elision",        # 2.5D sparse replicating (no elision possible)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCost:
+    algorithm: str
+    p: int
+    c: int
+    words: float      # words sent+received per processor (beta term)
+    messages: float   # message count (alpha term)
+    phi: float
+
+    def time(self, alpha: float, beta: float) -> float:
+        return self.alpha_time(alpha) + self.beta_time(beta)
+
+    def alpha_time(self, alpha: float) -> float:
+        return alpha * self.messages
+
+    def beta_time(self, beta: float) -> float:
+        return beta * self.words
+
+
+def _check(p: int, c: int):
+    if c < 1 or p % c:
+        raise ValueError(f"replication factor c={c} must divide p={p}")
+
+
+def words_fusedmm(algorithm: str, *, p: int, c: int, n: int, r: int,
+                  nnz: int) -> CommCost:
+    """Words communicated per processor for a FusedMM call (Table III)."""
+    _check(p, c)
+    phi = nnz / (n * r)
+    if algorithm == "d15_no_elision":
+        words = n * r * (2.0 / c + 2.0 * (c - 1) / p)
+        msgs = 2 * p / c + 2 * (c - 1)
+    elif algorithm == "d15_replication_reuse":
+        words = n * r * (2.0 / c + (c - 1) / p)
+        msgs = 2 * p / c + (c - 1)
+    elif algorithm == "d15_local_fusion":
+        words = n * r * (1.0 / c + 2.0 * (c - 1) / p)
+        msgs = p / c + 2 * (c - 1)
+    elif algorithm == "s15_replication_reuse":
+        words = n * r * (6.0 * phi / c + (c - 1) / p)
+        msgs = 2 * p / c + (c - 1)
+    elif algorithm == "d25_no_elision":
+        sq = math.sqrt(p / c)
+        words = n * r / math.sqrt(p * c) * (6 * phi + 2) \
+            + 2 * n * r * (c - 1) / p
+        msgs = 4 * sq + 2 * (c - 1)
+    elif algorithm == "d25_replication_reuse":
+        sq = math.sqrt(p / c)
+        words = n * r / math.sqrt(p * c) * (6 * phi + 2) \
+            + n * r * (c - 1) / p
+        msgs = 4 * sq + (c - 1)
+    elif algorithm == "s25_no_elision":
+        sq = math.sqrt(p / c)
+        words = n * r / math.sqrt(p) * 4.0 / math.sqrt(c) \
+            + 3.0 * phi * n * r * (c - 1) / p
+        msgs = 4 * sq + 3 * (c - 1)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return CommCost(algorithm, p, c, words, msgs, phi)
+
+
+def optimal_c(algorithm: str, *, p: int, phi: float = 0.0) -> float:
+    """Closed-form optimal replication factor (Table IV, continuous)."""
+    if algorithm == "d15_no_elision":
+        return math.sqrt(p)
+    if algorithm == "d15_replication_reuse":
+        return math.sqrt(2 * p)
+    if algorithm == "d15_local_fusion":
+        return math.sqrt(p / 2)
+    if algorithm == "s15_replication_reuse":
+        return math.sqrt(6 * p * phi)
+    if algorithm == "d25_no_elision":
+        return (p * (1 + 3 * phi) ** 2 / 4) ** (1 / 3)
+    if algorithm == "d25_replication_reuse":
+        return (p * (1 + 3 * phi) ** 2) ** (1 / 3)
+    if algorithm == "s25_no_elision":
+        return (p / (2 * phi / 3) ** 2) ** (1 / 3) if phi > 0 else float(p)
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def feasible_cs(algorithm: str, p: int, r: int = 0):
+    """Integer replication factors the algorithm supports on p processors."""
+    out = []
+    for c in range(1, p + 1):
+        if p % c:
+            continue
+        if algorithm.startswith(("d25", "s25")):
+            q = p // c
+            s = math.isqrt(q)
+            if s * s != q:
+                continue
+        out.append(c)
+    return out
+
+
+def best_c(algorithm: str, *, p: int, n: int, r: int, nnz: int) -> CommCost:
+    """Best feasible integer c by exhaustive evaluation of Table III."""
+    best = None
+    for c in feasible_cs(algorithm, p):
+        cost = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz)
+        if best is None or cost.words < best.words:
+            best = cost
+    if best is None:
+        raise ValueError(f"no feasible c for {algorithm} at p={p}")
+    return best
+
+
+def select_algorithm(*, p: int, n: int, r: int, nnz: int,
+                     candidates=ALGORITHMS) -> Dict[str, CommCost]:
+    """Rank candidate algorithms at their best c (the paper's Fig. 6 rule)."""
+    costs = {}
+    for alg in candidates:
+        try:
+            costs[alg] = best_c(alg, p=p, n=n, r=r, nnz=nnz)
+        except ValueError:
+            continue
+    return dict(sorted(costs.items(), key=lambda kv: kv[1].words))
+
+
+def flops_fusedmm(nnz: int, r: int) -> int:
+    """Local FLOPs for one FusedMM: SDDMM (2r per nnz) + SpMM (2r per nnz)."""
+    return 4 * nnz * r

@@ -1,0 +1,306 @@
+"""1.5D dense-shifting, dense-replicating algorithms (paper Algorithm 1).
+
+Grid: ("layer" = p/c, "fiber" = c).  The sparse matrix S is STATIONARY
+(block (u, j) lives on device (u, j % c)), one dense matrix is REPLICATED
+along the fiber (all-gather input / reduce-scatter output), the other dense
+matrix PROPAGATES via cyclic shifts within each layer.
+
+Block schedule: A row-block i lives on device (i // c, i % c).  B row-block
+j starts on device (j // c, j % c); after t shifts device (u, v) holds
+B block ((u - t) mod L) * c + v.  The planner materializes, for every
+(device, phase), the row-tiled pack of the S block the local kernel needs,
+so the jitted executor is a pure scan of {local kernel; ppermute}.
+
+Modes (unified, per the paper's SpMM<->SDDMM conversion):
+  sddmm_d15   : R = S * (A @ B.T)          A replicated-in, B shifts
+  spmma_d15   : A = S @ B                  A replicated-out, B shifts
+  spmmb_d15   : B = S.T @ A                A replicated-in, B shifts+accum
+  fusedmm_d15 : FusedMM with elision in {"none", "reuse", "fused"}
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import common
+from repro.core.grid import Grid15
+from repro.kernels import ops
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlanD15:
+    """Device-placed per-(device, phase) packs of S (and S^T)."""
+    rows_local: jax.Array   # (L, c, T, nb, k) int32
+    cols: jax.Array
+    vals: jax.Array
+    tile_base: jax.Array    # (L, c, T, nb)
+    m: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    r: int = dataclasses.field(metadata=dict(static=True))
+    row_tile: int = dataclasses.field(metadata=dict(static=True))
+    transpose: bool = dataclasses.field(metadata=dict(static=True))
+    # host-only metadata (not traced):
+    meta: object = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def block_shape(self) -> Tuple[int, int]:
+        # (rows of the replicated/gathered matrix, rows of one B block)
+        if self.transpose:
+            return (self.nB, self.cmA)
+        return (self.cmA, self.nB)
+
+    @property
+    def cmA(self):
+        return self.meta.cmA
+
+    @property
+    def nB(self):
+        return self.meta.nB
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MetaD15:
+    cmA: int
+    nB: int
+    block_meta: common.BlockMeta
+
+
+def plan_d15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
+             transpose: bool = False, row_tile: int = 256,
+             nz_block: int = 256) -> PlanD15:
+    """Pack S for the 1.5D dense-shifting schedule (host, amortized).
+
+    transpose=True packs S^T blocks (needed by replication-reuse FusedMM
+    and by SpMMB — the paper stores both copies, §IV-B).
+    """
+    L, c, p = grid.L, grid.c, grid.p
+    assert m % p == 0 and n % p == 0, (m, n, p)
+    mA, nB = m // p, n // p
+    cmA = c * mA
+    blk_shape = (nB, cmA) if transpose else (cmA, nB)
+    row_tile = common.choose_row_tile(blk_shape[0], row_tile)
+
+    part = common.block_partition(np.asarray(rows), np.asarray(cols),
+                                  np.asarray(vals), cmA, nB, p)
+    empty = (np.zeros(0, np.int32), np.zeros(0, np.int32),
+             np.zeros(0, np.float32))
+    blocks, row_off, col_off = [], [], []
+    for u in range(L):
+        for v in range(c):
+            for t in range(L):
+                j = ((u - t) % L) * c + v
+                br, bc, bv = part.get((u, j), empty)
+                if transpose:
+                    br, bc = bc, br
+                    row_off.append(j * nB), col_off.append(u * cmA)
+                else:
+                    row_off.append(u * cmA), col_off.append(j * nB)
+                blocks.append((br, bc, bv))
+    rl, cl, vl, tb = common.pack_block_list(blocks, blk_shape, row_tile,
+                                            nz_block)
+    shp = (L, c, L) + rl.shape[1:]
+    sh5 = grid.sharding("layer", "fiber")
+    meta = MetaD15(cmA, nB, common.BlockMeta(
+        np.array(row_off).reshape(L, c, L),
+        np.array(col_off).reshape(L, c, L),
+        (n, m) if transpose else (m, n)))
+    return PlanD15(
+        jax.device_put(rl.reshape(shp), sh5),
+        jax.device_put(cl.reshape(shp), sh5),
+        jax.device_put(vl.reshape(shp), sh5),
+        jax.device_put(tb.reshape((L, c, L) + tb.shape[1:]), sh5),
+        m, n, r, row_tile, transpose, meta)
+
+
+def _coo(plan: PlanD15, s):
+    rl, cl, vl, tb = s
+    return common.coo_of(rl, cl, vl, tb, plan.block_shape, plan.row_tile)
+
+
+def _shift(x, axis_name, size):
+    return jax.lax.ppermute(x, axis_name,
+                            [(i, (i + 1) % size) for i in range(size)])
+
+
+def _exec(grid: Grid15, plan: PlanD15, body, A, B, out_specs):
+    """Common shard_map/jit harness; S pack enters with (layer,fiber) dims."""
+    mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
+    s_spec = P(lay, fib)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=((s_spec,) * 4, P((lay, fib)), P((lay, fib))),
+        out_specs=out_specs, check_vma=False)
+    s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
+    return fn(s_pack, A, B)
+
+
+def _squeeze_s(s):
+    return tuple(x[0, 0] for x in s)   # drop (layer, fiber) unit dims
+
+
+# ---------------------------------------------------------------------------
+# Unified Algorithm 1: SDDMM / SpMMA / SpMMB
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sddmm_d15(grid: Grid15, plan: PlanD15, A, B):
+    """R = S * (A @ B.T); returns stacked vals (L, c, T, nb, k)."""
+    lay, fib, L = grid.layer, grid.fiber, grid.L
+
+    def body(s, A_loc, B_loc):
+        s = _squeeze_s(s)
+        T = jax.lax.all_gather(A_loc, fib, tiled=True)     # (c m/p, r)
+
+        def phase(B_cur, s_t):
+            vals = ops.sddmm(T, B_cur, _coo(plan, s_t)).vals
+            return _shift(B_cur, lay, L), vals
+
+        _, r_vals = jax.lax.scan(phase, B_loc, s)
+        return r_vals[None, None]
+
+    return _exec(grid, plan, body, A, B, P(lay, fib))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def spmma_d15(grid: Grid15, plan: PlanD15, B):
+    """A = S @ B with A replicated as output, reduce-scattered at the end."""
+    lay, fib, L, c = grid.layer, grid.fiber, grid.L, grid.c
+
+    def body(s, _unused, B_loc):
+        s = _squeeze_s(s)
+        T0 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
+
+        def phase(carry, s_t):
+            B_cur, T = carry
+            T = T + ops.spmm(_coo(plan, s_t), B_cur, m=plan.cmA)
+            return (_shift(B_cur, lay, L), T), None
+
+        (_, T), _ = jax.lax.scan(phase, (B_loc, T0), s)
+        return jax.lax.psum_scatter(T, fib, scatter_dimension=0, tiled=True)
+
+    dummy = jnp.zeros((grid.p, 1), jnp.float32)  # placeholder A slot
+    return _exec(grid, plan, body, dummy, B, P((lay, fib)))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def spmmb_d15(grid: Grid15, plan: PlanD15, A):
+    """B = S.T @ A: A replicated-in; the shifting B buffer accumulates."""
+    assert plan.transpose, "spmmb_d15 needs a transpose-packed plan"
+    lay, fib, L = grid.layer, grid.fiber, grid.L
+
+    def body(s, A_loc, B0):
+        s = _squeeze_s(s)
+        T = jax.lax.all_gather(A_loc, fib, tiled=True)
+
+        def phase(B_cur, s_t):
+            B_cur = B_cur + ops.spmm(_coo(plan, s_t), T, m=plan.nB)
+            return _shift(B_cur, lay, L), None
+
+        B_out, _ = jax.lax.scan(phase, B0, s)
+        return B_out   # full cycle: home again
+
+    zeros = jnp.zeros((plan.n, plan.r), jnp.float32)
+    zeros = jax.device_put(zeros, grid.sharding((lay, fib)))
+    return _exec(grid, plan, body, A, zeros, P((lay, fib)))
+
+
+# ---------------------------------------------------------------------------
+# FusedMM with the paper's three strategies
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("elision",))
+def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "none"):
+    """FusedMM on the 1.5D dense-shifting grid.
+
+    elision="none"  : FusedMMA, SDDMM then SpMMA (2 rounds, AG + RS)
+    elision="reuse" : FusedMMB on the S^T pack (2 rounds, single AG)
+    elision="fused" : FusedMMA via the fused local kernel (1 round, AG + RS)
+
+    Returns (out_dense, R_vals_stacked).
+    """
+    lay, fib, L = grid.layer, grid.fiber, grid.L
+
+    if elision == "none":
+        assert not plan.transpose
+
+        def body(s, A_loc, B_loc):
+            s = _squeeze_s(s)
+            T = jax.lax.all_gather(A_loc, fib, tiled=True)
+
+            def phase1(B_cur, s_t):
+                vals = ops.sddmm(T, B_cur, _coo(plan, s_t)).vals
+                return _shift(B_cur, lay, L), vals
+
+            B_home, r_vals = jax.lax.scan(phase1, B_loc, s)
+            T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
+
+            def phase2(carry, inp):
+                s_t, rv = inp
+                B_cur, T2 = carry
+                R_t = _coo(plan, s_t).with_vals(rv)
+                T2 = T2 + ops.spmm(R_t, B_cur, m=plan.cmA)
+                return (_shift(B_cur, lay, L), T2), None
+
+            (_, T2), _ = jax.lax.scan(phase2, (B_home, T2), (s, r_vals))
+            out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
+                                       tiled=True)
+            return out, r_vals[None, None]
+
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), P(lay, fib)))
+
+    if elision == "reuse":
+        # FusedMMB: replicate A once; it serves the SDDMM *and* the SpMMB.
+        assert plan.transpose, "reuse needs a transpose-packed plan"
+
+        def body(s, A_loc, B_loc):
+            s = _squeeze_s(s)
+            T = jax.lax.all_gather(A_loc, fib, tiled=True)   # single AG
+
+            def phase1(B_cur, s_t):
+                # sampled <B_j, A_i> on the S^T layout
+                vals = ops.sddmm(B_cur, T, _coo(plan, s_t)).vals
+                return _shift(B_cur, lay, L), vals
+
+            _, r_vals = jax.lax.scan(phase1, B_loc, s)
+            out0 = jnp.zeros((plan.nB, plan.r), jnp.float32)
+
+            def phase2(out_cur, inp):
+                s_t, rv = inp
+                Rt = _coo(plan, s_t).with_vals(rv)
+                out_cur = out_cur + ops.spmm(Rt, T, m=plan.nB)
+                return _shift(out_cur, lay, L), None
+
+            out, _ = jax.lax.scan(phase2, out0, (s, r_vals))
+            return out, r_vals[None, None]   # out home after full cycle
+
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), P(lay, fib)))
+
+    if elision == "fused":
+        assert not plan.transpose
+
+        def body(s, A_loc, B_loc):
+            s = _squeeze_s(s)
+            T = jax.lax.all_gather(A_loc, fib, tiled=True)
+            T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
+
+            def phase(carry, s_t):
+                B_cur, T2 = carry
+                contrib, R_t = ops.fusedmm(T, B_cur, _coo(plan, s_t),
+                                           m=plan.cmA)
+                return (_shift(B_cur, lay, L), T2 + contrib), R_t.vals
+
+            (_, T2), r_vals = jax.lax.scan(phase, (B_loc, T2), s)
+            out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
+                                       tiled=True)
+            return out, r_vals[None, None]
+
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), P(lay, fib)))
+
+    raise ValueError(f"unknown elision {elision!r}")

@@ -1,0 +1,301 @@
+"""2.5D dense-replicating algorithms (paper Algorithm 2).
+
+Grid: ("row" = G, "col" = G, "fiber" = c) with p = G^2 c.  Each fiber layer
+runs a concurrent Cannon pass on its G x G grid: the sparse matrix S shifts
+along grid rows, dense matrix B shifts along grid columns, and dense matrix
+A is replicated along the fiber (all-gather input / reduce-scatter output).
+
+Blocking (device (x, y, z)):
+  A block (i = x*c + z, y):  (m/(Gc), r/G)   -> fiber AG gives T = A[X_x, W_y]
+  S block (x, j_t):          (m/G,  n/(Gc))  travels along the row axis
+  B block (j_t, y):          (n/(Gc), r/G)   travels along the column axis
+with the Cannon alignment j_t = ((x + y + t) mod G)*c + z.  The planner
+pre-skews S and B (the paper's "initial shift", done for free at fill time).
+
+SDDMM sample values accumulate inside the traveling S pack (partial dots
+over each visited column slice W_y) and are scaled by the original values
+once the pack returns home — so only 3 words per nonzero ever move.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import common
+from repro.core.grid import Grid25
+from repro.kernels import ops
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlanD25:
+    rows_local: jax.Array   # (G, G, c, nb, k)
+    cols: jax.Array
+    vals: jax.Array
+    tile_base: jax.Array    # (G, G, c, nb)
+    m: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    r: int = dataclasses.field(metadata=dict(static=True))
+    row_tile: int = dataclasses.field(metadata=dict(static=True))
+    transpose: bool = dataclasses.field(metadata=dict(static=True))
+    meta: object = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def block_shape(self):
+        if self.transpose:
+            return (self.meta.nS, self.meta.mS)
+        return (self.meta.mS, self.meta.nS)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MetaD25:
+    mS: int    # m/G   (S block rows, T rows)
+    nS: int    # n/(Gc) (S block cols, B block rows)
+    mA: int    # m/(Gc) (A block rows at rest)
+    rW: int    # r/G   (dense column-slice width)
+    block_meta: common.BlockMeta
+
+
+def plan_d25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
+             transpose: bool = False, row_tile: int = 256,
+             nz_block: int = 256) -> PlanD25:
+    G, c, p = grid.G, grid.c, grid.p
+    assert m % (G * c) == 0 and n % (G * c) == 0 and r % G == 0
+    mS, nS, mA, rW = m // G, n // (G * c), m // (G * c), r // G
+    blk_shape = (nS, mS) if transpose else (mS, nS)
+    row_tile = common.choose_row_tile(blk_shape[0], row_tile)
+
+    blocks, row_off, col_off = [], [], []
+    for x in range(G):
+        for y in range(G):
+            for z in range(c):
+                j = ((x + y) % G) * c + z          # Cannon pre-skew
+                r0, r1 = x * mS, (x + 1) * mS
+                c0, c1 = j * nS, (j + 1) * nS
+                br, bc, bv = common.extract_block(rows, cols, vals,
+                                                  r0, r1, c0, c1)
+                if transpose:
+                    br, bc = bc, br
+                    row_off.append(c0), col_off.append(r0)
+                else:
+                    row_off.append(r0), col_off.append(c0)
+                blocks.append((br, bc, bv))
+    rl, cl, vl, tb = common.pack_block_list(blocks, blk_shape, row_tile,
+                                            nz_block)
+    sh = grid.sharding("row", "col", "fiber")
+    shp = (G, G, c) + rl.shape[1:]
+    meta = MetaD25(mS, nS, mA, rW, common.BlockMeta(
+        np.array(row_off).reshape(G, G, c),
+        np.array(col_off).reshape(G, G, c),
+        (n, m) if transpose else (m, n)))
+    return PlanD25(
+        jax.device_put(rl.reshape(shp), sh),
+        jax.device_put(cl.reshape(shp), sh),
+        jax.device_put(vl.reshape(shp), sh),
+        jax.device_put(tb.reshape((G, G, c) + tb.shape[1:]), sh),
+        m, n, r, row_tile, transpose, meta)
+
+
+def skew_b(grid: Grid25, B: np.ndarray) -> jax.Array:
+    """Pre-skew B into its Cannon start position: (G, G, c, n/(Gc), r/G)."""
+    G, c = grid.G, grid.c
+    n, r = B.shape
+    nS, rW = n // (G * c), r // G
+    out = np.zeros((G, G, c, nS, rW), B.dtype)
+    for x in range(G):
+        for y in range(G):
+            for z in range(c):
+                j = ((x + y) % G) * c + z
+                out[x, y, z] = B[j * nS:(j + 1) * nS, y * rW:(y + 1) * rW]
+    return jax.device_put(out, grid.sharding("row", "col", "fiber"))
+
+
+def unskew_out(grid: Grid25, plan: PlanD25, stacked) -> np.ndarray:
+    """Invert the skew for B-shaped outputs (FusedMMB): -> (n, r)."""
+    G, c = grid.G, grid.c
+    nS, rW = plan.meta.nS, plan.meta.rW
+    stacked = np.asarray(stacked)
+    out = np.zeros((plan.n, plan.r), np.float32)
+    for x in range(G):
+        for y in range(G):
+            for z in range(c):
+                j = ((x + y) % G) * c + z
+                out[j * nS:(j + 1) * nS, y * rW:(y + 1) * rW] = \
+                    stacked[x, y, z]
+    return out
+
+
+def _coo(plan, rl, cl, vl, tb):
+    return common.coo_of(rl, cl, vl, tb, plan.block_shape, plan.row_tile)
+
+
+def _shift_back(x, axis_name, size):
+    """Move the buffer at position i to position i-1 (Cannon advance)."""
+    return jax.lax.ppermute(x, axis_name,
+                            [(i, (i - 1) % size) for i in range(size)])
+
+
+def _exec(grid: Grid25, plan: PlanD25, body, A, B_sk, out_specs):
+    mesh = grid.mesh
+    rw, cl_ax, fib = grid.row, grid.col, grid.fiber
+    s_spec = P(rw, cl_ax, fib)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=((s_spec,) * 4, P((rw, fib), cl_ax), s_spec),
+        out_specs=out_specs, check_vma=False)
+    s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
+    return fn(s_pack, A, B_sk)
+
+
+def _sq(args):
+    return tuple(x[0, 0, 0] for x in args)
+
+
+def _sddmm_round(grid, plan, T, s, B0):
+    """Cannon round accumulating partial dots in the traveling S pack.
+
+    For a normal pack the kernel samples <T_i, B_j>; for a transpose pack
+    the roles of the dense args swap.  Returns (pack home w/ partial dots,
+    B home).
+    """
+    G = grid.G
+    rl, cl, _, tb = s
+    partial = jnp.zeros_like(s[2])
+    ones = jnp.ones_like(partial)
+
+    def phase(carry, _):
+        rl, cl, partial, tb, B_cur = carry
+        if plan.transpose:
+            dots = ops.sddmm(B_cur, T, _coo(plan, rl, cl, ones, tb)).vals
+        else:
+            dots = ops.sddmm(T, B_cur, _coo(plan, rl, cl, ones, tb)).vals
+        partial = partial + dots
+        rl, cl, partial, tb = (
+            _shift_back(v, grid.col, G) for v in (rl, cl, partial, tb))
+        B_cur = _shift_back(B_cur, grid.row, G)
+        return (rl, cl, partial, tb, B_cur), None
+
+    (rl, cl, partial, tb, B_home), _ = jax.lax.scan(
+        phase, (rl, cl, partial, tb, B0), None, length=G)
+    return (rl, cl, partial, tb), B_home
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk):
+    """R = S * (A @ B.T); values return to skewed-home layout."""
+    fib = grid.fiber
+
+    def body(s, A_loc, B_loc):
+        s = _sq(s)
+        B0 = B_loc[0, 0, 0]
+        T = jax.lax.all_gather(A_loc, fib, tiled=True)
+        (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0)
+        return (s[2] * partial)[None, None, None]
+
+    return _exec(grid, plan, body, A, B_sk, P(grid.row, grid.col, grid.fiber))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def spmma_d25(grid: Grid25, plan: PlanD25, B_sk):
+    """A = S @ B, output replicated along fiber then reduce-scattered."""
+    G, fib = grid.G, grid.fiber
+
+    def body(s, _A, B_loc):
+        s = _sq(s)
+        B0 = B_loc[0, 0, 0]
+        T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
+
+        def phase(carry, _):
+            rl, cl, vl, tb, B_cur, T2 = carry
+            T2 = T2 + ops.spmm(_coo(plan, rl, cl, vl, tb), B_cur,
+                               m=plan.meta.mS)
+            rl, cl, vl, tb = (
+                _shift_back(v, grid.col, G) for v in (rl, cl, vl, tb))
+            B_cur = _shift_back(B_cur, grid.row, G)
+            return (rl, cl, vl, tb, B_cur, T2), None
+
+        (*_, T2), _ = jax.lax.scan(phase, (*s, B0, T2), None, length=G)
+        out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0, tiled=True)
+        return out
+
+    dummy = jnp.zeros((grid.G * grid.c, grid.G), jnp.float32)
+    return _exec(grid, plan, body, dummy, B_sk,
+                 P((grid.row, grid.fiber), grid.col))
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("elision",))
+def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none"):
+    """FusedMM on the 2.5D dense-replicating grid.
+
+    elision="none" : FusedMMA — AG(A) + 2 Cannon rounds + RS(out).
+                     Requires a normal pack.  Returns (out (m,r), R_vals).
+    elision="reuse": FusedMMB — single AG(A), output travels home with the
+                     propagated buffer (no reduce-scatter).  Requires a
+                     transpose pack.  Returns (out stacked skewed, R_vals).
+    """
+    G, fib = grid.G, grid.fiber
+
+    if elision == "none":
+        assert not plan.transpose
+
+        def body(s, A_loc, B_loc):
+            s = _sq(s)
+            B0 = B_loc[0, 0, 0]
+            T = jax.lax.all_gather(A_loc, fib, tiled=True)
+            (rl, cl, partial, tb), B_home = _sddmm_round(grid, plan, T, s, B0)
+            r_vals = s[2] * partial
+            T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
+
+            def phase2(carry, _):
+                rl, cl, vl, tb, B_cur, T2 = carry
+                T2 = T2 + ops.spmm(_coo(plan, rl, cl, vl, tb), B_cur,
+                                   m=plan.meta.mS)
+                rl, cl, vl, tb = (
+                    _shift_back(v, grid.col, G) for v in (rl, cl, vl, tb))
+                B_cur = _shift_back(B_cur, grid.row, G)
+                return (rl, cl, vl, tb, B_cur, T2), None
+
+            (*_, T2), _ = jax.lax.scan(
+                phase2, (rl, cl, r_vals, tb, B_home, T2), None, length=G)
+            out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
+                                       tiled=True)
+            return out, r_vals[None, None, None]
+
+        return _exec(grid, plan, body, A, B_sk,
+                     (P((grid.row, grid.fiber), grid.col),
+                      P(grid.row, grid.col, grid.fiber)))
+
+    if elision == "reuse":
+        assert plan.transpose
+
+        def body(s, A_loc, B_loc):
+            s = _sq(s)
+            B0 = B_loc[0, 0, 0]
+            T = jax.lax.all_gather(A_loc, fib, tiled=True)   # single AG
+            (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0)
+            r_vals = s[2] * partial
+            out0 = jnp.zeros((plan.meta.nS, plan.meta.rW), jnp.float32)
+
+            def phase2(carry, _):
+                rl, cl, vl, tb, out_cur = carry
+                out_cur = out_cur + ops.spmm(_coo(plan, rl, cl, vl, tb), T,
+                                             m=plan.meta.nS)
+                rl, cl, vl, tb = (
+                    _shift_back(v, grid.col, G) for v in (rl, cl, vl, tb))
+                out_cur = _shift_back(out_cur, grid.row, G)
+                return (rl, cl, vl, tb, out_cur), None
+
+            (*_, out), _ = jax.lax.scan(
+                phase2, (rl, cl, r_vals, tb, out0), None, length=G)
+            return out[None, None, None], r_vals[None, None, None]
+
+        return _exec(grid, plan, body, A, B_sk,
+                     (P(grid.row, grid.col, grid.fiber),
+                      P(grid.row, grid.col, grid.fiber)))
+
+    raise ValueError(f"unknown elision {elision!r}")

@@ -1,0 +1,92 @@
+"""Processor-grid abstraction mapping the paper's grids onto JAX meshes.
+
+The paper's ``p`` processors with replication factor ``c`` become named mesh
+axes:
+
+  1.5D: ("layer", "fiber") of shape (p/c, c)
+        cyclic shifts run over "layer" (lax.ppermute),
+        replication collectives over "fiber" (all_gather / psum_scatter).
+  2.5D: ("row", "col", "fiber") of shape (sqrt(p/c), sqrt(p/c), c)
+        Cannon shifts over "row"/"col", replication over "fiber".
+
+``from_mesh`` reinterprets existing production-mesh axes (e.g. the LM mesh's
+("data", "model")) as sparse-kernel axes without re-creating devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid15:
+    mesh: Mesh
+    layer: str = "layer"
+    fiber: str = "fiber"
+
+    @property
+    def L(self) -> int:
+        return self.mesh.shape[self.layer]
+
+    @property
+    def c(self) -> int:
+        return self.mesh.shape[self.fiber]
+
+    @property
+    def p(self) -> int:
+        return self.L * self.c
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid25:
+    mesh: Mesh
+    row: str = "row"
+    col: str = "col"
+    fiber: str = "fiber"
+
+    @property
+    def G(self) -> int:
+        g = self.mesh.shape[self.row]
+        assert g == self.mesh.shape[self.col]
+        return g
+
+    @property
+    def c(self) -> int:
+        return self.mesh.shape[self.fiber]
+
+    @property
+    def p(self) -> int:
+        return self.G * self.G * self.c
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def make_grid15(c: int, devices=None) -> Grid15:
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    p = devices.size
+    assert p % c == 0, (p, c)
+    mesh = Mesh(devices.reshape(p // c, c), ("layer", "fiber"))
+    return Grid15(mesh)
+
+
+def make_grid25(c: int, devices=None) -> Grid25:
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    p = devices.size
+    assert p % c == 0, (p, c)
+    g = math.isqrt(p // c)
+    assert g * g * c == p, f"p/c={p//c} must be a perfect square"
+    mesh = Mesh(devices.reshape(g, g, c), ("row", "col", "fiber"))
+    return Grid25(mesh)
+
+
+def grid15_from_mesh(mesh: Mesh, layer_axis: str, fiber_axis: str) -> Grid15:
+    """Reinterpret two axes of an existing mesh as (layer, fiber)."""
+    return Grid15(mesh, layer=layer_axis, fiber=fiber_axis)

@@ -1,0 +1,242 @@
+"""1.5D sparse-shifting, dense-replicating algorithms (paper §V-B).
+
+Grid: ("layer" = p/c, "fiber" = c).  The DENSE matrices are stationary,
+column-split across layer positions and replicated (all-gathered) along the
+fiber; the SPARSE matrix propagates: row-blocks of S cyclically shift
+within each layer, carrying partially-accumulated sample values (3 words
+per nonzero — rows, cols, value — exactly the paper's COO payload).
+
+Layout: device (u, v) at rest holds
+  A[:, W_u,v], B[:, W_u,v]   column slices of width r/p
+  S row-block b = u*c + v    (height m/p), row-tiled pack
+
+After the fiber all-gather each device holds the full-height slices
+A[:, W_u], B[:, W_u] of width r*c/p.  A nonzero's dot product accumulates
+as its block visits every layer position u (covering all r columns); the
+block returns home after a full cycle, where the partial dots are scaled
+by the original sample values.  The SpMM round shifts the (now final)
+values again, emitting per-phase output slabs out[rows(b_t), W_u].
+
+Because phi = nnz/(nr) is low exactly when this layout wins (paper Fig. 6),
+the shifted payload (3*nnz/p words/phase) is tiny compared to the dense
+blocks the d15 algorithm would shift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import common
+from repro.core.grid import Grid15
+from repro.kernels import ops
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlanS15:
+    rows_local: jax.Array   # (L, c, nb, k) int32 — one home block per device
+    cols: jax.Array
+    vals: jax.Array         # original sample values (stay home)
+    tile_base: jax.Array    # (L, c, nb)
+    m: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    r: int = dataclasses.field(metadata=dict(static=True))
+    row_tile: int = dataclasses.field(metadata=dict(static=True))
+    meta: object = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def mS(self):
+        return self.meta.mS
+
+    @property
+    def rc(self):
+        return self.meta.rc  # r*c/p: gathered dense slice width
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MetaS15:
+    mS: int
+    rc: int
+    block_meta: common.BlockMeta
+
+
+def plan_s15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
+             row_tile: int = 256, nz_block: int = 256) -> PlanS15:
+    L, c, p = grid.L, grid.c, grid.p
+    assert m % p == 0 and r % p == 0, (m, r, p)
+    mS = m // p
+    row_tile = common.choose_row_tile(mS, row_tile)
+    blocks, row_off = [], []
+    for u in range(L):
+        for v in range(c):
+            b = u * c + v
+            br, bc, bv = common.extract_block(rows, cols, vals,
+                                              b * mS, (b + 1) * mS, 0, n)
+            blocks.append((br, bc, bv))
+            row_off.append(b * mS)
+    rl, cl, vl, tb = common.pack_block_list(blocks, (mS, n), row_tile,
+                                            nz_block)
+    sh = grid.sharding("layer", "fiber")
+    shp = (L, c) + rl.shape[1:]
+    meta = MetaS15(mS, r * c // p, common.BlockMeta(
+        np.array(row_off).reshape(L, c), np.zeros((L, c), np.int64), (m, n)))
+    return PlanS15(
+        jax.device_put(rl.reshape(shp), sh),
+        jax.device_put(cl.reshape(shp), sh),
+        jax.device_put(vl.reshape(shp), sh),
+        jax.device_put(tb.reshape((L, c) + tb.shape[1:]), sh),
+        m, n, r, row_tile, meta)
+
+
+def _coo(plan, rl, cl, vl, tb):
+    return common.coo_of(rl, cl, vl, tb, (plan.mS, plan.n), plan.row_tile)
+
+
+def _shift(x, axis_name, size):
+    return jax.lax.ppermute(x, axis_name,
+                            [(i, (i + 1) % size) for i in range(size)])
+
+
+def _exec(grid: Grid15, plan: PlanS15, body, A, B, out_specs):
+    mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
+    s_spec = P(lay, fib)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=((s_spec,) * 4, P(None, (lay, fib)), P(None, (lay, fib))),
+        out_specs=out_specs, check_vma=False)
+    s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
+    return fn(s_pack, A, B)
+
+
+def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
+    """One propagation round accumulating partial sampled dots.
+
+    s = (rl, cl, vals, tb) local pack; returns pack home again with
+    partial dot products in the values slot (UNSCALED by original vals).
+    """
+    u = jax.lax.axis_index(lay)
+    rl, cl, _, tb = s
+    partial = jnp.zeros_like(s[2])
+    ones = jnp.ones_like(partial)
+
+    def phase(carry, t):
+        rl, cl, partial, tb = carry
+        blk = (u - t) % L                       # layer-row of resident block
+        off = (blk * grid.c + jax.lax.axis_index(grid.fiber)) * plan.mS
+        a_slice = jax.lax.dynamic_slice(
+            T_A, (off, 0), (plan.mS, plan.rc))
+        dots = ops.sddmm(a_slice, T_B,
+                         _coo(plan, rl, cl, ones, tb)).vals
+        partial = partial + dots
+        return tuple(_shift(x, lay, L) for x in (rl, cl, partial, tb)), None
+
+    (rl, cl, partial, tb), _ = jax.lax.scan(
+        phase, (rl, cl, partial, tb), jnp.arange(L))
+    return rl, cl, partial, tb
+
+
+def _spmm_round(grid, plan, T_B, s, L, lay):
+    """Propagation round for SpMMA: emits per-phase output slabs."""
+    u = jax.lax.axis_index(lay)
+
+    def phase(carry, t):
+        rl, cl, vals, tb = carry
+        slab = ops.spmm(_coo(plan, rl, cl, vals, tb), T_B, m=plan.mS)
+        return tuple(_shift(x, lay, L) for x in (rl, cl, vals, tb)), slab
+
+    _, slabs = jax.lax.scan(phase, s, jnp.arange(L))
+    return slabs    # (L, mS, rc) — slab t covers rows of block b_t
+
+
+def _gather_cols(x, fib):
+    """All-gather column slices along the fiber: (n, r/p) -> (n, rc/p)."""
+    return jax.lax.all_gather(x, fib, axis=1, tiled=True)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sddmm_s15(grid: Grid15, plan: PlanS15, A, B):
+    """R = S * (A @ B.T); R values return to home-block layout."""
+    lay, fib, L = grid.layer, grid.fiber, grid.L
+
+    def body(s, A_loc, B_loc):
+        s = tuple(x[0, 0] for x in s)
+        T_A = _gather_cols(A_loc, fib)
+        T_B = _gather_cols(B_loc, fib)
+        rl, cl, partial, tb = _sddmm_round(grid, plan, T_A, T_B, s, L, lay)
+        vals = s[2] * partial            # scale by original samples (home)
+        return vals[None, None]
+
+    return _exec(grid, plan, body, A, B, P(lay, fib))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def spmma_s15(grid: Grid15, plan: PlanS15, B):
+    """A = S @ B; output slabs stacked by phase: (L, c, T, mS, rc/p)."""
+    lay, fib, L = grid.layer, grid.fiber, grid.L
+
+    def body(s, _A, B_loc):
+        s = tuple(x[0, 0] for x in s)
+        T_B = _gather_cols(B_loc, fib)
+        slabs = _spmm_round(grid, plan, T_B, s, L, lay)
+        return slabs[None, None]
+
+    dummy = jnp.zeros((1, grid.p), jnp.float32)
+    return _exec(grid, plan, body, dummy, B, P(lay, fib))
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("elision",))
+def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "reuse"):
+    """FusedMMA = SpMMA(SDDMM(A,B,S), B) with sparse shifting.
+
+    elision="reuse": the fiber all-gathers of the dense column slices are
+    performed ONCE and serve both rounds (paper's replication reuse).
+    elision="none": B is re-gathered between the rounds, emulating two
+    independent kernel launches (the unoptimized baseline).
+
+    Returns (slabs (L,c,T,mS,rc/p), R_vals (L,c,nb,k)).
+    """
+    lay, fib, L = grid.layer, grid.fiber, grid.L
+
+    def body(s, A_loc, B_loc):
+        s = tuple(x[0, 0] for x in s)
+        T_A = _gather_cols(A_loc, fib)
+        T_B = _gather_cols(B_loc, fib)
+        rl, cl, partial, tb = _sddmm_round(grid, plan, T_A, T_B, s, L, lay)
+        r_vals = s[2] * partial
+        if elision == "none":
+            # Unoptimized baseline: replicate B again for the SpMM, as two
+            # independent kernel launches would.  NOTE: a naive duplicate
+            # all-gather gets CSE'd by XLA — the compiler applies the
+            # paper's replication reuse automatically within one program
+            # (an observation we report in EXPERIMENTS.md).  To price the
+            # two-launch baseline honestly we re-derive the local slice
+            # from the gathered buffer and re-gather it, which XLA cannot
+            # structurally merge.
+            v_idx = jax.lax.axis_index(fib)
+            w = T_B.shape[1] // grid.c
+            B_back = jax.lax.dynamic_slice_in_dim(T_B, v_idx * w, w, axis=1)
+            T_B = jax.lax.all_gather(B_back, fib, axis=1, tiled=True)
+        slabs = _spmm_round(grid, plan, T_B, (rl, cl, r_vals, tb), L, lay)
+        return slabs[None, None], r_vals[None, None]
+
+    return _exec(grid, plan, body, A, B, (P(lay, fib), P(lay, fib)))
+
+
+def assemble_spmm_out(grid: Grid15, plan: PlanS15, slabs) -> np.ndarray:
+    """Host-side reassembly of phase-stacked SpMM slabs into (m, r)."""
+    L, c = grid.L, grid.c
+    slabs = np.asarray(slabs)
+    out = np.zeros((plan.m, plan.r), np.float32)
+    w = plan.r * c // grid.p
+    for u in range(L):
+        for v in range(c):
+            for t in range(L):
+                b = ((u - t) % L) * c + v
+                out[b * plan.mS:(b + 1) * plan.mS,
+                    u * w:(u + 1) * w] = slabs[u, v, t]
+    return out

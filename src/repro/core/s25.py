@@ -1,0 +1,272 @@
+"""2.5D sparse-replicating algorithms (paper §V-D).
+
+Grid: ("row" = G, "col" = G, "fiber" = c), p = G^2 c.  The sparse matrix is
+STATIONARY and structure-replicated along the fiber; only its VALUES move
+along the fiber (all-gather / reduce-scatter), since the coordinates never
+change between calls — the paper's "attractive property".  Both dense
+matrices propagate within each layer, split into r-chunks of width r/(Gc):
+
+  device (x, y, z) holds, at phase t,
+    S block (x, y):            (m/G, n/G)  structure replicated over z,
+                               values fiber-sharded by nonzero-block
+    A chunk A[X_x, w_{k_t,z}]: (m/G, r/(Gc))  travels along the col axis
+    B chunk B[Y_y, w_{k_t,z}]: (n/G, r/(Gc))  travels along the row axis
+  with Cannon alignment k_t = (x + y + t) mod G.
+
+SDDMM: each phase adds the partial dots over the resident r-chunk into a
+layer-local accumulator; after the round the partials are summed across the
+fiber (reduce-scatter to the home value shards) and scaled by the original
+sample values.  SpMM: output chunks travel along the col axis (taking A's
+schedule) and accumulate R @ B contributions from every column block.
+FusedMM admits NO dense-replication elision here (nothing dense is
+replicated) — the fiber traffic is values-only: AG + RS + AG, i.e. the
+paper's 3*phi*nr*(c-1)/p term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import common
+from repro.core.grid import Grid25
+from repro.kernels import ops
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlanS25:
+    rows_local: jax.Array   # (G, G, c, nb, k) — identical across z
+    cols: jax.Array         # (G, G, c, nb, k)
+    vals: jax.Array         # (G, G, c, nb/c, k) — fiber-sharded by block
+    tile_base: jax.Array    # (G, G, c, nb)
+    m: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    r: int = dataclasses.field(metadata=dict(static=True))
+    row_tile: int = dataclasses.field(metadata=dict(static=True))
+    meta: object = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def mS(self):
+        return self.meta.mS
+
+    @property
+    def nS(self):
+        return self.meta.nS
+
+    @property
+    def rc(self):
+        return self.meta.rc
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MetaS25:
+    mS: int   # m/G
+    nS: int   # n/G
+    rc: int   # r/(Gc)
+    block_meta: common.BlockMeta
+
+
+def plan_s25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
+             row_tile: int = 256, nz_block: int = 256) -> PlanS25:
+    G, c, p = grid.G, grid.c, grid.p
+    assert m % G == 0 and n % G == 0 and r % (G * c) == 0
+    mS, nS, rc = m // G, n // G, r // (G * c)
+    row_tile = common.choose_row_tile(mS, row_tile)
+
+    blocks, row_off, col_off = [], [], []
+    for x in range(G):
+        for y in range(G):
+            br, bc, bv = common.extract_block(
+                rows, cols, vals, x * mS, (x + 1) * mS, y * nS, (y + 1) * nS)
+            blocks.append((br, bc, bv))
+            row_off.append(x * mS), col_off.append(y * nS)
+    rl, cl, vl, tb = common.pack_block_list(blocks, (mS, nS), row_tile,
+                                            nz_block)
+    nb = rl.shape[1]
+    if nb % c:                       # pad so the value shards split evenly
+        pad = c - nb % c
+        rl = np.pad(rl, ((0, 0), (0, pad), (0, 0)))
+        cl = np.pad(cl, ((0, 0), (0, pad), (0, 0)))
+        vl = np.pad(vl, ((0, 0), (0, pad), (0, 0)))
+        tb = np.pad(tb, ((0, 0), (0, pad)), mode="edge")
+        nb += pad
+    k = rl.shape[-1]
+    # replicate structure across z; shard values by nonzero-block across z
+    rl_g = np.broadcast_to(rl[:, None], (G * G, c, nb, k)).reshape(
+        G, G, c, nb, k)
+    cl_g = np.broadcast_to(cl[:, None], (G * G, c, nb, k)).reshape(
+        G, G, c, nb, k)
+    tb_g = np.broadcast_to(tb[:, None], (G * G, c, nb)).reshape(G, G, c, nb)
+    vl_g = vl.reshape(G, G, c, nb // c, k)
+    sh = grid.sharding("row", "col", "fiber")
+    meta = MetaS25(mS, nS, rc, common.BlockMeta(
+        np.array(row_off).reshape(G, G), np.array(col_off).reshape(G, G),
+        (m, n)))
+    return PlanS25(
+        jax.device_put(rl_g, sh), jax.device_put(cl_g, sh),
+        jax.device_put(vl_g, sh), jax.device_put(tb_g, sh),
+        m, n, r, row_tile, meta)
+
+
+def skew_dense(grid: Grid25, X: np.ndarray, along: str) -> jax.Array:
+    """Pre-skew a dense matrix into Cannon start chunks.
+
+    along="row": X = A (rows follow the grid-row coordinate x)
+    along="col": X = B (rows follow the grid-col coordinate y)
+    Returns stacked (G, G, c, rows/G, r/(Gc)) device-placed array.
+    """
+    G, c = grid.G, grid.c
+    nrows, r = X.shape
+    blk, rc = nrows // G, r // (G * c)
+    out = np.zeros((G, G, c, blk, rc), X.dtype)
+    for x in range(G):
+        for y in range(G):
+            for z in range(c):
+                k = (x + y) % G
+                w0 = (k * c + z) * rc
+                row0 = (x if along == "row" else y) * blk
+                out[x, y, z] = X[row0:row0 + blk, w0:w0 + rc]
+    return jax.device_put(out, grid.sharding("row", "col", "fiber"))
+
+
+def unskew_out(grid: Grid25, plan: PlanS25, stacked) -> np.ndarray:
+    """Reassemble A-shaped outputs whose chunks ended in skewed-home spots."""
+    G, c = grid.G, grid.c
+    mS, rc = plan.mS, plan.rc
+    stacked = np.asarray(stacked)
+    out = np.zeros((plan.m, plan.r), np.float32)
+    for x in range(G):
+        for y in range(G):
+            for z in range(c):
+                k = (x + y) % G
+                w0 = (k * c + z) * rc
+                out[x * mS:(x + 1) * mS, w0:w0 + rc] += stacked[x, y, z]
+    return out
+
+
+def _coo(plan, rl, cl, vl, tb):
+    return common.coo_of(rl, cl, vl, tb, (plan.mS, plan.nS), plan.row_tile)
+
+
+def _shift_back(x, axis_name, size):
+    return jax.lax.ppermute(x, axis_name,
+                            [(i, (i - 1) % size) for i in range(size)])
+
+
+def _exec(grid: Grid25, plan: PlanS25, body, A_sk, B_sk, out_specs):
+    s_spec = P(grid.row, grid.col, grid.fiber)
+    fn = jax.shard_map(
+        body, mesh=grid.mesh,
+        in_specs=((s_spec,) * 4, s_spec, s_spec),
+        out_specs=out_specs, check_vma=False)
+    s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
+    return fn(s_pack, A_sk, B_sk)
+
+
+def _sddmm_round(grid, plan, s, A0, B0):
+    """Cannon round over r-chunks; returns layer-partial dots (nb, k)."""
+    G = grid.G
+    rl, cl, _, tb = s
+    partial = jnp.zeros(rl.shape, jnp.float32)
+    ones = jnp.ones(rl.shape, jnp.float32)
+
+    def phase(carry, _):
+        A_cur, B_cur, partial = carry
+        dots = ops.sddmm(A_cur, B_cur, _coo(plan, rl, cl, ones, tb)).vals
+        partial = partial + dots
+        A_cur = _shift_back(A_cur, grid.col, G)
+        B_cur = _shift_back(B_cur, grid.row, G)
+        return (A_cur, B_cur, partial), None
+
+    (A_home, B_home, partial), _ = jax.lax.scan(
+        phase, (A0, B0, partial), None, length=G)
+    return partial, A_home, B_home
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sddmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
+    """R = S * (A @ B.T); values end fiber-sharded at home (nb/c, k)."""
+    fib = grid.fiber
+
+    def body(s, A_loc, B_loc):
+        s = tuple(x[0, 0, 0] for x in s)
+        partial, _, _ = _sddmm_round(grid, plan, s,
+                                     A_loc[0, 0, 0], B_loc[0, 0, 0])
+        # sum partials over the fiber, back to home value shards
+        mine = jax.lax.psum_scatter(partial, fib, scatter_dimension=0,
+                                    tiled=True)
+        return (s[2] * mine)[None, None, None]
+
+    return _exec(grid, plan, body, A_sk, B_sk,
+                 P(grid.row, grid.col, grid.fiber))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def spmma_s25(grid: Grid25, plan: PlanS25, B_sk):
+    """A = S @ B; output chunks end in skewed-home layout."""
+    G, fib = grid.G, grid.fiber
+
+    def body(s, _A, B_loc):
+        rl, cl, vshard, tb = tuple(x[0, 0, 0] for x in s)
+        vals = jax.lax.all_gather(vshard, fib, tiled=True)   # (nb, k)
+        out0 = jnp.zeros((plan.mS, plan.rc), jnp.float32)
+
+        def phase(carry, _):
+            B_cur, out_cur = carry
+            out_cur = out_cur + ops.spmm(_coo(plan, rl, cl, vals, tb),
+                                         B_cur, m=plan.mS)
+            B_cur = _shift_back(B_cur, grid.row, G)
+            out_cur = _shift_back(out_cur, grid.col, G)
+            return (B_cur, out_cur), None
+
+        (_, out), _ = jax.lax.scan(phase, (B_loc[0, 0, 0], out0), None,
+                                   length=G)
+        return out[None, None, None]
+
+    dummy = jnp.zeros((grid.G, grid.G, grid.c, 1, 1), jnp.float32)
+    return _exec(grid, plan, body, dummy, B_sk,
+                 P(grid.row, grid.col, grid.fiber))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
+    """FusedMMA, no elision possible (paper §V-D).
+
+    Fiber traffic is values-only: AG(vals) happens implicitly by computing
+    partials, RS reduces them home, AG re-broadcasts the final values for
+    the SpMM round — the 3*phi*nr*(c-1)/p term of Table III.
+    Returns (out chunks (G,G,c,mS,rc) skewed-home, R values fiber-sharded).
+    """
+    G, fib = grid.G, grid.fiber
+
+    def body(s, A_loc, B_loc):
+        s = tuple(x[0, 0, 0] for x in s)
+        rl, cl, vshard, tb = s
+        partial, A_home, B_home = _sddmm_round(grid, plan, s,
+                                               A_loc[0, 0, 0],
+                                               B_loc[0, 0, 0])
+        mine = jax.lax.psum_scatter(partial, fib, scatter_dimension=0,
+                                    tiled=True)                  # RS
+        r_mine = vshard * mine
+        r_vals = jax.lax.all_gather(r_mine, fib, tiled=True)     # AG
+        out0 = jnp.zeros((plan.mS, plan.rc), jnp.float32)
+
+        def phase2(carry, _):
+            B_cur, out_cur = carry
+            out_cur = out_cur + ops.spmm(_coo(plan, rl, cl, r_vals, tb),
+                                         B_cur, m=plan.mS)
+            B_cur = _shift_back(B_cur, grid.row, G)
+            out_cur = _shift_back(out_cur, grid.col, G)
+            return (B_cur, out_cur), None
+
+        (_, out), _ = jax.lax.scan(phase2, (B_home, out0), None, length=G)
+        return out[None, None, None], r_mine[None, None, None]
+
+    return _exec(grid, plan, body, A_sk, B_sk,
+                 (P(grid.row, grid.col, grid.fiber),
+                  P(grid.row, grid.col, grid.fiber)))

@@ -1,0 +1,248 @@
+"""Static-shape sparse formats for TPU-friendly SDDMM / SpMM / FusedMM.
+
+XLA requires static shapes, so every distributed block of the sparse matrix
+``S`` is packed to a fixed nonzero capacity.  Padding entries carry
+``val = 0`` and point at row/col 0, so:
+
+  * SpMM contributions from padding vanish (0 * B[0] adds nothing),
+  * SDDMM outputs at padding are 0 (sample value multiplies the dot).
+
+Two layouts:
+
+``PaddedCOO``      -- flat (rows, cols, vals) triple, 3 words per nonzero,
+                      exactly the paper's COO cyclic-shift payload.
+``RowTiledCOO``    -- PaddedCOO additionally sorted by row and chunked into
+                      nonzero blocks of ``nz_block`` entries whose rows all
+                      fall inside one ``row_tile``-row window.  This is the
+                      TPU adaptation: it lets the local SpMM kernel turn
+                      scatter-add into a one-hot matmul on the MXU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedCOO:
+    """A fixed-capacity COO block of an (m x n) sparse matrix."""
+
+    rows: jax.Array  # int32[cap]
+    cols: jax.Array  # int32[cap]
+    vals: jax.Array  # float[cap]  (0.0 at padding)
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return self.rows.shape[0]
+
+    def to_dense(self) -> jax.Array:
+        out = jnp.zeros(self.shape, self.vals.dtype)
+        return out.at[self.rows, self.cols].add(self.vals)
+
+    def with_vals(self, vals: jax.Array) -> "PaddedCOO":
+        return PaddedCOO(self.rows, self.cols, vals, self.shape)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RowTiledCOO:
+    """Row-sorted, tile-aligned COO for the one-hot-matmul local kernels.
+
+    Nonzeros are sorted by row and split into blocks of ``nz_block``
+    entries.  Block ``b`` only touches rows in
+    ``[tile_base[b], tile_base[b] + row_tile)``; ``rows_local`` stores the
+    offset within that window.  Padding entries have ``vals == 0`` and
+    ``rows_local == 0``.
+    """
+
+    rows_local: jax.Array  # int32[nblocks, nz_block] in [0, row_tile)
+    cols: jax.Array        # int32[nblocks, nz_block]
+    vals: jax.Array        # float[nblocks, nz_block]
+    tile_base: jax.Array   # int32[nblocks] multiples of row_tile
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    row_tile: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nblocks(self) -> int:
+        return self.rows_local.shape[0]
+
+    @property
+    def nz_block(self) -> int:
+        return self.rows_local.shape[1]
+
+    def rows_global(self) -> jax.Array:
+        return self.rows_local + self.tile_base[:, None]
+
+    def to_dense(self) -> jax.Array:
+        out = jnp.zeros(self.shape, self.vals.dtype)
+        return out.at[self.rows_global().reshape(-1),
+                      self.cols.reshape(-1)].add(self.vals.reshape(-1))
+
+    def with_vals(self, vals: jax.Array) -> "RowTiledCOO":
+        return RowTiledCOO(self.rows_local, self.cols, vals,
+                           self.tile_base, self.shape, self.row_tile)
+
+    def to_padded_coo(self) -> PaddedCOO:
+        return PaddedCOO(self.rows_global().reshape(-1),
+                         self.cols.reshape(-1),
+                         self.vals.reshape(-1), self.shape)
+
+
+# ---------------------------------------------------------------------------
+# Packing (numpy, amortized preprocessing -- mirrors the paper's reorder step)
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def pack_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+             shape: Tuple[int, int], capacity: int | None = None,
+             pad_multiple: int = 8) -> PaddedCOO:
+    """Pack raw COO triplets into a PaddedCOO with static capacity."""
+    nnz = int(rows.shape[0])
+    cap = capacity if capacity is not None else _round_up(max(nnz, 1), pad_multiple)
+    if nnz > cap:
+        raise ValueError(f"nnz={nnz} exceeds capacity={cap}")
+    r = np.zeros(cap, np.int32)
+    c = np.zeros(cap, np.int32)
+    v = np.zeros(cap, np.float32)
+    r[:nnz], c[:nnz], v[:nnz] = rows, cols, vals
+    return PaddedCOO(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), shape)
+
+
+def pack_row_tiled(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                   shape: Tuple[int, int], *, row_tile: int = 256,
+                   nz_block: int = 256,
+                   nblocks: int | None = None) -> RowTiledCOO:
+    """Sort by row, then emit nz blocks confined to row_tile windows.
+
+    A block is flushed (padded) whenever it fills up or the next nonzero
+    falls outside the current row window.  Window boundaries are aligned to
+    multiples of ``row_tile`` so ``tile_base`` can double as a BlockSpec
+    index.
+    """
+    # clamp to the largest divisor of the row count (kernel window blocking
+    # requires row_tile | m)
+    row_tile = min(row_tile, shape[0])
+    while shape[0] % row_tile:
+        row_tile -= 1
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    nnz = rows.shape[0]
+
+    blk_rows, blk_cols, blk_vals, bases = [], [], [], []
+    i = 0
+    while i < nnz:
+        base = (int(rows[i]) // row_tile) * row_tile
+        # all nonzeros in [base, base+row_tile) starting at i, up to nz_block
+        hi = np.searchsorted(rows, base + row_tile, side="left")
+        j = min(i + nz_block, int(hi))
+        n = j - i
+        lr = np.zeros(nz_block, np.int32)
+        lc = np.zeros(nz_block, np.int32)
+        lv = np.zeros(nz_block, np.float32)
+        lr[:n] = rows[i:j] - base
+        lc[:n] = cols[i:j]
+        lv[:n] = vals[i:j]
+        blk_rows.append(lr); blk_cols.append(lc); blk_vals.append(lv)
+        bases.append(base)
+        i = j
+
+    nb = len(bases)
+    target = nblocks if nblocks is not None else max(nb, 1)
+    if nb > target:
+        raise ValueError(f"needs {nb} blocks > target {target}")
+    # Padding blocks inherit the last real base so the sequence of output
+    # tiles stays non-decreasing (Pallas requires consecutive revisits).
+    pad_base = bases[-1] if bases else 0
+    for _ in range(target - nb):
+        blk_rows.append(np.zeros(nz_block, np.int32))
+        blk_cols.append(np.zeros(nz_block, np.int32))
+        blk_vals.append(np.zeros(nz_block, np.float32))
+        bases.append(pad_base)
+
+    return RowTiledCOO(
+        jnp.asarray(np.stack(blk_rows)), jnp.asarray(np.stack(blk_cols)),
+        jnp.asarray(np.stack(blk_vals)), jnp.asarray(np.array(bases, np.int32)),
+        shape, row_tile)
+
+
+# ---------------------------------------------------------------------------
+# Random sparse matrix generators (paper's workloads)
+# ---------------------------------------------------------------------------
+
+def erdos_renyi(m: int, n: int, nnz_per_row: int, seed: int = 0,
+                dtype=np.float32):
+    """Erdos-Renyi random sparse matrix, ~nnz_per_row nonzeros per row.
+
+    Matches the paper's weak-scaling generator (CombBLAS ER): each row draws
+    ``nnz_per_row`` columns uniformly (with possible duplicates removed).
+    Returns (rows, cols, vals) numpy COO, deduplicated & sorted.
+    """
+    rng = np.random.default_rng(seed)
+    rows = np.repeat(np.arange(m, dtype=np.int64), nnz_per_row)
+    cols = rng.integers(0, n, size=rows.shape[0], dtype=np.int64)
+    key = rows * n + cols
+    key = np.unique(key)
+    rows = (key // n).astype(np.int32)
+    cols = (key % n).astype(np.int32)
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    return rows, cols, vals
+
+
+def rmat(scale: int, edge_factor: int = 16, seed: int = 0,
+         a: float = 0.57, b: float = 0.19, c: float = 0.19,
+         dtype=np.float32):
+    """RMAT power-law generator — surrogate for SuiteSparse web/social graphs."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    ne = n * edge_factor
+    rows = np.zeros(ne, np.int64)
+    cols = np.zeros(ne, np.int64)
+    for lvl in range(scale):
+        r = rng.random(ne)
+        # quadrant probabilities a, b, c, d
+        right = r >= a + b  # col high bit
+        down = ((r >= a) & (r < a + b)) | (r >= a + b + c)
+        rows |= down.astype(np.int64) << lvl
+        cols |= right.astype(np.int64) << lvl
+    key = np.unique(rows * n + cols)
+    rows = (key // n).astype(np.int32)
+    cols = (key % n).astype(np.int32)
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    return rows, cols, vals
+
+
+def random_permute(rows: np.ndarray, cols: np.ndarray, m: int, n: int,
+                   seed: int = 0):
+    """Random row+col permutation for load balance (paper §VI)."""
+    rng = np.random.default_rng(seed)
+    pr = rng.permutation(m).astype(np.int32)
+    pc = rng.permutation(n).astype(np.int32)
+    return pr[rows], pc[cols]
+
+
+def block_sparse_mask(seq: int, block: int, window_blocks: int,
+                      global_blocks: int = 1):
+    """Block-sparse attention mask (sliding window + global) as COO blocks.
+
+    Returns (rows, cols) of *block* indices for a lower-triangular
+    sliding-window + global-token pattern over seq/block block rows.
+    Used by the block-sparse FusedMM attention path.
+    """
+    nb = seq // block
+    rows, cols = [], []
+    for i in range(nb):
+        lo = max(0, i - window_blocks + 1)
+        for j in range(lo, i + 1):
+            rows.append(i); cols.append(j)
+        for j in range(min(global_blocks, lo)):
+            rows.append(i); cols.append(j)
+    return np.asarray(rows, np.int32), np.asarray(cols, np.int32)

@@ -1,0 +1,84 @@
+"""Block-sparse attention as SDDMM -> row-softmax -> SpMM (beyond-paper).
+
+The paper's GAT workload already shows attention IS the FusedMM pattern;
+this module closes the loop for LM attention: a block-sparse causal mask
+(sliding window + global tokens) makes long-context attention a sparse
+kernel problem, so the paper's distributed algorithms (and their
+communication analysis in phi = nnz/(S*hd)) apply directly to the
+attention layer.  Used by examples/sparse_attention_lm.py and available
+as an opt-in attention for long-context experiments.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse
+from repro.kernels import ops
+
+
+def build_causal_block_mask(seq: int, block: int, window_blocks: int,
+                            global_blocks: int = 1, row_tile: int = 128,
+                            nz_block: int = 256) -> sparse.RowTiledCOO:
+    """Element-level RowTiledCOO for a causal sliding-window+global mask."""
+    brows, bcols = sparse.block_sparse_mask(seq, block, window_blocks,
+                                            global_blocks)
+    rows_l, cols_l = [], []
+    for br, bc in zip(brows, bcols):
+        r0, c0 = br * block, bc * block
+        r = np.repeat(np.arange(block), block) + r0
+        c = np.tile(np.arange(block), block) + c0
+        keep = r >= c              # causal inside diagonal blocks
+        rows_l.append(r[keep].astype(np.int32))
+        cols_l.append(c[keep].astype(np.int32))
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    key = np.unique(rows.astype(np.int64) * seq + cols)
+    rows = (key // seq).astype(np.int32)
+    cols = (key % seq).astype(np.int32)
+    vals = np.ones(len(rows), np.float32)
+    return sparse.pack_row_tiled(rows, cols, vals, (seq, seq),
+                                 row_tile=row_tile, nz_block=nz_block)
+
+
+def row_softmax(S: sparse.RowTiledCOO) -> sparse.RowTiledCOO:
+    rows = S.rows_global().reshape(-1)
+    vals = S.vals.reshape(-1)
+    mask = vals != 0
+    neg = jnp.full((S.shape[0],), -1e30, jnp.float32)
+    rmax = neg.at[rows].max(jnp.where(mask, vals, -1e30))
+    ex = jnp.where(mask, jnp.exp(vals - rmax[rows]), 0.0)
+    rsum = jnp.zeros((S.shape[0],), jnp.float32).at[rows].add(ex)
+    out = ex / jnp.maximum(rsum[rows], 1e-30)
+    return S.with_vals(out.reshape(S.vals.shape))
+
+
+def sparse_attention_head(q, k, v, mask: sparse.RowTiledCOO):
+    """One attention head over a block-sparse mask.
+
+    q (S, hd), k (S, hd), v (S, hd) -> (S, hd).
+    scores = SDDMM(q, k, mask)/sqrt(hd); probs = row_softmax;
+    out = SpMM(probs, v).
+    """
+    hd = q.shape[-1]
+    scores = ops.sddmm(q * (hd ** -0.5), k, mask)
+    # mask vals are 1.0 -> scores are the raw sampled dots
+    probs = row_softmax(scores)
+    return ops.spmm(probs, v, m=q.shape[0])
+
+
+def dense_reference(q, k, v, mask_dense):
+    hd = q.shape[-1]
+    s = (q @ k.T) * (hd ** -0.5)
+    s = jnp.where(mask_dense != 0, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.nan_to_num(p)
+    return p @ v
+
+
+def sparsity_stats(mask: sparse.RowTiledCOO, seq: int, hd: int):
+    nnz = int((np.asarray(mask.vals) != 0).sum())
+    return dict(nnz=nnz, dense=seq * seq,
+                fraction=nnz / (seq * seq),
+                phi=nnz / (seq * hd))

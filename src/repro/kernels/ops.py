@@ -1,0 +1,66 @@
+"""Public jit'd wrappers over the Pallas kernels with ref fallback.
+
+``backend="pallas"`` runs the Pallas kernels (interpret mode on CPU, native
+on TPU); ``backend="ref"`` uses the pure-jnp oracles.  The distributed
+algorithms in ``repro.core.algorithms`` call these for every local kernel
+invocation, so flipping the backend flips the whole system.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.sparse import RowTiledCOO
+from repro.kernels import ref as _ref
+from repro.kernels.sddmm import sddmm_pallas
+from repro.kernels.spmm import spmm_pallas
+from repro.kernels.fusedmm import fusedmm_pallas
+
+_DEFAULT_BACKEND = "pallas"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def set_default_backend(backend: str) -> None:
+    global _DEFAULT_BACKEND
+    assert backend in ("pallas", "ref")
+    _DEFAULT_BACKEND = backend
+
+
+def sddmm(A: jax.Array, B: jax.Array, S: RowTiledCOO,
+          backend: str | None = None) -> RowTiledCOO:
+    """R = S * (A @ B.T) sampled at nnz(S); returns S with new values."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "ref":
+        return _ref.sddmm(A, B, S)
+    vals = sddmm_pallas(S.tile_base // S.row_tile, S.rows_local, S.cols,
+                        S.vals, A, B, row_tile=S.row_tile,
+                        interpret=_interpret())
+    return S.with_vals(vals)
+
+
+def spmm(S: RowTiledCOO, B: jax.Array, m: int | None = None,
+         backend: str | None = None) -> jax.Array:
+    """out = S @ B (shape (m, r))."""
+    backend = backend or _DEFAULT_BACKEND
+    m = m if m is not None else S.shape[0]
+    if backend == "ref":
+        return _ref.spmm(S, B, m)
+    return spmm_pallas(S.tile_base // S.row_tile, S.rows_local, S.cols,
+                       S.vals, B, row_tile=S.row_tile, m=m,
+                       interpret=_interpret())
+
+
+def fusedmm(A: jax.Array, B: jax.Array, S: RowTiledCOO,
+            m: int | None = None, backend: str | None = None):
+    """FusedMMA: out = SDDMM(A,B,S) @ B; returns (out, R)."""
+    backend = backend or _DEFAULT_BACKEND
+    m = m if m is not None else S.shape[0]
+    if backend == "ref":
+        return _ref.fusedmm(A, B, S, m)
+    out, r_vals = fusedmm_pallas(S.tile_base // S.row_tile, S.rows_local,
+                                 S.cols, S.vals, A, B,
+                                 row_tile=S.row_tile, m=m,
+                                 interpret=_interpret())
+    return out, S.with_vals(r_vals)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the local SDDMM / SpMM / FusedMM kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(assert_allclose over shape/dtype sweeps) and the portable fallback used
+on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse import PaddedCOO, RowTiledCOO
+
+
+# --- flat-COO oracles -------------------------------------------------------
+
+def sddmm_coo(A: jax.Array, B: jax.Array, rows: jax.Array, cols: jax.Array,
+              vals: jax.Array) -> jax.Array:
+    """out[k] = vals[k] * <A[rows[k]], B[cols[k]]> (f32 accumulation)."""
+    a = A[rows].astype(jnp.float32)
+    b = B[cols].astype(jnp.float32)
+    return (vals.astype(jnp.float32) * jnp.sum(a * b, axis=-1)).astype(vals.dtype)
+
+
+def spmm_coo(rows: jax.Array, cols: jax.Array, vals: jax.Array,
+             B: jax.Array, m: int) -> jax.Array:
+    """out[m, r] with out[rows[k]] += vals[k] * B[cols[k]]."""
+    contrib = vals[:, None].astype(jnp.float32) * B[cols].astype(jnp.float32)
+    out = jnp.zeros((m, B.shape[-1]), jnp.float32)
+    return out.at[rows].add(contrib).astype(B.dtype)
+
+
+def fusedmm_coo(A: jax.Array, B: jax.Array, rows: jax.Array,
+                cols: jax.Array, vals: jax.Array, m: int):
+    """FusedMMA: (SpMMA(SDDMM(A,B,S), B), sddmm_vals)."""
+    r_vals = sddmm_coo(A, B, rows, cols, vals)
+    out = spmm_coo(rows, cols, r_vals, B, m)
+    return out, r_vals
+
+
+# --- RowTiledCOO oracles ----------------------------------------------------
+
+def _flat(S: RowTiledCOO):
+    return (S.rows_global().reshape(-1), S.cols.reshape(-1),
+            S.vals.reshape(-1))
+
+
+def sddmm(A: jax.Array, B: jax.Array, S: RowTiledCOO) -> RowTiledCOO:
+    rows, cols, vals = _flat(S)
+    out = sddmm_coo(A, B, rows, cols, vals)
+    return S.with_vals(out.reshape(S.vals.shape))
+
+
+def spmm(S: RowTiledCOO, B: jax.Array, m: int | None = None) -> jax.Array:
+    rows, cols, vals = _flat(S)
+    return spmm_coo(rows, cols, vals, B, m if m is not None else S.shape[0])
+
+
+def fusedmm(A: jax.Array, B: jax.Array, S: RowTiledCOO,
+            m: int | None = None):
+    rows, cols, vals = _flat(S)
+    out, r_vals = fusedmm_coo(A, B, rows, cols, vals,
+                              m if m is not None else S.shape[0])
+    return out, S.with_vals(r_vals.reshape(S.vals.shape))
+
+
+# --- dense whole-matrix oracles (for end-to-end checks) ---------------------
+
+def sddmm_dense(A, B, S_dense):
+    return S_dense * (A @ B.T)
+
+
+def spmm_dense(S_dense, B):
+    return S_dense @ B
+
+
+def fusedmm_dense(A, B, S_dense):
+    R = sddmm_dense(A, B, S_dense)
+    return R @ B, R

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel for blocked SDDMM over RowTiledCOO.
+
+TPU adaptation (see DESIGN.md): nonzeros are pre-sorted by row and chunked
+into blocks of ``nz_block`` entries confined to a ``row_tile``-row window of
+A.  Per grid step we bring one (row_tile x r) window of A plus the whole
+local B tile into VMEM, gather the K participating rows of each, and emit
+K sampled dot products.  The window index comes from a scalar-prefetched
+``tile_base`` array (PrefetchScalarGridSpec), so block placement is
+data-dependent but known before the kernel runs — the Pallas analogue of the
+paper's amortized preprocessing of S.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sddmm_kernel(base_ref, rows_ref, cols_ref, vals_ref, a_ref, b_ref,
+                  out_ref):
+    rl = rows_ref[0]                     # int32[K], window-local row ids
+    cl = cols_ref[0]                     # int32[K]
+    v = vals_ref[0].astype(jnp.float32)  # f32[K]
+    a = a_ref[...].astype(jnp.float32)   # (row_tile, r) VMEM window of A
+    b = b_ref[...].astype(jnp.float32)   # (nB, r) local B tile
+    a_rows = jnp.take(a, rl, axis=0)     # (K, r) gather within the window
+    b_rows = jnp.take(b, cl, axis=0)     # (K, r)
+    dots = jnp.sum(a_rows * b_rows, axis=-1)  # f32[K]
+    out_ref[0] = (v * dots).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("row_tile", "interpret"))
+def sddmm_pallas(tile_base_blk: jax.Array, rows_local: jax.Array,
+                 cols: jax.Array, vals: jax.Array, A: jax.Array,
+                 B: jax.Array, *, row_tile: int,
+                 interpret: bool = False) -> jax.Array:
+    """Returns new sampled values, shape (nblocks, nz_block)."""
+    nb, k = rows_local.shape
+    r = A.shape[-1]
+    n_b = B.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, base: (i, 0)),        # rows_local
+            pl.BlockSpec((1, k), lambda i, base: (i, 0)),        # cols
+            pl.BlockSpec((1, k), lambda i, base: (i, 0)),        # vals
+            pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),  # A win
+            pl.BlockSpec((n_b, r), lambda i, base: (0, 0)),      # B (whole)
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i, base: (i, 0)),
+    )
+    return pl.pallas_call(
+        _sddmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, k), vals.dtype),
+        interpret=interpret,
+    )(tile_base_blk, rows_local, cols, vals, A, B)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel for blocked SpMM (S @ B) over RowTiledCOO.
+
+The scatter-add of CPU/GPU SpMM is restructured as a one-hot matmul so it
+runs on the MXU: for each nonzero block we gather the K participating rows
+of B, scale by the sample values, and accumulate
+
+    out_window += onehot(rows_local)  @  (vals[:, None] * B[cols])
+      (row_tile x K)                     (K x r)
+
+Row-sorted packing guarantees output windows are revisited consecutively,
+so the accumulator stays resident in VMEM across grid steps; the output is
+input/output-aliased to a zeros buffer so untouched windows are zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(base_ref, rows_ref, cols_ref, vals_ref, b_ref, acc_ref,
+                 out_ref, *, row_tile):
+    rl = rows_ref[0]
+    cl = cols_ref[0]
+    v = vals_ref[0].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    b_rows = jnp.take(b, cl, axis=0)                     # (K, r)
+    scaled = v[:, None] * b_rows                         # (K, r)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (row_tile, rl.shape[0]), 0)
+    onehot = (iota == rl[None, :]).astype(jnp.float32)   # (row_tile, K)
+    out_ref[...] += jax.lax.dot(
+        onehot, scaled, preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("row_tile", "m", "interpret"))
+def spmm_pallas(tile_base_blk: jax.Array, rows_local: jax.Array,
+                cols: jax.Array, vals: jax.Array, B: jax.Array, *,
+                row_tile: int, m: int, interpret: bool = False) -> jax.Array:
+    """Returns out (m, r) = S @ B accumulated in f32, cast to B.dtype."""
+    nb, k = rows_local.shape
+    r = B.shape[-1]
+    n_b = B.shape[0]
+    assert m % row_tile == 0, (m, row_tile)
+    zeros = jnp.zeros((m, r), jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
+            pl.BlockSpec((n_b, r), lambda i, base: (0, 0)),          # B
+            pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),  # acc
+        ],
+        out_specs=pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, row_tile=row_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, r), jnp.float32),
+        input_output_aliases={5: 0},   # acc zeros -> out (index incl. prefetch)
+        interpret=interpret,
+    )(tile_base_blk, rows_local, cols, vals, B, zeros)
+    return out.astype(B.dtype)

@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " \
+    + os.environ.get("XLA_FLAGS", "")
+
+"""Dry-run the PAPER'S kernels on the production mesh: distributed FusedMM
+at p=256 (16x16 re-viewed as a (p/c) x c sparse grid).
+
+  PYTHONPATH=src python -m repro.launch.dryrun_fusedmm \
+      [--c 16] [--elision reuse|none|fused] [--algo d15|s15] \
+      [--m 1048576] [--r 256] [--nnz-row 32] [--out out.json]
+
+This is the roofline cell most representative of the paper's contribution;
+the perf loop (EXPERIMENTS.md §Perf) iterates c / elision / block shapes.
+"""
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel, d15, s15, sparse
+from repro.core.grid import Grid15
+from repro.launch.mesh import make_production_mesh
+from jax.sharding import Mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--c", type=int, default=16)
+    ap.add_argument("--elision", default="reuse",
+                    choices=["none", "reuse", "fused"])
+    ap.add_argument("--algo", default="d15", choices=["d15", "s15"])
+    ap.add_argument("--m", type=int, default=1 << 20)
+    ap.add_argument("--r", type=int, default=256)
+    ap.add_argument("--nnz-row", type=int, default=32)
+    ap.add_argument("--row-tile", type=int, default=256)
+    ap.add_argument("--nz-block", type=int, default=256)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh()          # 16 x 16 = 256 chips
+    devs = np.asarray(mesh.devices).reshape(-1)
+    p = devs.size
+    grid = Grid15(Mesh(devs.reshape(p // args.c, args.c),
+                       ("layer", "fiber")))
+    m = n = args.m
+    r = args.r
+    rows, cols, vals = sparse.erdos_renyi(m, n, args.nnz_row, seed=0)
+    nnz = len(vals)
+    rng = np.random.default_rng(1)
+    A = jax.device_put(jnp.zeros((m, r), jnp.float32),
+                       grid.sharding(("layer", "fiber"))
+                       if args.algo == "d15"
+                       else grid.sharding(None, ("layer", "fiber")))
+    B = jax.device_put(jnp.zeros((n, r), jnp.float32), A.sharding)
+
+    if args.algo == "d15":
+        plan = d15.plan_d15(grid, rows, cols, vals, m, n, r,
+                            transpose=(args.elision == "reuse"),
+                            row_tile=args.row_tile, nz_block=args.nz_block)
+        lowered = d15.fusedmm_d15.lower(grid, plan, A, B,
+                                        elision=args.elision)
+    else:
+        plan = s15.plan_s15(grid, rows, cols, vals, m, n, r,
+                            row_tile=args.row_tile, nz_block=args.nz_block)
+        lowered = s15.fusedmm_s15.lower(grid, plan, A, B,
+                                        elision=args.elision
+                                        if args.elision != "fused"
+                                        else "reuse")
+
+    from repro.launch.dryrun import analyse
+    cm_name = {("d15", "none"): "d15_no_elision",
+               ("d15", "reuse"): "d15_replication_reuse",
+               ("d15", "fused"): "d15_local_fusion",
+               ("s15", "reuse"): "s15_replication_reuse",
+               ("s15", "none"): "s15_replication_reuse"}[
+                   (args.algo, args.elision)]
+    paper_words = costmodel.words_fusedmm(cm_name, p=p, c=args.c, n=n,
+                                          r=r, nnz=nnz).words
+    meta = dict(arch=f"paper-fusedmm-{args.algo}", shape=args.elision,
+                kind="serve", multi_pod=False, mesh=str(mesh.shape),
+                microbatch=0, params=nnz, active_params=nnz,
+                c=args.c, phi=nnz / (n * r), paper_words=paper_words)
+    res = analyse(lowered, meta)
+    js = json.dumps(res, indent=1)
+    print(js)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

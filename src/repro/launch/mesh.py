@@ -1,0 +1,35 @@
+"""Mesh construction.  Functions, never module-level constants — importing
+this module must not touch jax device state."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: one v5e pod = 16x16 = 256 chips
+    ("data", "model"); multi-pod = 2 pods = 512 chips with a leading
+    "pod" axis for hierarchical data parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Development mesh over whatever devices exist (tests, examples)."""
+    devs = np.array(jax.devices())
+    n = devs.size
+    data = data if data is not None else n // model
+    assert data * model <= n, (data, model, n)
+    return Mesh(devs[:data * model].reshape(data, model), ("data", "model"))
+
+
+def sparse_grid_from_production(mesh, c: int):
+    """Reinterpret the production mesh for the paper's sparse kernels:
+    "data" x "model" devices re-viewed as a (p/c, c) (layer, fiber) grid."""
+    from repro.core.grid import Grid15
+    devs = np.asarray(mesh.devices).reshape(-1)
+    p = devs.size
+    assert p % c == 0
+    return Grid15(Mesh(devs.reshape(p // c, c), ("layer", "fiber")))

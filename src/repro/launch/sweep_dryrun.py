@@ -1,0 +1,100 @@
+"""Run the full dry-run sweep: every runnable (arch x shape x mesh) cell.
+
+Each cell runs in its own subprocess (compile-memory isolation; a single
+OOM or crash marks that cell failed without killing the sweep).  Results
+land in results/dryrun/<arch>__<shape>__<mesh>.json plus a summary JSONL.
+
+  PYTHONPATH=src python -m repro.launch.sweep_dryrun [--only-single-pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "jamba-v0.1-52b", "stablelm-1.6b", "llama3.2-1b", "qwen3-1.7b",
+    "qwen3-4b", "qwen2-vl-72b", "mamba2-1.3b", "deepseek-v2-lite-16b",
+    "phi3.5-moe-42b-a6.6b", "hubert-xlarge",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# gradient-accumulation depth per arch (train cells): larger models need
+# smaller micro-tokens to fit activation working sets in 16 GB HBM
+MICROBATCH = {
+    "jamba-v0.1-52b": 16, "qwen2-vl-72b": 16, "phi3.5-moe-42b-a6.6b": 8,
+    "deepseek-v2-lite-16b": 8, "qwen3-4b": 8,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--only-single-pod", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1500)
+    ap.add_argument("--archs", default=None, help="comma-separated subset")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.outdir, exist_ok=True)
+    summary_path = os.path.join(args.outdir, "summary.jsonl")
+    archs = args.archs.split(",") if args.archs else ARCHS
+    meshes = [False] if args.only_single_pod else [False, True]
+
+    done = set()
+    if os.path.exists(summary_path):
+        with open(summary_path) as f:
+            for line in f:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["multi_pod"]))
+
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in SHAPES:
+                key = (arch, shape, multi_pod)
+                if key in done:
+                    continue
+                tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+                out = os.path.join(args.outdir, tag + ".json")
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--out", out,
+                       "--microbatch", str(MICROBATCH.get(arch, 4))]
+                if multi_pod:
+                    cmd.append("--multi-pod")
+                t0 = time.time()
+                try:
+                    proc = subprocess.run(cmd, capture_output=True,
+                                          text=True, timeout=args.timeout)
+                    ok = proc.returncode == 0
+                    err = proc.stderr[-2000:] if not ok else ""
+                except subprocess.TimeoutExpired:
+                    ok, err = False, "timeout"
+                dt = time.time() - t0
+                rec = dict(arch=arch, shape=shape, multi_pod=multi_pod,
+                           ok=ok, seconds=round(dt, 1), error=err)
+                if ok and os.path.exists(out):
+                    try:
+                        with open(out) as f:
+                            r = json.load(f)
+                        if "skipped" in r:
+                            rec["skipped"] = r["skipped"]
+                        else:
+                            rec["temp_gb"] = round(
+                                r["memory"]["temp_size_in_bytes"] / 1e9, 2)
+                            rec["flops"] = r["cost"].get("flops")
+                            rec["wire_gb"] = round(
+                                r["collectives"]["total_wire_bytes"] / 1e9,
+                                3)
+                    except Exception as e:     # pragma: no cover
+                        rec["parse_error"] = str(e)
+                with open(summary_path, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                print(json.dumps(rec), flush=True)
+    print("SWEEP COMPLETE")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

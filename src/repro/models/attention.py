@@ -1,0 +1,263 @@
+"""Attention variants: GQA (optional qk_norm), MLA, flash-style chunking.
+
+Training/prefill attention is computed with an online-softmax scan over KV
+blocks (pure-JAX flash attention) so the compiled memory footprint is
+O(S * block) instead of O(S^2) — this is what lets the 32k prefill cells
+fit in the dry-run memory analysis.  Decode attends one query against a
+static KV cache with a fill-mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mrope, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def _positions(cfg, batch, B, S, offset=None):
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :] + (
+            0 if offset is None else offset)
+        pos = jnp.broadcast_to(pos, (B, S))
+        if cfg.pos_dims == 3:
+            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def _rope(cfg, x, pos):
+    if cfg.rope == "none":
+        return x
+    if cfg.rope == "mrope":
+        half = x.shape[-1] // 2
+        t = half - 2 * (half // 3)
+        return apply_mrope(x, pos, cfg.rope_theta,
+                           sections=(t, half // 3, half // 3))
+    return apply_rope(x, pos, cfg.rope_theta)
+
+
+def plain_decode_attention(q, k, v, kv_len):
+    """Single-query attention without the KV-block scan.
+
+    Used on the decode path: with a sequence-sharded KV cache the softmax
+    normalizer and the value contraction become psum-style collectives
+    under GSPMD — the flash-decode pattern, synthesized by the partitioner
+    instead of a hand-rolled shard_map (the baseline we then hillclimb).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KvH = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    rep = H // KvH
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(B, Sq, KvH, rep, hd)
+    s = jnp.einsum("bqgrh,bkgh->bqgrk", qf, k.astype(jnp.float32))
+    mask = jnp.arange(Sk)[None, :] < kv_len[:, None]          # (B, Sk)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqgrk,bkgh->bqgrh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, block: int, q_offset=0,
+                    kv_len=None):
+    """Online-softmax attention, scanning KV in blocks.
+
+    q: (B, Sq, H, hd)   k, v: (B, Sk, KvH, hd) with H % KvH == 0.
+    kv_len: optional (B,) valid-length mask for cached decode.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KvH = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]          # may differ from hd (MLA rope concat)
+    rep = H // KvH
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KvH, rep, hd)
+    nblk = max(Sk // block, 1)
+    block = Sk // nblk
+    kb = k.astype(jnp.float32).reshape(B, nblk, block, KvH, hd)
+    vb = v.astype(jnp.float32).reshape(B, nblk, block, KvH, hd_v)
+    q_idx = jnp.arange(Sq) + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kt, vt, blk_i = inp
+        s = jnp.einsum("bqgrh,bkgh->bqgrk", qf, kt)       # (B,Sq,KvH,rep,blk)
+        k_idx = blk_i * block + jnp.arange(block)
+        mask = jnp.ones((Sq, block), bool)
+        if causal:
+            mask = q_idx[:, None] >= k_idx[None, :]
+        if kv_len is not None:
+            mask = mask[None] & (k_idx[None, None, :] < kv_len[:, None, None])
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        else:
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bqgrk,bkgh->bqgrh", p, vt)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Sq, KvH, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KvH, rep), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KvH, rep, hd_v), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    # flash-style backward: recompute block scores instead of saving the
+    # (B,Sq,...,block) probability tensors per step — O(S*block) residuals
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (kb_t, vb_t, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype=jnp.float32):
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H * hd), dtype) * 0.02,
+        "wk": jax.random.normal(ks[1], (d, Kv * hd), dtype) * 0.02,
+        "wv": jax.random.normal(ks[2], (d, Kv * hd), dtype) * 0.02,
+        "wo": jax.random.normal(ks[3], (H * hd, d), dtype) * 0.02,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def gqa(cfg, pcfg, p, x, batch, cache=None, layer_id=0):
+    """Returns (out, new_cache_entry).  cache entry: dict(k, v, pos)."""
+    B, S, d = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(x.dtype))
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Kv, hd)
+    v = v.reshape(B, S, Kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if cache is None:                      # train / full prefill
+        pos = _positions(cfg, batch, B, S)
+        q = _rope(cfg, q, pos)
+        k = _rope(cfg, k, pos)
+        out = flash_attention(q, k, v, causal=cfg.causal,
+                              block=pcfg.flash_block)
+        new_cache = {"k": k, "v": v,
+                     "pos": jnp.full((B,), S, jnp.int32)}
+    else:                                  # single-token decode
+        fill = cache["pos"]                # (B,)
+        pos = fill[:, None]
+        if cfg.pos_dims == 3:
+            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+        q = _rope(cfg, q, pos)
+        k = _rope(cfg, k, pos)
+        # write the new token at its slot via one-hot (position is traced)
+        Sc = cache["k"].shape[1]
+        onehot = (jnp.arange(Sc)[None, :] == fill[:, None])
+        ck = jnp.where(onehot[:, :, None, None], k.astype(cache["k"].dtype),
+                       cache["k"])
+        cv = jnp.where(onehot[:, :, None, None], v.astype(cache["v"].dtype),
+                       cache["v"])
+        out = plain_decode_attention(q, ck, cv, fill + 1)
+        new_cache = {"k": ck, "v": cv, "pos": fill + 1}
+
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+def init_gqa_cache(cfg, B, S, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((B, S, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((B, S, cfg.n_kv_heads, cfg.hd), dtype),
+            "pos": jnp.zeros((B,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV cache
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    kvl, rd = cfg.mla_kv_lora, cfg.mla_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": jax.random.normal(ks[0], (d, H * (hd + rd)), dtype) * 0.02,
+        "wdkv": jax.random.normal(ks[1], (d, kvl), dtype) * 0.02,
+        "wkpe": jax.random.normal(ks[2], (d, rd), dtype) * 0.02,
+        "wuk": jax.random.normal(ks[3], (kvl, H * hd), dtype) * 0.02,
+        "wuv": jax.random.normal(ks[4], (kvl, H * hd), dtype) * 0.02,
+        "wo": jax.random.normal(ks[5], (H * hd, d), dtype) * 0.02,
+    }
+
+
+def mla(cfg, pcfg, p, x, batch, cache=None, layer_id=0):
+    """Multi-head Latent Attention.  Cache holds only (c_kv, k_pe) —
+    (kv_lora + rope_dim) floats per token instead of 2*Kv*hd."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    kvl, rd = cfg.mla_kv_lora, cfg.mla_rope_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, hd + rd)
+    q_nope, q_pe = q[..., :hd], q[..., hd:]
+    c_kv = jnp.einsum("bsd,dl->bsl", x, p["wdkv"].astype(x.dtype))
+    k_pe = jnp.einsum("bsd,dr->bsr", x, p["wkpe"].astype(x.dtype))
+
+    if cache is None:
+        pos = _positions(cfg, batch, B, S)
+        fill = jnp.full((B,), S, jnp.int32)
+        kv_len = None
+    else:
+        fill = cache["pos"]
+        pos = fill[:, None]
+        Sc = cache["c_kv"].shape[1]
+        onehot = (jnp.arange(Sc)[None, :] == fill[:, None])
+        c_kv = jnp.where(onehot[:, :, None],
+                         c_kv.astype(cache["c_kv"].dtype), cache["c_kv"])
+        k_pe_new = k_pe
+        kv_len = fill + 1
+
+    q_pe = _rope(cfg, q_pe, pos)
+    if cache is None:
+        k_pe = _rope(cfg, k_pe[:, :, None, :], pos)[:, :, 0]
+        new_cache = {"c_kv": c_kv, "k_pe": k_pe, "pos": fill}
+        kc, pe_c = c_kv, k_pe
+    else:
+        k_pe_new = _rope(cfg, k_pe_new[:, :, None, :], pos)[:, :, 0]
+        Sc = cache["k_pe"].shape[1]
+        onehot = (jnp.arange(Sc)[None, :] == fill[:, None])
+        pe_c = jnp.where(onehot[:, :, None],
+                         k_pe_new.astype(cache["k_pe"].dtype),
+                         cache["k_pe"])
+        new_cache = {"c_kv": c_kv, "k_pe": pe_c, "pos": fill + 1}
+        kc = c_kv
+
+    # decompress K/V from the latent cache
+    k_nope = jnp.einsum("btl,lq->btq", kc,
+                        p["wuk"].astype(x.dtype)).reshape(
+                            B, -1, H, hd)
+    v = jnp.einsum("btl,lq->btq", kc, p["wuv"].astype(x.dtype)).reshape(
+        B, -1, H, hd)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(pe_c[:, :, None, :],
+                                  k_nope.shape[:3] + (rd,))], -1)
+    qf = jnp.concatenate([q_nope, q_pe], -1)
+    if kv_len is None:
+        out = flash_attention(qf, k, v, causal=cfg.causal,
+                              block=pcfg.flash_block)
+    else:
+        out = plain_decode_attention(qf, k, v, kv_len)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+def init_mla_cache(cfg, B, S, dtype=jnp.bfloat16):
+    return {"c_kv": jnp.zeros((B, S, cfg.mla_kv_lora), dtype),
+            "k_pe": jnp.zeros((B, S, cfg.mla_rope_dim), dtype),
+            "pos": jnp.zeros((B,), jnp.int32)}

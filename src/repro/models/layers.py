@@ -1,0 +1,73 @@
+"""Common layers: RMSNorm, RoPE / M-RoPE, SwiGLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms(d, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def _rope_angles(positions, dim, theta):
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta=1e4):
+    """x (B, S, H, hd), positions (B, S) -> rotated x."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)      # (B, S, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta=1e4, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: positions3 (B, S, 3) = (t, h, w) ids.
+
+    The hd/2 frequency slots are split into ``sections`` (t/h/w); each
+    section rotates by its own position stream.  sections must sum to hd/2.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)       # (half,)
+    pos = positions3.astype(jnp.float32)[..., sec_id]   # (B, S, half)
+    ang = pos * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU MLP: (x@w1 * silu(x@w3)) @ w2, f32 accumulation on the MXU."""
+    h = jnp.einsum("bsd,df->bsf", x, w1.astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, w3.astype(x.dtype))
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, w2.astype(x.dtype))
+
+
+def init_mlp(key, d, ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 0.02
+    s_out = 0.02
+    return {
+        "w1": jax.random.normal(k1, (d, ff), dtype) * s_in,
+        "w3": jax.random.normal(k2, (d, ff), dtype) * s_in,
+        "w2": jax.random.normal(k3, (ff, d), dtype) * s_out,
+    }

@@ -1,0 +1,293 @@
+"""Model assembly: segments of super-blocks scanned over repeats.
+
+A config's layer stack is a list of (super_block, repeat) segments; the
+super-block is applied layer-by-layer inside a ``jax.lax.scan`` body whose
+xs are the stacked per-repeat params (and KV/SSM caches).  HLO size is thus
+independent of depth, which keeps 80-layer dry-run compiles tractable and
+matches production practice (MaxText-style scanned layers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import init_mlp, init_rms, rms_norm, swiglu
+
+
+def _dtype(name):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def batch_axes(pcfg):
+    axes = ((pcfg.pod_axis, pcfg.data_axis) if pcfg.pod_axis
+            else (pcfg.data_axis,))
+    if pcfg.dp_over_model:
+        axes = axes + (pcfg.model_axis,)
+    return axes
+
+
+def constrain(x, *spec):
+    """Best-effort activation sharding constraint.
+
+    Applies when an ambient mesh is installed (jax.set_mesh, as done by the
+    launchers / dryrun); no-ops in plain single-device tests."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, spec, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_rms(cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        if cfg.mla_kv_lora:
+            p["attn"] = attn_mod.init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn_mod.init_gqa(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = ssm_mod.init_mamba2(ks[0], cfg, dtype)
+    if spec.ffn != "none":
+        p["norm2"] = init_rms(cfg.d_model, dtype)
+        if spec.ffn == "dense":
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, param_dtype: str = "float32"):
+    dtype = _dtype(param_dtype)
+    keys = jax.random.split(key, len(cfg.segments) + 2)
+    params = {}
+    if cfg.embed_inputs:
+        params["embed"] = jax.random.normal(
+            keys[0], (cfg.vocab, cfg.d_model), dtype) * 0.02
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab), dtype) * 0.02
+    params["final_norm"] = init_rms(cfg.d_model, dtype)
+    segs = []
+    for si, (sb, cnt) in enumerate(cfg.segments):
+        reps = []
+        for rkey in jax.random.split(keys[2 + si], cnt):
+            blk_keys = jax.random.split(rkey, len(sb))
+            reps.append({f"blk{i}": _init_block(bk, cfg, spec, dtype)
+                         for i, (spec, bk) in enumerate(zip(sb, blk_keys))})
+        segs.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+                    if cnt > 1 else reps[0])
+    params["segments"] = segs
+    return params
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, dtype=jnp.bfloat16):
+    """Static KV/SSM cache pytree mirroring the segment structure."""
+    segs = []
+    for sb, cnt in cfg.segments:
+        blks = {}
+        for i, spec in enumerate(sb):
+            if spec.mixer == "attn":
+                if cfg.mla_kv_lora:
+                    c = attn_mod.init_mla_cache(cfg, B, S, dtype)
+                else:
+                    c = attn_mod.init_gqa_cache(cfg, B, S, dtype)
+            else:
+                c = ssm_mod.init_mamba2_cache(cfg, B, dtype)
+            blks[f"blk{i}"] = c
+        if cnt > 1:
+            blks = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cnt,) + x.shape), blks)
+        segs.append(blks)
+    return {"segments": segs}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg, pcfg, spec, p, x, batch, cache, aux,
+                 want_cache=True):
+    ba = batch_axes(pcfg)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if pcfg.seq_parallel:
+        # Megatron-SP: gather the sequence ONCE here (the boundary AG);
+        # without this GSPMD re-gathers per consuming matmul
+        h = constrain(h, ba, None, None)
+    if spec.mixer == "attn":
+        fn = attn_mod.mla if cfg.mla_kv_lora else attn_mod.gqa
+        out, new_cache = fn(cfg, pcfg, p["attn"], h, batch, cache)
+    else:
+        out, new_cache = ssm_mod.mamba2(cfg, pcfg, p["mamba"], h, batch,
+                                        cache)
+    if not want_cache:
+        new_cache = None
+    ba = batch_axes(pcfg)
+    seq = pcfg.model_axis if pcfg.seq_parallel else None
+    x = constrain(x + out, ba, seq, None)
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if pcfg.seq_parallel:
+            h = constrain(h, ba, None, None)
+        if spec.ffn == "dense":
+            x = x + swiglu(h, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+        else:
+            out, moe_aux = moe_mod.moe(cfg, pcfg, p["moe"], h)
+            x = x + out
+            aux = aux + moe_aux["lb_loss"]
+        x = constrain(x, ba, seq, None)
+    return x, new_cache, aux
+
+
+def _apply_superblock(cfg, pcfg, sb, params, x, batch, caches, aux,
+                      want_cache=True):
+    new_caches = {}
+    for i, spec in enumerate(sb):
+        cache_i = None if caches is None else caches[f"blk{i}"]
+
+        def one(p_i, xx, c_i, aa, _spec=spec):
+            return _apply_block(cfg, pcfg, _spec, p_i, xx, batch, c_i, aa,
+                                want_cache)
+
+        if pcfg.remat != "none":
+            # per-LAYER remat: the backward pass recomputes one block at a
+            # time, so peak residency is a single block's internals
+            one = jax.checkpoint(one)
+        x, nc, aux = one(params[f"blk{i}"], x, cache_i, aux)
+        new_caches[f"blk{i}"] = nc
+    return x, (new_caches if want_cache else None), aux
+
+
+def forward(cfg: ModelConfig, pcfg: ParallelConfig, params, batch,
+            cache: Optional[dict] = None, want_cache: bool = True,
+            return_hidden: bool = False):
+    """Returns (logits f32, new_cache, aux_loss).
+
+    batch: {"tokens": (B,S) int32} or {"embeds": (B,S,d)}; optional
+    "positions" ((B,S) or (B,S,3) for M-RoPE).  want_cache=False (training)
+    skips KV materialization entirely.
+    """
+    cdt = _dtype(pcfg.compute_dtype)
+    if cfg.embed_inputs:
+        tok = batch["tokens"]
+        x = params["embed"].astype(cdt)[tok]
+        B, S = tok.shape
+    else:
+        x = batch["embeds"].astype(cdt)
+        B, S = x.shape[:2]
+    x = constrain(x, batch_axes(pcfg), None, None)
+
+    use_cache = cache is not None
+    new_segs = []
+    aux = jnp.zeros((), jnp.float32)
+    for si, (sb, cnt) in enumerate(cfg.segments):
+        seg_p = params["segments"][si]
+        seg_c = cache["segments"][si] if use_cache else None
+
+        if cnt == 1:
+            x, nc, aux = _apply_superblock(cfg, pcfg, sb, seg_p, x, batch,
+                                           seg_c, aux, want_cache)
+            new_segs.append(nc)
+            continue
+
+        def body(carry, xs):
+            xx, aa = carry
+            p_t, c_t = xs
+            xx, nc, aa = _apply_superblock(cfg, pcfg, sb, p_t, xx, batch,
+                                           c_t, aa, want_cache)
+            return (xx, aa), nc
+
+        # (per-layer checkpointing happens inside _apply_superblock; the
+        # scan body itself stays plain so residuals are just block inputs)
+        (x, aux), nc = jax.lax.scan(body, (x, aux), (seg_p, seg_c))
+        new_segs.append(nc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        # caller projects (chunked CE / last-token-only prefill) — the full
+        # (B, S, vocab) logits tensor is never materialized
+        return x, ({"segments": new_segs} if want_cache else None), aux
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["head"]).astype(cdt)
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return logits, ({"segments": new_segs} if want_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# partition specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, pcfg: ParallelConfig, params):
+    """PartitionSpec pytree: Megatron-style TP over the "model" axis
+    (or fully replicated + FSDP when dp_over_model re-purposes the axis
+    as data parallelism)."""
+    from jax.sharding import PartitionSpec as P
+    mdl = None if pcfg.dp_over_model else pcfg.model_axis
+
+    def rule(path, x):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        rank = x.ndim
+        joined = "/".join(str(n) for n in names)
+
+        def lead(spec2):
+            return P(*((None,) * (rank - len(spec2)) + spec2))
+
+        if "embed" in names:
+            return P(mdl, None)
+        if "head" in names:
+            return P(None, mdl)
+        if "moe" in names:
+            if names[-1] in ("w1", "w3", "w2"):          # (E, d, ff)
+                return lead((mdl, None, None))
+            return lead((None,))                         # router, shared
+        if names[-1] in ("wq", "wk", "wv", "w1", "w3", "in_proj",
+                         "wuk", "wuv"):
+            return lead((None, mdl))
+        if names[-1] in ("wo", "w2", "out_proj"):
+            return lead((mdl, None))
+        if names[-1] in ("wdkv", "wkpe"):
+            return lead((None, None))
+        return lead(())                                  # norms, scalars
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def cache_specs(cfg: ModelConfig, pcfg: ParallelConfig, cache):
+    """Shard caches: batch over data(+pod); seq-shard long caches if asked."""
+    from jax.sharding import PartitionSpec as P
+    batch_axes = ((pcfg.pod_axis, pcfg.data_axis) if pcfg.pod_axis
+                  else (pcfg.data_axis,))
+
+    def rule(path, x):
+        names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        rank = x.ndim
+        leaf = names[-1]
+        if leaf == "pos":
+            return P(*((None,) * (rank - 1) + (batch_axes,)))
+        lead = (None,) * (rank - 4)      # stacked segment dims
+        seq = pcfg.model_axis if pcfg.seq_shard_decode else None
+        if leaf in ("k", "v"):           # (B, S, Kv, hd)
+            return P(*lead, batch_axes, seq, None, None)
+        if leaf in ("c_kv", "k_pe"):     # (B, S, l)
+            lead3 = (None,) * (rank - 3)
+            return P(*lead3, batch_axes, seq, None)
+        if leaf == "ssm":                # (B, H, P, N)
+            return P(*lead, batch_axes, pcfg.model_axis, None, None)
+        if leaf == "conv":               # (B, K-1, C)
+            lead3 = (None,) * (rank - 3)
+            return P(*lead3, batch_axes, None, pcfg.model_axis)
+        return P(*((None,) * rank))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts with top-k routing, static capacity, shared experts.
+
+Dispatch is sort-free and static-shape: (token, k)-assignments are ranked
+per expert with a cumulative-sum position (drop on overflow — standard
+capacity-factor semantics), scattered to (E, C, d) expert buffers, run as a
+single grouped einsum (sharded over the "model" axis = expert parallelism),
+and combined with the gate weights.
+
+``dispatch="spmm"`` exposes the paper's integration point: the dispatch and
+combine are *sparse matrices* (token x (E*C) one-hot with gate values), so
+they can run through the repro SpMM kernels.  That path is exercised at
+smoke-test scale; the einsum path is the production default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, E, ff = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), dtype) * 0.02,
+        "w1": jax.random.normal(ks[1], (E, d, ff), dtype) * 0.02,
+        "w3": jax.random.normal(ks[2], (E, d, ff), dtype) * 0.02,
+        "w2": jax.random.normal(ks[3], (E, ff, d), dtype) * 0.02,
+    }
+    if cfg.moe_shared:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, cfg.moe_shared * ff, dtype)
+    return p
+
+
+def moe(cfg, pcfg, p, x, dispatch: str = "einsum"):
+    """x (B, S, d) -> (B, S, d).  Also returns aux losses dict."""
+    B, S, d = x.shape
+    E, k, ff = cfg.moe_experts, cfg.moe_top_k, cfg.moe_d_ff
+    T = B * S
+    xf = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, gate_i = jax.lax.top_k(probs, k)            # (T, k)
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_i.reshape(-1)].add(
+        jnp.ones((T * k,), jnp.float32)) / (T * k)
+    aux = {"lb_loss": E * jnp.sum(me * ce)}
+
+    C = int(cfg.capacity_factor * T * k / E) or 1
+    # rank of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(gate_i, E, dtype=jnp.int32)       # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    ranks = (jnp.cumsum(flat, axis=0) - flat)                 # exclusive
+    rank = (ranks * flat).sum(-1).reshape(T, k)               # (T, k)
+    keep = rank < C
+    slot = gate_i * C + jnp.minimum(rank, C - 1)              # (T, k)
+
+    if dispatch == "spmm":
+        return _moe_spmm(cfg, p, xf, gate_v, slot, keep, C, B, S), aux
+
+    # scatter tokens into expert buffers (E*C, d)
+    buf = jnp.zeros((E * C, d), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k))
+    buf = buf.at[jnp.where(keep, slot, E * C - 1).reshape(-1)].add(
+        jnp.where(keep.reshape(-1, 1), xf[tok_idx.reshape(-1)], 0.0))
+    buf = buf.reshape(E, C, d)
+    from repro.models.model import constrain
+    buf = constrain(buf, pcfg.model_axis, None, None)   # expert parallelism
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(x.dtype))
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))
+    y = y.reshape(E * C, d)
+
+    # combine in compute dtype: f32 gates here would promote the whole
+    # (T*k, d) combine chain AND its backward to f32 (2x the bytes)
+    gates = (gate_v * keep).astype(x.dtype)
+    out = (y[slot.reshape(-1)].reshape(T, k, d)
+           * gates[..., None]).sum(1)
+    if cfg.moe_shared:
+        from repro.models.layers import swiglu
+        out = out + swiglu(xf[None], p["shared"]["w1"], p["shared"]["w3"],
+                           p["shared"]["w2"])[0]
+    return out.reshape(B, S, d), aux
+
+
+def _moe_spmm(cfg, p, xf, gate_v, slot, keep, C, B, S):
+    """Dispatch/combine as SpMM through the repro sparse kernels.
+
+    dispatch matrix D: (E*C, T) with D[slot, t] = 1      -> buf = D @ x
+    combine  matrix G: (T, E*C) with G[t, slot] = gate   -> out = G @ y
+    """
+    from repro.core.sparse import RowTiledCOO
+    from repro.kernels import ops
+    import numpy as np  # noqa: F401  (static shapes only)
+
+    T, d = xf.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    K = T * k
+    # one nonzero block stream; row-tiling degenerates to one big window
+    # (fine at smoke scale; production path is the einsum dispatch)
+    disp = RowTiledCOO(
+        rows_local=slot.reshape(1, K),
+        cols=jnp.broadcast_to(jnp.arange(T)[:, None], (T, k)).reshape(1, K),
+        vals=keep.reshape(1, K).astype(xf.dtype),
+        tile_base=jnp.zeros((1,), jnp.int32),
+        shape=(E * C, T), row_tile=E * C)
+    buf = ops.spmm(disp, xf, m=E * C, backend="ref").reshape(E, C, d)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(xf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(xf.dtype))
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(xf.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(xf.dtype)).reshape(
+        E * C, d)
+    comb = RowTiledCOO(
+        rows_local=jnp.broadcast_to(jnp.arange(T)[:, None],
+                                    (T, k)).reshape(1, K),
+        cols=slot.reshape(1, K),
+        vals=(gate_v * keep).reshape(1, K).astype(xf.dtype),
+        tile_base=jnp.zeros((1,), jnp.int32),
+        shape=(T, E * C), row_tile=T)
+    out = ops.spmm(comb, y, m=T, backend="ref")
+    if cfg.moe_shared:
+        from repro.models.layers import swiglu
+        out = out + swiglu(xf[None], p["shared"]["w1"], p["shared"]["w3"],
+                           p["shared"]["w2"])[0]
+    return out.reshape(B, S, d)

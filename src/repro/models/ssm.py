@@ -1,0 +1,171 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm.
+
+Training computes the sequence in chunks: a quadratic attention-like
+intra-chunk term plus an inter-chunk state recurrence carried by
+``lax.scan`` — the chunked SSD formulation of Dao & Gu (arXiv:2405.21060),
+which maps onto the MXU as batched matmuls.  Decode keeps a recurrent state
+(B, H, P, N) and a small conv window, updated in O(1) per token.
+
+Shapes: d_inner = expand*d_model, H = d_inner/head_dim heads, state N.
+Single B/C group (G=1), scalar A per head (Mamba2 simplification).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj emits [z (gate), x, B, C, dt]
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * din + 2 * N + H), dtype) * 0.02,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                    dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), dtype),          # A = -exp(A_log) in (-1,0]
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.full((H,), -2.0, dtype),   # softplus(-2) ~ 0.13
+        "out_proj": jax.random.normal(ks[3], (din, d), dtype) * 0.02,
+        "norm": jnp.ones((din,), dtype),
+    }
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv, kernel K: xBC (B, S, C).  state: (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xBC[:, :K - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xBC], axis=1)            # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)).astype(
+        xBC.dtype), new_state
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) positive, A (H,) negative, Bm/Cm (B,S,N).
+    Returns y (B,S,H,P), final state (B,H,P,N).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = Bm.reshape(Bb, nc, chunk, N)
+    Cc = Cm.reshape(Bb, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                   # (B,nc,Q,H) negative
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    total = cum[:, :, -1]                               # (B,nc,H)
+
+    # intra-chunk (quadratic) term: attention-like with decay kernel
+    # L[q1,q2] = exp(cum[q1]-cum[q2]) for q1 >= q2
+    # NOTE: decomposed into explicit batched matmuls.  A single 4-operand
+    # einsum here lowers to broadcast-multiply-reduce with 6-D f32
+    # intermediates (gigabytes/device at production shapes) — §Perf log.
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # (B,nc,Q,Q)
+    W = scores[..., None] * L * dtc[:, :, None, :, :]       # (B,nc,Q,K,H)
+    Wt = jnp.moveaxis(W, -1, 2)                             # (B,nc,H,Q,K)
+    xt = jnp.moveaxis(xc, 3, 2)                             # (B,nc,H,K,P)
+    y_intra = jnp.moveaxis(Wt @ xt, 2, 3)                   # (B,nc,Q,H,P)
+
+    # chunk summaries -> inter-chunk recurrence
+    # state_c = sum_q exp(total - cum[q]) * dt[q] * B[q] (x) x[q]
+    # NOTE einsum path matters: contracting q FIRST keeps intermediates at
+    # (B,nc,H,P,N); a naive 4-operand einsum materializes a 6-D
+    # (B,nc,Q,H,P,N) tensor — gigabytes per device (see §Perf log).
+    w_end = jnp.exp(total[:, :, None, :] - cum)             # (B,nc,Q,H)
+    xw = xc * (w_end * dtc)[..., None]                      # (B,nc,Q,H,P)
+    summary = jnp.einsum("bcqn,bcqhp->bchpn", Bc, xw)       # (B,nc,H,P,N)
+
+    def step(state, inp):
+        summ, tot = inp                                     # (B,H,P,N),(B,H)
+        y_state = state                                     # state BEFORE
+        state = state * jnp.exp(tot)[:, :, None, None] + summ
+        return state, y_state
+
+    s0 = jnp.zeros((Bb, H, P, N), x.dtype)
+    summary_t = jnp.moveaxis(summary, 1, 0)
+    total_t = jnp.moveaxis(total, 1, 0)
+    final, states = jax.lax.scan(step, s0, (summary_t, total_t))
+    states = jnp.moveaxis(states, 0, 1)                     # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y[q] += C[q] . state_begin * exp(cum[q])
+    # (contract n first; scaling by exp(cum) afterwards is elementwise)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, states) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, final
+
+
+def mamba2(cfg, pcfg, p, x, batch, cache=None, layer_id=0):
+    """Returns (out, new_cache).  cache: dict(conv (B,K-1,C), ssm (B,H,P,N))."""
+    B, S, d = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xr, Bm, Cm, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"][None, None, :].astype(
+            jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xBC = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xr, Bm, Cm = jnp.split(xBC, [din, din + N], axis=-1)
+    xh = xr.reshape(B, S, H, P)
+
+    if cache is None:
+        chunk = min(cfg.ssm_chunk, S)
+        y, final = _ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                Bm.astype(jnp.float32),
+                                Cm.astype(jnp.float32), chunk)
+        new_cache = {"conv": new_conv, "ssm": final,
+                     "pos": jnp.full((B,), S, jnp.int32)}
+    else:
+        # O(1) recurrent update: s = s*exp(dt*A) + dt * B (x) x ; y = C.s
+        s = cache["ssm"].astype(jnp.float32)                # (B,H,P,N)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                 # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        s = s * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       s)[:, None]                          # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": s.astype(cache["ssm"].dtype),
+                     "pos": cache["pos"] + 1}
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None,
+                                                                :, None]
+    y = y.reshape(B, S, din).astype(x.dtype)
+    # gated RMSNorm (Mamba2's norm-then-gate)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype)), \
+        new_cache
+
+
+def init_mamba2_cache(cfg, B, dtype=jnp.bfloat16):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+        "pos": jnp.zeros((B,), jnp.int32),
+    }

@@ -1,0 +1,167 @@
+"""Three-term roofline analysis from the dry-run artifacts.
+
+Hardware model (assignment constants, TPU v5e):
+    peak bf16 compute : 197e12 FLOP/s per chip
+    HBM bandwidth     : 819e9  B/s  per chip
+    ICI link bandwidth: 50e9   B/s  per chip-link
+
+Terms (seconds, per step, per chip):
+    compute    = HLO_FLOPs / (chips * PEAK)
+    memory     = HLO_bytes / (chips * HBM)
+    collective = collective_bytes / (chips * LINK)
+
+``cost_analysis()`` of the SPMD executable reports the PER-DEVICE
+partitioned module, so FLOPs/bytes are divided by chips=1 here (we record
+both conventions; ``per_device=True`` is the default and documented in
+EXPERIMENTS.md).  collective_bytes uses the loop-aware wire model
+(all-gather: recv bytes, reduce-scatter: sent, all-reduce: 2x, permutes:
+payload), also per device.
+
+MODEL_FLOPS = 6*N*D for training (2*N*D forward-only for serving), with
+N = active params (MoE) and D = tokens per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128 * 1,
+    "long_500k": 1 * 1,
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    multi_pod: bool
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    temp_gb: float
+    wire_gb: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step's bound spent on useful model FLOPs."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_time if self.bound_time else 0.0
+
+    @property
+    def frac_cc(self) -> float:
+        """Roofline fraction vs the compute/collective bound only — the
+        memory term is a stated UPPER BOUND (operand+output of every
+        instruction, ignoring fusion reuse), so this is the fraction the
+        fused TPU execution is expected to achieve."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        bound = max(self.compute_s, self.collective_s)
+        return ideal / bound if bound else 0.0
+
+
+def analyse_record(rec: dict) -> Roofline:
+    chips = 512 if rec["multi_pod"] else 256
+    kind = rec["kind"]
+    tokens = TOKENS[rec["shape"]]
+    n = rec["active_params"]
+    model_flops = (6 if kind == "train" else 2) * n * tokens
+    # loop-aware per-device totals from the HLO walk (cost_analysis does
+    # NOT multiply while-loop bodies by their trip counts)
+    prog = rec.get("program", {})
+    flops_dev = prog.get("dot_flops") or rec["cost"].get("flops", 0.0)
+    bytes_dev = prog.get("bytes_touched") or rec["cost"].get(
+        "bytes accessed", 0.0)
+    coll_dev = rec["collectives"].get("total_wire_bytes", 0.0)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / LINK_BW
+    hlo_total = flops_dev * chips
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], multi_pod=rec["multi_pod"],
+        chips=chips, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, model_flops=model_flops,
+        hlo_flops=hlo_total,
+        useful_ratio=model_flops / hlo_total if hlo_total else 0.0,
+        temp_gb=rec["memory"]["temp_size_in_bytes"] / 1e9,
+        wire_gb=coll_dev / 1e9)
+
+
+def fix_suggestion(r: Roofline) -> str:
+    if r.dominant == "collective":
+        if r.shape == "train_4k":
+            return ("overlap FSDP all-gathers with layer compute / shrink "
+                    "grad all-reduce via int8 compression")
+        return "reduce KV/cache collectives: shard-local decode attention"
+    if r.dominant == "memory":
+        if r.shape.startswith("decode") or r.shape.startswith("long"):
+            return ("decode is KV-bandwidth-bound by nature; raise batch "
+                    "or quantize KV cache to int8")
+        return "fuse elementwise chains; bf16 residuals; larger microbatch"
+    if r.useful_ratio < 0.5:
+        return ("compiled FLOPs >> model FLOPs: cut remat recompute or "
+                "one-hot/matmul waste in MoE dispatch")
+    return "raise arithmetic intensity (larger microbatch per chip)"
+
+
+def load_all(outdir: str = "results/dryrun",
+             fallback: str = "results/dryrun_v2") -> List[Roofline]:
+    """Load cell records, preferring `outdir`; per-cell fallback to an
+    earlier sweep's records (older bytes-touched convention) if present."""
+    files = {}
+    for d in (fallback, outdir):
+        if not os.path.isdir(d):
+            continue
+        for fn in os.listdir(d):
+            if fn.endswith(".json") and not fn.startswith("summary"):
+                files[fn] = os.path.join(d, fn)
+    rows = []
+    for fn in sorted(files):
+        with open(files[fn]) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            continue
+        rows.append(analyse_record(rec))
+    return rows
+
+
+def to_markdown(rows: List[Roofline]) -> str:
+    head = ("| arch | shape | mesh | compute s | memory s | collective s |"
+            " dominant | MODEL/HLO | frac(all) | frac(c+c) | temp GB |"
+            " fix |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda x: (x.multi_pod, x.arch, x.shape)):
+        mesh = "2x16x16" if r.multi_pod else "16x16"
+        lines.append(
+            f"| {r.arch} | {r.shape} | {mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | {r.dominant} | "
+            f"{r.useful_ratio:.2f} | {r.roofline_fraction:.3f} | "
+            f"{r.frac_cc:.3f} | {r.temp_gb:.1f} | {fix_suggestion(r)} |")
+    return head + "\n".join(lines) + "\n"
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(to_markdown(rows))

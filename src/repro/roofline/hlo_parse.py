@@ -1,0 +1,338 @@
+"""Parse collective-communication traffic out of compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we walk the
+partitioned HLO module: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction is
+recorded with its operand and output byte sizes (per-device, since the SPMD
+module is the per-device program).
+
+Two aggregation policies:
+
+  * ``operand_bytes``  — sum of operand sizes (the roofline spec's metric).
+  * ``wire_bytes``     — a words-on-the-wire model per primitive, matching
+    the alpha-beta costs the paper uses:
+      all-gather         output - operand   (received words)
+      reduce-scatter     operand - output   (sent words)
+      all-reduce         2 * operand        (ring RS + AG)
+      all-to-all         operand            (everything leaves)
+      collective-permute operand            (point-to-point send)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s*([\w\-]+)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string, incl. tuples: '(f32[2,3], u32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        cnt = 1
+        for d in dims.split(","):
+            if d:
+                cnt *= int(d)
+        total += cnt * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    name: str
+    operand_bytes: int
+    output_bytes: int
+
+    @property
+    def wire_bytes(self) -> int:
+        if self.kind == "all-gather":
+            return max(self.output_bytes - self.operand_bytes, 0)
+        if self.kind == "reduce-scatter":
+            return max(self.operand_bytes - self.output_bytes, 0)
+        if self.kind == "all-reduce":
+            return 2 * self.operand_bytes
+        return self.operand_bytes   # all-to-all, collective-permute
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    # pass 1: name -> shape table
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    # pass 2: collective instructions
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, op = m.group(1), m.group(2), m.group(3)
+        if op not in _COLLECTIVES:
+            continue
+        if "-start" in line and op + "-start" in line:
+            continue  # paired with -done; avoid double counting
+        args = line[line.index(op + "(") + len(op) + 1:]
+        depth, arglist, cur = 0, [], ""
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    arglist.append(cur)
+                    break
+                depth -= 1
+            if ch == "," and depth == 0:
+                arglist.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        op_bytes = 0
+        for a in arglist:
+            a = a.strip().lstrip("%")
+            if a in shapes:
+                op_bytes += shape_bytes(shapes[a])
+            elif _SHAPE_RE.search(a):       # inline-typed operand
+                op_bytes += shape_bytes(a)
+        out.append(CollectiveOp(op, name, op_bytes, shape_bytes(out_shape)))
+    return out
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(
+    r"(?:true_computation|false_computation|branch_computations=\{[^}]*)"
+    r"=?%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str):
+    """Yield (name, lines, is_entry) per HLO computation."""
+    name, lines, entry = None, [], False
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            if name is not None:
+                yield name, lines, entry
+            name, lines = m.group(1), []
+            entry = line.lstrip().startswith("ENTRY")
+        elif name is not None:
+            lines.append(line)
+    if name is not None:
+        yield name, lines, entry
+
+
+def collective_totals(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware totals: collectives inside `while` bodies are multiplied
+    by the statically-known trip count (scan phases, layer loops)."""
+    comps: Dict[str, dict] = {}
+    entry = None
+    for name, lines, is_entry in _split_computations(hlo_text):
+        body = "\n".join(lines)
+        ops = parse_collectives(body)
+        edges = []   # (callee, multiplier)
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                edges.append((wm.group(1), 1))
+                edges.append((wm.group(2), trips))
+                continue
+            for cm in _CALL_RE.finditer(line):
+                edges.append((cm.group(1), 1))
+        comps[name] = dict(ops=ops, edges=edges)
+        if is_entry:
+            entry = name
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def visit(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {"operand_bytes": 0.0, "wire_bytes": 0.0, "count": 0.0}
+        info = comps.get(name)
+        if info is None:
+            return memo[name]
+        tot = {"operand_bytes": float(sum(o.operand_bytes
+                                          for o in info["ops"])),
+               "wire_bytes": float(sum(o.wire_bytes for o in info["ops"])),
+               "count": float(len(info["ops"]))}
+        for kind in _COLLECTIVES:
+            sel = [o for o in info["ops"] if o.kind == kind]
+            if sel:
+                tot[f"{kind}_wire_bytes"] = float(
+                    sum(o.wire_bytes for o in sel))
+                tot[f"{kind}_count"] = float(len(sel))
+        for callee, mult in info["edges"]:
+            sub = visit(callee)
+            for key, v in sub.items():
+                tot[key] = tot.get(key, 0.0) + mult * v
+        memo[name] = tot
+        return tot
+
+    if entry is None:
+        return {"operand_bytes": 0.0, "wire_bytes": 0.0, "count": 0.0}
+    return visit(entry)
+
+
+_DOT_RE = re.compile(r"\bdot\(")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"dot\(([^)]*)\)")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "broadcast", "reshape",
+}
+
+
+def _instruction_stats(lines, shapes) -> Dict[str, float]:
+    """Dot FLOPs + bytes-touched for one computation's instructions."""
+    flops = 0.0
+    byt = 0.0
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, op = m.group(1), m.group(2), m.group(3)
+        if op == "dot":
+            out_elems = 1
+            sm = _SHAPE_RE.search(out_shape)
+            if sm:
+                for d in sm.group(2).split(","):
+                    if d:
+                        out_elems *= int(d)
+            cdims = _LHS_C_RE.search(line)
+            lhs_name = None
+            om = _OPERANDS_RE.search(line)
+            if om:
+                lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
+            k = 1
+            if cdims and lhs_name and lhs_name in shapes:
+                lm = _SHAPE_RE.search(shapes[lhs_name])
+                if lm:
+                    dims = [int(d) for d in lm.group(2).split(",") if d]
+                    for ci in cdims.group(1).split(","):
+                        if ci:
+                            k *= dims[int(ci)]
+            flops += 2.0 * out_elems * k
+        if op not in _SKIP_BYTES_OPS:
+            byt += shape_bytes(out_shape)
+            om2 = line[line.index(op + "(") + len(op) + 1:] \
+                if op + "(" in line else ""
+            for ref in re.findall(r"%([\w.\-]+)", om2.split(")")[0]):
+                if ref in shapes:
+                    byt += shape_bytes(shapes[ref])
+    return {"dot_flops": flops, "bytes_touched": byt}
+
+
+def program_totals(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware per-device totals: dot FLOPs, bytes touched, collectives.
+
+    Instructions inside `while` bodies are multiplied by the statically
+    known trip count (scan layers / microbatches).  FLOPs counts
+    dot_general only (the MFU convention); bytes sums operand+output sizes
+    of every non-trivial instruction (an upper bound that ignores fusion
+    reuse — stated convention for the memory roofline term).
+    """
+    # global shape table across all computations
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    comps: Dict[str, dict] = {}
+    entry = None
+    for name, lines, is_entry in _split_computations(hlo_text):
+        stats = _instruction_stats(lines, shapes)
+        ops = parse_collectives("\n".join(lines))
+        # control edges (while bodies/conds, branches) carry trip
+        # multipliers and contribute BYTES; fusion/to_apply edges are
+        # descended for FLOPs only — fusion interiors stay in registers,
+        # so HBM traffic is counted at fusion boundaries (the fusion
+        # instruction's own operands/outputs in the parent computation).
+        control_edges, fusion_edges = [], []
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                control_edges.append((wm.group(1), 1))
+                control_edges.append((wm.group(2), trips))
+                continue
+            for cm in _CALL_RE.finditer(line):
+                fusion_edges.append((cm.group(1), 1))
+        comps[name] = dict(stats=stats, ops=ops,
+                           control_edges=control_edges,
+                           fusion_edges=fusion_edges)
+        if is_entry:
+            entry = name
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def visit(name):
+        if name in memo:
+            return memo[name]
+        memo[name] = {"dot_flops": 0.0, "bytes_touched": 0.0,
+                      "wire_bytes": 0.0}
+        info = comps.get(name)
+        if info is None:
+            return memo[name]
+        tot = dict(info["stats"])
+        tot["wire_bytes"] = float(sum(o.wire_bytes for o in info["ops"]))
+        for callee, mult in info["control_edges"]:
+            sub = visit(callee)
+            for key, v in sub.items():
+                tot[key] = tot.get(key, 0.0) + mult * v
+        for callee, mult in info["fusion_edges"]:
+            sub = visit(callee)
+            tot["dot_flops"] += mult * sub.get("dot_flops", 0.0)
+            tot["wire_bytes"] += mult * sub.get("wire_bytes", 0.0)
+        memo[name] = tot
+        return tot
+
+    if entry is None:
+        return {"dot_flops": 0.0, "bytes_touched": 0.0, "wire_bytes": 0.0}
+    return visit(entry)
+
+
+def collective_summary(hlo_text: str) -> Dict[str, float]:
+    """Aggregate per-device collective traffic from an HLO module.
+
+    Flat (loop-unaware) counts plus loop-aware ``total_*`` entries.
+    """
+    ops = parse_collectives(hlo_text)
+    summary: Dict[str, float] = {
+        "collective_op_count": len(ops),
+        "operand_bytes": float(sum(o.operand_bytes for o in ops)),
+        "wire_bytes": float(sum(o.wire_bytes for o in ops)),
+    }
+    for kind in _COLLECTIVES:
+        sel = [o for o in ops if o.kind == kind]
+        if sel:
+            summary[f"{kind}_count"] = len(sel)
+            summary[f"{kind}_operand_bytes"] = float(
+                sum(o.operand_bytes for o in sel))
+            summary[f"{kind}_wire_bytes"] = float(
+                sum(o.wire_bytes for o in sel))
+    for key, v in collective_totals(hlo_text).items():
+        summary[f"total_{key}"] = v
+    return summary

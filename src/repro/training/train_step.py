@@ -1,0 +1,144 @@
+"""Loss and jitted train/eval step builders.
+
+``make_train_step`` returns a pjit'd function with explicit in/out
+shardings derived from the model's PartitionSpecs; microbatch gradient
+accumulation runs as a ``lax.scan`` over microbatches (activation memory /
+throughput trade) and the optimizer update happens once per step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import model as M
+from repro.training import optimizer as opt
+
+
+def chunked_ce(hidden, head, targets, mask, chunk: int = 512,
+               batch_axes=("data",)):
+    """Cross-entropy scanning over sequence chunks.
+
+    The (B, S, vocab) logits tensor is never materialized — essential for
+    the 150k-vocab architectures where full logits at global batch would
+    be terabytes.  The chunk body is checkpointed so the BACKWARD also
+    recomputes per-chunk logits instead of saving them (without this the
+    scan residuals re-materialize the full logits)."""
+    B, S, d = hidden.shape
+    if S % chunk or S <= chunk:
+        chunk = S
+    nc = S // chunk
+    hs = jnp.moveaxis(hidden.reshape(B, nc, chunk, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        h, t, mk = inp
+        from repro.models.model import constrain
+        logits = jnp.einsum("bcd,dv->bcv", h, head).astype(jnp.float32)
+        logits = constrain(logits, batch_axes, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - gold) * mk), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts, ms))
+    return tot / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(cfg: ModelConfig, pcfg: ParallelConfig, params, batch,
+            aux_weight: float = 0.01):
+    """Next-token CE in f32 (+ MoE load-balance aux)."""
+    hidden, _, aux = M.forward(cfg, pcfg, params, batch, want_cache=False,
+                               return_hidden=True)
+    cdt = hidden.dtype
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["head"]).astype(cdt)
+    targets = batch["labels"]
+    if cfg.causal:   # predict token t+1 at position t; mask the last slot
+        tgt = jnp.concatenate([targets[:, 1:], targets[:, :1]], axis=1)
+        mask = jnp.ones(targets.shape, jnp.float32).at[:, -1].set(0.0)
+    else:            # encoder: per-frame classification
+        tgt = targets
+        mask = jnp.ones(targets.shape, jnp.float32)
+    from repro.models.model import batch_axes as _ba
+    nll = chunked_ce(hidden, head, tgt, mask, batch_axes=_ba(pcfg))
+    loss = nll + aux_weight * aux
+    return loss, {"loss": loss, "nll": nll, "aux": aux}
+
+
+def batch_sharding(pcfg: ParallelConfig, mesh):
+    batch_axes = ((pcfg.pod_axis, pcfg.data_axis) if pcfg.pod_axis
+                  else (pcfg.data_axis,))
+
+    def rule(x):
+        spec = (batch_axes,) + (None,) * (x.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+    return rule
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                    tcfg: TrainConfig, mesh, opt_cfg: Optional[
+                        opt.AdamWConfig] = None):
+    """Returns (step_fn, param_shardings, opt_shardings).
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics);
+    params and opt_state are donated.
+    """
+    opt_cfg = opt_cfg or opt.AdamWConfig(
+        lr=tcfg.lr, beta1=tcfg.beta1, beta2=tcfg.beta2,
+        weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip,
+        warmup=tcfg.warmup, total_steps=tcfg.steps)
+
+    def step(params, opt_state, batch):
+        nmicro = tcfg.microbatch or 1
+        if nmicro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm_loss(cfg, pcfg, p, batch), has_aux=True)(params)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (_, met), g = jax.value_and_grad(
+                    lambda p: lm_loss(cfg, pcfg, p, mb),
+                    has_aux=True)(params)
+                acc = jax.tree.map(lambda a, b: a + b, acc, g)
+                return acc, met
+            split = jax.tree.map(
+                lambda x: x.reshape((nmicro, x.shape[0] // nmicro)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, mets = jax.lax.scan(micro, zero, split)
+            grads = jax.tree.map(lambda g: g / nmicro, grads)
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+
+        new_params, new_opt, om = opt.adamw_update(opt_cfg, params, grads,
+                                                   opt_state)
+        metrics = dict(metrics, **om)
+        return new_params, new_opt, metrics
+
+    pspecs = None
+
+    def shardings_for(params_shape):
+        nonlocal pspecs
+        pspecs = M.param_specs(cfg, pcfg, params_shape)
+        to_sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        param_sh = to_sh(pspecs)
+        opt_sh = {"mu": param_sh, "nu": param_sh,
+                  "step": NamedSharding(mesh, P())}
+        return param_sh, opt_sh
+
+    def jit_step(param_sh, opt_sh, batch_sh):
+        return jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1))
+
+    return step, shardings_for, jit_step

@@ -1,0 +1,99 @@
+"""Unit + property tests for the alpha-beta-gamma cost model (Tables III/IV)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+
+
+def test_optimal_c_closed_forms():
+    p = 256
+    assert cm.optimal_c("d15_no_elision", p=p) == pytest.approx(16.0)
+    assert cm.optimal_c("d15_replication_reuse", p=p) == pytest.approx(
+        math.sqrt(512))
+    assert cm.optimal_c("d15_local_fusion", p=p) == pytest.approx(
+        math.sqrt(128))
+    # reuse raises the optimal c, fusion lowers it (paper Fig. 1 insight)
+    assert (cm.optimal_c("d15_local_fusion", p=p)
+            < cm.optimal_c("d15_no_elision", p=p)
+            < cm.optimal_c("d15_replication_reuse", p=p))
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.sampled_from([16, 64, 256, 1024]),
+       phi=st.floats(0.01, 8.0))
+def test_property_closed_form_c_minimizes_words(p, phi):
+    """Table IV's c* must (approximately) minimize Table III's words."""
+    n, r = 1 << 20, 128
+    nnz = int(phi * n * r)
+    for alg in ("d15_no_elision", "d15_replication_reuse",
+                "d15_local_fusion", "s15_replication_reuse"):
+        cstar = cm.optimal_c(alg, p=p, phi=phi)
+        best = cm.best_c(alg, p=p, n=n, r=r, nnz=nnz)
+        # the best integer c must be within a factor ~2.1 of the continuous
+        # optimum (integrality + divisibility gaps)
+        if 1.0 <= cstar <= p:
+            assert best.c / cstar < 4.0 and cstar / best.c < 4.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.sampled_from([64, 256, 1024]), phi=st.floats(0.005, 4.0))
+def test_property_elision_saves_communication(p, phi):
+    """At their best c, both elision strategies beat the plain sequence."""
+    n, r = 1 << 20, 128
+    nnz = int(phi * n * r)
+    base = cm.best_c("d15_no_elision", p=p, n=n, r=r, nnz=nnz).words
+    reuse = cm.best_c("d15_replication_reuse", p=p, n=n, r=r, nnz=nnz).words
+    fused = cm.best_c("d15_local_fusion", p=p, n=n, r=r, nnz=nnz).words
+    assert reuse <= base + 1e-6
+    assert fused <= base + 1e-6
+
+
+def test_elision_limit_ratio():
+    """Paper: both strategies tend to 1/sqrt(2) of the unfused cost."""
+    p, n, r = 2 ** 16, 1 << 22, 256
+    nnz = n * 32
+    base = cm.best_c("d15_no_elision", p=p, n=n, r=r, nnz=nnz).words
+    reuse = cm.best_c("d15_replication_reuse", p=p, n=n, r=r, nnz=nnz).words
+    fused = cm.best_c("d15_local_fusion", p=p, n=n, r=r, nnz=nnz).words
+    assert reuse / base == pytest.approx(1 / math.sqrt(2), rel=0.08)
+    assert fused / base == pytest.approx(1 / math.sqrt(2), rel=0.08)
+
+
+def test_regime_rule_phi():
+    """Low phi -> sparse shifting wins; high phi -> dense shifting wins
+    (paper Fig. 6)."""
+    p, n, r = 32, 1 << 22, 128
+    lo = cm.select_algorithm(p=p, n=n, r=r, nnz=int(0.02 * n * r),
+                             candidates=("d15_replication_reuse",
+                                         "s15_replication_reuse"))
+    hi = cm.select_algorithm(p=p, n=n, r=r, nnz=int(2.0 * n * r),
+                             candidates=("d15_replication_reuse",
+                                         "s15_replication_reuse"))
+    assert next(iter(lo)) == "s15_replication_reuse"
+    assert next(iter(hi)) == "d15_replication_reuse"
+
+
+def test_weak_scaling_setup1_projection():
+    """Setup 1: communication time scales ~sqrt(p) for 1.5D algorithms."""
+    r, nnz_row = 256, 32
+    words = {}
+    for p in (4, 16, 64, 256):
+        n = 65536 * p
+        nnz = n * nnz_row
+        words[p] = cm.best_c("d15_no_elision", p=p, n=n, r=r, nnz=nnz).words
+    # words per proc ~ n*r/sqrt(p) ~ 65536*r*sqrt(p)
+    g1 = words[64] / words[16]
+    g2 = words[256] / words[64]
+    assert g1 == pytest.approx(2.0, rel=0.35)
+    assert g2 == pytest.approx(2.0, rel=0.35)
+
+
+def test_message_counts():
+    c1 = cm.words_fusedmm("d15_no_elision", p=64, c=4, n=1 << 16, r=64,
+                          nnz=1 << 18)
+    assert c1.messages == 2 * 64 / 4 + 2 * 3
+    c2 = cm.words_fusedmm("d15_local_fusion", p=64, c=4, n=1 << 16, r=64,
+                          nnz=1 << 18)
+    assert c2.messages == 64 / 4 + 2 * 3

@@ -1,0 +1,65 @@
+"""Multi-device correctness + comm-cost tests.
+
+XLA fixes the host device count at first backend init, so these run as
+subprocesses that force 8 CPU devices before importing jax.  Each script
+asserts internally and exits non-zero on failure.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "dist_scripts")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def run_script(name):
+    env = dict(os.environ)
+    # drop any inherited device-count flags (e.g. from importing
+    # repro.launch.dryrun in-process) — the scripts set their own
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, name)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, (
+        f"{name} failed:\nstdout:\n{proc.stdout[-4000:]}\n"
+        f"stderr:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_d15_all_modes_all_c():
+    out = run_script("check_d15.py")
+    assert "ALL D15 OK" in out
+
+
+@pytest.mark.slow
+def test_s15_all_modes_all_c():
+    out = run_script("check_s15.py")
+    assert "ALL S15 OK" in out
+
+
+@pytest.mark.slow
+def test_d25_all_modes():
+    out = run_script("check_d25.py")
+    assert "ALL D25 OK" in out
+
+
+@pytest.mark.slow
+def test_s25_all_modes():
+    out = run_script("check_s25.py")
+    assert "ALL S25 OK" in out
+
+
+@pytest.mark.slow
+def test_comm_costs_match_table3():
+    out = run_script("check_comm_costs.py")
+    assert "ALL COMM COSTS OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_remesh_8_to_4():
+    out = run_script("check_elastic.py")
+    assert "ELASTIC OK" in out

@@ -1,0 +1,174 @@
+"""Per-kernel validation: Pallas (interpret) vs pure-jnp oracle.
+
+Sweeps shapes/dtypes and runs hypothesis property tests on the kernel
+invariants (duality, linearity, masking).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse
+from repro.kernels import ops, ref
+
+
+def make_problem(m, n, r, nnz_per_row, seed, dtype=jnp.float32,
+                 row_tile=128, nz_block=64):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_per_row, seed=seed)
+    S = sparse.pack_row_tiled(rows, cols, vals, (m, n),
+                              row_tile=row_tile, nz_block=nz_block)
+    A = jnp.asarray(rng.standard_normal((m, r)), dtype)
+    B = jnp.asarray(rng.standard_normal((n, r)), dtype)
+    Sd = np.zeros((m, n), np.float32)
+    Sd[rows, cols] = vals
+    return S, A, B, jnp.asarray(Sd)
+
+
+SHAPES = [
+    (128, 128, 64, 4),
+    (256, 128, 128, 8),
+    (512, 384, 128, 8),
+    (384, 512, 256, 2),
+    (128, 640, 32, 16),
+]
+
+
+@pytest.mark.parametrize("m,n,r,k", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sddmm_matches_oracle(m, n, r, k, dtype):
+    S, A, B, Sd = make_problem(m, n, r, k, seed=m + r, dtype=dtype)
+    got = ops.sddmm(A, B, S).to_dense().astype(jnp.float32)
+    want = ref.sddmm_dense(A.astype(jnp.float32), B.astype(jnp.float32), Sd)
+    tol = 2e-5 if dtype == jnp.float32 else 0.12 * np.sqrt(r) / 8
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,n,r,k", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_matches_oracle(m, n, r, k, dtype):
+    S, A, B, Sd = make_problem(m, n, r, k, seed=2 * m + r, dtype=dtype)
+    got = ops.spmm(S, B).astype(jnp.float32)
+    want = Sd @ B.astype(jnp.float32)
+    tol = 2e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,n,r,k", SHAPES[:3])
+def test_fusedmm_matches_composition(m, n, r, k):
+    S, A, B, Sd = make_problem(m, n, r, k, seed=3 * m + r)
+    got_out, got_R = ops.fusedmm(A, B, S)
+    # fused == explicit SDDMM followed by explicit SpMM
+    R2 = ops.sddmm(A, B, S)
+    out2 = ops.spmm(R2, B)
+    np.testing.assert_allclose(np.asarray(got_out), np.asarray(out2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_R.vals), np.asarray(R2.vals),
+                               rtol=2e-5, atol=2e-5)
+    # ... and matches the dense oracle
+    want_out, _ = ref.fusedmm_dense(A, B, Sd)
+    np.testing.assert_allclose(np.asarray(got_out), np.asarray(want_out),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_spmmb_via_transpose_pack():
+    """SpMMB(S, A) == SpMMA(S^T, A): the paper stores a transposed copy."""
+    m, n, r = 256, 384, 64
+    rng = np.random.default_rng(7)
+    rows, cols, vals = sparse.erdos_renyi(m, n, 6, seed=7)
+    St = sparse.pack_row_tiled(cols, rows, vals, (n, m), row_tile=128,
+                               nz_block=64)
+    A = jnp.asarray(rng.standard_normal((m, r)), jnp.float32)
+    Sd = np.zeros((m, n), np.float32)
+    Sd[rows, cols] = vals
+    got = ops.spmm(St, A)
+    np.testing.assert_allclose(np.asarray(got), Sd.T @ np.asarray(A),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_empty_rows_are_zero():
+    """Row tiles with no nonzeros must produce exact zeros."""
+    m, n, r = 512, 128, 64
+    rows = np.array([0, 1, 2], np.int32)       # only tile 0 touched
+    cols = np.array([5, 6, 7], np.int32)
+    vals = np.ones(3, np.float32)
+    S = sparse.pack_row_tiled(rows, cols, vals, (m, n), row_tile=128,
+                              nz_block=64)
+    B = jnp.ones((n, r), jnp.float32)
+    out = np.asarray(ops.spmm(S, B))
+    assert np.all(out[128:] == 0.0)
+    assert np.all(out[:3] == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30),
+       m=st.sampled_from([128, 256]),
+       n=st.sampled_from([128, 256]),
+       r=st.sampled_from([32, 64, 128]),
+       k=st.integers(1, 12))
+def test_property_sddmm_equals_masked_gemm(seed, m, n, r, k):
+    S, A, B, Sd = make_problem(m, n, r, k, seed=seed)
+    got = ops.sddmm(A, B, S).to_dense()
+    want = Sd * (A @ B.T)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), alpha=st.floats(-2, 2))
+def test_property_spmm_linearity(seed, alpha):
+    """SpMM(alpha*S, B) == alpha * SpMM(S, B) (linearity in values)."""
+    S, A, B, Sd = make_problem(256, 128, 64, 4, seed=seed)
+    lhs = ops.spmm(S.with_vals(S.vals * alpha), B)
+    rhs = alpha * ops.spmm(S, B)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_sddmm_mask_idempotent(seed):
+    """SDDMM with vals=1 then re-sample == same sample values scaled."""
+    S, A, B, Sd = make_problem(128, 128, 32, 4, seed=seed)
+    ones = S.with_vals(jnp.where(S.vals != 0, 1.0, 0.0).astype(jnp.float32))
+    R1 = ops.sddmm(A, B, ones)
+    R2 = ops.sddmm(A, B, R1)  # samples (A B^T) again, scaled by R1
+    want = np.asarray(R1.vals) ** 2 / np.where(np.asarray(ones.vals) == 0, 1,
+                                               np.asarray(ones.vals))
+    np.testing.assert_allclose(np.asarray(R2.vals), want, rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_fused_equals_unfused(seed):
+    S, A, B, Sd = make_problem(256, 256, 64, 6, seed=seed)
+    fused_out, fused_R = ops.fusedmm(A, B, S)
+    R = ops.sddmm(A, B, S)
+    unfused = ops.spmm(R, B)
+    np.testing.assert_allclose(np.asarray(fused_out), np.asarray(unfused),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_packer_roundtrip():
+    """pack_row_tiled must preserve the matrix exactly."""
+    rows, cols, vals = sparse.erdos_renyi(384, 256, 5, seed=3)
+    S = sparse.pack_row_tiled(rows, cols, vals, (384, 256), row_tile=128,
+                              nz_block=32)
+    dense = np.zeros((384, 256), np.float32)
+    dense[rows, cols] = vals
+    np.testing.assert_array_equal(np.asarray(S.to_dense()), dense)
+    # row-window invariant
+    rg = np.asarray(S.rows_global())
+    base = np.asarray(S.tile_base)[:, None]
+    mask = np.asarray(S.vals) != 0
+    assert np.all((rg >= base)[mask] & (rg < base + S.row_tile)[mask])
+    # tile bases non-decreasing (Pallas revisit requirement)
+    assert np.all(np.diff(np.asarray(S.tile_base)) >= 0)

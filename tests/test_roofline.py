@@ -1,0 +1,90 @@
+"""Unit tests for the HLO parsing + roofline machinery."""
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_parse
+from repro.roofline.analysis import Roofline, analyse_record
+
+
+def test_shape_bytes():
+    assert hlo_parse.shape_bytes("f32[4,8]{1,0}") == 128
+    assert hlo_parse.shape_bytes("bf16[10]") == 20
+    assert hlo_parse.shape_bytes("(f32[2,2], u32[4])") == 32
+    assert hlo_parse.shape_bytes("pred[]") == 1
+    assert hlo_parse.shape_bytes("token[]") == 0
+
+
+HLO = """
+HloModule test
+
+%wloop_body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %gte = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %perm = f32[8,128]{1,0} collective-permute(%gte), source_target_pairs={{0,1},{1,0}}
+  %d = f32[8,8]{1,0} dot(%perm, %perm), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  ROOT %t = (s32[], f32[8,128]) tuple(%gte, %perm)
+}
+
+%wloop_cond (p2: (s32[], f32[8,128])) -> pred[] {
+  %p2 = (s32[], f32[8,128]) parameter(0)
+  ROOT %lt = pred[] compare(%p2, %p2), direction=LT
+}
+
+ENTRY %main (x: f32[8,128]) -> f32[8,128] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %ag = f32[16,128]{1,0} all-gather(%x), dimensions={0}
+  %w = (s32[], f32[8,128]) while(%x), condition=%wloop_cond, body=%wloop_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_totals_loop_aware():
+    tot = hlo_parse.collective_totals(HLO)
+    # permute: 8*128*4 bytes * 5 trips; all-gather wire: out - in = 4096
+    assert tot["wire_bytes"] == 5 * 4096 + 4096
+    assert tot["total_count" if "total_count" in tot else "count"] == 6
+
+
+def test_program_totals_loop_aware_flops():
+    tot = hlo_parse.program_totals(HLO)
+    # dot: 2 * 8*8 * 128 flops * 5 trips
+    assert tot["dot_flops"] == 5 * 2 * 8 * 8 * 128
+    assert tot["bytes_touched"] > 0
+
+
+def make_rec(flops=1e12, byts=1e10, wire=1e9, shape="train_4k",
+             kind="train", multi_pod=False, n=1e9):
+    return dict(arch="x", shape=shape, kind=kind, multi_pod=multi_pod,
+                active_params=n,
+                program={"dot_flops": flops, "bytes_touched": byts},
+                cost={}, collectives={"total_wire_bytes": wire},
+                memory={"temp_size_in_bytes": 0})
+
+
+def test_roofline_terms_and_dominant():
+    r = analyse_record(make_rec(flops=197e12, byts=819e9, wire=50e9))
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(1.0)
+    r2 = analyse_record(make_rec(wire=500e9))
+    assert r2.dominant == "collective"
+    r3 = analyse_record(make_rec(byts=900e10, wire=1))
+    assert r3.dominant == "memory"
+
+
+def test_roofline_fraction_bounded():
+    # ideal == bound -> fraction near chips-normalized value
+    rec = make_rec(flops=1e12, byts=1, wire=1, n=1e9)
+    r = analyse_record(rec)
+    assert 0 < r.roofline_fraction
+    # MODEL_FLOPS = 6*N*D; per-chip ideal seconds
+    ideal = r.model_flops / (256 * 197e12)
+    assert r.roofline_fraction == pytest.approx(ideal / r.compute_s)
+
+
+def test_useful_ratio():
+    rec = make_rec(flops=1e12, n=1e9)
+    r = analyse_record(rec)
+    d = 256 * 4096
+    assert r.useful_ratio == pytest.approx(6 * 1e9 * d / (1e12 * 256))
