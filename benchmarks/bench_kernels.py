@@ -3,35 +3,86 @@
 On-CPU interpret timings are functional, not TPU projections; the derived
 column reports useful GFLOP/s and the Pallas/ref ratio so regressions in
 the kernel structure show up in CI.
+
+Besides the fixed-shape baseline rows, this sweeps the VMEM tiling knobs
+(``r_tile`` x ``blocks_per_step``, see DESIGN.md) over grouped packs and
+writes the full record set to ``BENCH_kernels.json`` so the perf
+trajectory of the tiled kernels is machine-readable from PR to PR.
 """
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import sparse
+from repro.core import costmodel, sparse
 from repro.kernels import ops, ref
 
+JSON_PATH = "BENCH_kernels.json"
 
-def run(out):
+
+def _kernel_cases(S, Aj, Bj, nnz, r, tiling=None):
+    kw = {} if tiling is None else dict(r_tile=tiling[0],
+                                        blocks_per_step=tiling[1])
+    return (
+        ("sddmm", lambda: ops.sddmm(Aj, Bj, S, **kw),
+         lambda: ref.sddmm(Aj, Bj, S), 2 * nnz * r),
+        ("spmm", lambda: ops.spmm(S, Bj, **kw),
+         lambda: ref.spmm(S, Bj), 2 * nnz * r),
+        ("fusedmm", lambda: ops.fusedmm(Aj, Bj, S, **kw),
+         lambda: ref.fusedmm(Aj, Bj, S), 4 * nnz * r),
+    )
+
+
+def run(out, json_path=JSON_PATH):
+    records = []
+
+    # --- fixed-shape baseline (cost-model default tiling)
     for (m, n, r, k) in ((2048, 2048, 64, 8), (4096, 4096, 128, 16)):
         rows, cols, vals, A, B = common.er_problem(m, n, r, k, seed=0)
         S = sparse.pack_row_tiled(rows, cols, vals, (m, n), row_tile=256,
                                   nz_block=256)
         Aj, Bj = jnp.asarray(A), jnp.asarray(B)
         nnz = len(vals)
-        for name, fn_p, fn_r, flops in (
-            ("sddmm", lambda: ops.sddmm(Aj, Bj, S),
-             lambda: ref.sddmm(Aj, Bj, S), 2 * nnz * r),
-            ("spmm", lambda: ops.spmm(S, Bj),
-             lambda: ref.spmm(S, Bj), 2 * nnz * r),
-            ("fusedmm", lambda: ops.fusedmm(Aj, Bj, S),
-             lambda: ref.fusedmm(Aj, Bj, S), 4 * nnz * r),
-        ):
+        for name, fn_p, fn_r, flops in _kernel_cases(S, Aj, Bj, nnz, r):
             tp = common.timeit(fn_p, iters=2)
             tr = common.timeit(fn_r, iters=2)
             out(common.csv_line(
                 f"kernel.{name}.m{m}.r{r}", tp,
                 f"gflops={flops / tp / 1e9:.2f};ref_ratio={tp / tr:.2f}"))
+            records.append(dict(name=name, m=m, n=n, r=r, nnz=nnz,
+                                seconds=tp, ref_seconds=tr, flops=flops,
+                                r_tile=None, blocks_per_step=None,
+                                sweep="baseline"))
+
+    # --- tiling-knob sweep on a grouped pack
+    m = n = 2048
+    r, k = 256, 8
+    rows, cols, vals, A, B = common.er_problem(m, n, r, k, seed=1)
+    S = sparse.pack_row_tiled(rows, cols, vals, (m, n), row_tile=256,
+                              nz_block=128, group=4)
+    Aj, Bj = jnp.asarray(A), jnp.asarray(B)
+    nnz = len(vals)
+    max_bps = costmodel.groupable_blocks_per_step(
+        np.asarray(S.tile_base), S.nz_block, cap=4)
+    for r_tile in (r, r // 2, r // 4):
+        for bps in (1, 2, 4):
+            if bps > max_bps or S.nblocks % bps:
+                continue
+            tiling = (r_tile, bps)
+            for name, fn_p, fn_r, flops in _kernel_cases(
+                    S, Aj, Bj, nnz, r, tiling):
+                tp = common.timeit(fn_p, iters=2)
+                out(common.csv_line(
+                    f"kernel.{name}.rt{r_tile}.bps{bps}", tp,
+                    f"gflops={flops / tp / 1e9:.2f}"))
+                records.append(dict(name=name, m=m, n=n, r=r, nnz=nnz,
+                                    seconds=tp, flops=flops, r_tile=r_tile,
+                                    blocks_per_step=bps, sweep="tiling"))
+
+    path = common.emit_json(json_path, records,
+                            meta=dict(bench="kernels",
+                                      nz_block=int(S.nz_block),
+                                      max_bps=int(max_bps)))
+    out(f"# wrote {path}")
 
 
 if __name__ == "__main__":

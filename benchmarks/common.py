@@ -1,11 +1,34 @@
-"""Shared benchmark utilities: timing, grids, problem builders, CSV."""
+"""Shared benchmark utilities: timing, grids, problem builders, CSV/JSON."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def emit_json(path: str, records: list, meta: dict | None = None) -> str:
+    """Write a machine-readable benchmark artifact (list of dict records).
+
+    Every record should carry at least {"name": ..., "seconds": ...}; extra
+    keys (config knobs, derived metrics) ride along.  The artifact makes
+    the perf trajectory diffable across PRs.
+    """
+    doc = {
+        "schema": "repro-bench-v1",
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "meta": meta or {},
+        "records": records,
+    }
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def timeit(fn, *args, warmup=1, iters=3):

@@ -3,17 +3,41 @@
 Planners run once on the host (numpy) — the analogue of the paper's
 amortized preprocessing — and produce static-shape, device-placed pytrees
 that the jitted shard_map executors consume repeatedly.
+
+Two planner-level decisions feed the VMEM-tiled kernels (see DESIGN.md):
+
+* packs are padded per *phase* (1.5D dense-shifting) or per *device*
+  (traveling packs) rather than to one global ``nbmax``, so a phase with
+  few nonzero blocks no longer pays for the densest phase;
+* each pack carries a static :class:`repro.core.costmodel.Tiling`
+  (``r_tile``/``blocks_per_step``) chosen at plan time from the concrete
+  block structure, which the executors thread into every local kernel call.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import costmodel
 from repro.core.sparse import RowTiledCOO, pack_row_tiled
+
+try:  # jax >= 0.5 exposes shard_map at the top level with check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    """Version-portable jax.shard_map with replication checking off."""
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})
 
 
 def extract_block(rows, cols, vals, r0, r1, c0, c1):
@@ -44,15 +68,20 @@ def block_partition(rows, cols, vals, row_size, col_size, n_col_blocks):
     return out
 
 
-def pack_block_list(blocks, shape, row_tile, nz_block):
+def pack_block_list(blocks, shape, row_tile, nz_block, group: int = 1):
     """Pack a list of COO blocks to RowTiled arrays with a common nblocks.
 
     blocks: list of (rows, cols, vals) numpy triples, all logical `shape`.
+    The common block count is the max over *this list only* — callers that
+    used to stack every phase into one array now call this once per phase,
+    so each phase is padded to its own densest device, not the global max.
     Returns stacked numpy arrays (N, nb, k), (N, nb, k), (N, nb, k), (N, nb).
     """
     packs = [pack_row_tiled(r, c, v, shape, row_tile=row_tile,
-                            nz_block=nz_block) for (r, c, v) in blocks]
+                            nz_block=nz_block, group=group)
+             for (r, c, v) in blocks]
     nbmax = max(p.nblocks for p in packs)
+    nbmax = ((nbmax + group - 1) // group) * group
     rl = np.zeros((len(packs), nbmax, nz_block), np.int32)
     cl = np.zeros((len(packs), nbmax, nz_block), np.int32)
     vl = np.zeros((len(packs), nbmax, nz_block), np.float32)
@@ -65,6 +94,25 @@ def pack_block_list(blocks, shape, row_tile, nz_block):
         tb[i, :nb] = np.asarray(p.tile_base)
         tb[i, nb:] = tb[i, nb - 1] if nb else 0   # keep bases monotone
     return rl, cl, vl, tb
+
+
+def plan_tiling(tile_base: np.ndarray, *, n_b: int, r: int, k: int,
+                row_tile: int) -> costmodel.Tiling:
+    """Choose the kernel tiling for a stacked pack at plan time (host)."""
+    nb = tile_base.shape[-1]
+    return costmodel.choose_tiling(n_b=n_b, r=r, nb=nb, k=k,
+                                   row_tile=row_tile, tile_base=tile_base)
+
+
+def merge_tilings(tilings) -> costmodel.Tiling:
+    """Conservative merge across phases: knobs every phase supports."""
+    tilings = list(tilings)
+    r_tile = tilings[0].r_tile
+    bps = tilings[0].blocks_per_step
+    for t in tilings[1:]:
+        r_tile = math.gcd(r_tile, t.r_tile)
+        bps = math.gcd(bps, t.blocks_per_step)
+    return costmodel.Tiling(r_tile=r_tile, blocks_per_step=bps)
 
 
 def coo_of(rows_local, cols, vals, tile_base, shape, row_tile) -> RowTiledCOO:
@@ -83,21 +131,38 @@ def choose_row_tile(height: int, want: int = 256) -> int:
 @dataclasses.dataclass(frozen=True, eq=False)   # identity semantics:
 # numpy arrays inside static pytree metadata must not be __eq__-compared
 class BlockMeta:
-    """Host-side metadata to reassemble stacked sparse outputs densely."""
+    """Host-side metadata to reassemble stacked sparse outputs densely.
+
+    ``row_offsets``/``col_offsets`` carry one entry per stacked block; for
+    per-phase packs (1.5D dense shifting) the *leading* axis is the phase
+    and the block arrays arrive as a tuple with one stacked array per
+    phase (ragged block counts across phases are fine).
+    """
     row_offsets: np.ndarray  # (...,) global row offset per block
     col_offsets: np.ndarray  # (...,) global col offset per block
     shape: Tuple[int, int]
 
     def to_dense(self, rows_local, cols, vals, tile_base, row_tile=None):
         """Scatter stacked (..., nb, k) block arrays into a dense matrix."""
+        out = np.zeros(self.shape, np.float64)
+        if isinstance(rows_local, (tuple, list)):   # per-phase ragged packs
+            for t in range(len(rows_local)):
+                self._scatter(out, rows_local[t], cols[t], vals[t],
+                              tile_base[t], self.row_offsets[t],
+                              self.col_offsets[t])
+        else:
+            self._scatter(out, rows_local, cols, vals, tile_base,
+                          self.row_offsets, self.col_offsets)
+        return out.astype(np.float32)
+
+    @staticmethod
+    def _scatter(out, rows_local, cols, vals, tile_base, row_off, col_off):
         rows_local = np.asarray(rows_local)
         cols = np.asarray(cols)
         vals = np.asarray(vals)
         tile_base = np.asarray(tile_base)
-        out = np.zeros(self.shape, np.float64)
-        flat_ro = self.row_offsets.reshape(-1)
-        flat_co = self.col_offsets.reshape(-1)
-        nblk = rows_local.shape[:-2]
+        flat_ro = np.asarray(row_off).reshape(-1)
+        flat_co = np.asarray(col_off).reshape(-1)
         rl = rows_local.reshape(-1, *rows_local.shape[-2:])
         cl = cols.reshape(-1, *cols.shape[-2:])
         vl = vals.reshape(-1, *vals.shape[-2:])
@@ -107,4 +172,3 @@ class BlockMeta:
             c = cl[b].reshape(-1) + flat_co[b]
             v = vl[b].reshape(-1)
             np.add.at(out, (r[v != 0], c[v != 0]), v[v != 0])
-        return out.astype(np.float32)

@@ -1,4 +1,4 @@
-"""Alpha-beta-gamma communication model for FusedMM algorithms.
+"""Alpha-beta-gamma communication model + local-kernel tiling model.
 
 Implements the paper's Table III (latency/bandwidth costs per algorithm,
 embedded in the FusedMM procedure) and Table IV (optimal replication
@@ -15,6 +15,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Dict
+
+import numpy as np
 
 ALGORITHMS = (
     "d15_no_elision",        # 1.5D dense shift, unoptimized SDDMM;SpMM
@@ -149,3 +151,97 @@ def select_algorithm(*, p: int, n: int, r: int, nnz: int,
 def flops_fusedmm(nnz: int, r: int) -> int:
     """Local FLOPs for one FusedMM: SDDMM (2r per nnz) + SpMM (2r per nnz)."""
     return 4 * nnz * r
+
+
+# ---------------------------------------------------------------------------
+# Local kernel tiling model (VMEM residency + grid amortization)
+# ---------------------------------------------------------------------------
+
+# Per-core VMEM on current TPUs is ~16 MiB; leave half for Pallas double
+# buffering, semaphores and the compiler's own temporaries.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# Target contraction depth of the one-hot matmul: the MXU is 128x128, so
+# K >= 256 keeps the systolic array busy; beyond ~1024 the gather cost of
+# the nonzero rows dominates.
+_TARGET_STEP_NNZ = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """Static tiling knobs for the local Pallas kernels.
+
+    r_tile           -- width of the embedding-dimension slab brought into
+                        VMEM per grid step (divides r)
+    blocks_per_step  -- how many nonzero blocks one grid step consumes
+                        (divides nblocks; all blocks of a step must share a
+                        tile_base, see sparse.pack_row_tiled(group=...))
+    """
+    r_tile: int
+    blocks_per_step: int
+
+    def kernel_kwargs(self) -> dict:
+        """Keyword arguments for the ops.py kernel wrappers."""
+        return dict(r_tile=self.r_tile, blocks_per_step=self.blocks_per_step)
+
+
+def _divisors_desc(x: int):
+    return sorted((d for d in range(1, x + 1) if x % d == 0), reverse=True)
+
+
+def groupable_blocks_per_step(tile_base, nz_block: int, *,
+                              cap: int | None = None) -> int:
+    """Largest feasible blocks_per_step for a concrete pack.
+
+    ``tile_base`` is a (..., nb) array of per-block window bases; a group
+    size g is feasible iff every aligned run of g consecutive blocks (in
+    every leading slot) shares one base, so a single output window covers
+    the whole grid step.  Returns the largest feasible divisor of nb whose
+    merged step stays near the MXU-friendly contraction depth.
+    """
+    tb = np.asarray(tile_base)
+    nb = tb.shape[-1]
+    if nb == 0:
+        return 1
+    flat = tb.reshape(-1, nb)
+    cap = cap if cap is not None else max(_TARGET_STEP_NNZ // max(nz_block, 1),
+                                          1)
+    for g in _divisors_desc(nb):
+        if g > cap:
+            continue
+        groups = flat.reshape(flat.shape[0], nb // g, g)
+        if bool((groups == groups[..., :1]).all()):
+            return g
+    return 1
+
+
+def choose_tiling(*, n_b: int, r: int, nb: int, k: int, row_tile: int,
+                  itemsize: int = 4,
+                  vmem_budget: int = VMEM_BUDGET_BYTES,
+                  tile_base=None) -> Tiling:
+    """Pick (r_tile, blocks_per_step) from VMEM budget and pack statistics.
+
+    The dominant VMEM resident per grid step is the local B tile slab
+    (n_b x r_tile) plus one (row_tile x r_tile) window each for the
+    gathered-A / accumulator sides, all double-buffered by the Pallas
+    pipeline.  r_tile is the largest divisor of r that fits; the lane width
+    (128) is preferred as a lower bound so slabs stay MXU-aligned.
+
+    blocks_per_step amortizes grid/dispatch overhead for small-k packs and
+    deepens the one-hot matmul contraction; it is only raised when a
+    concrete ``tile_base`` proves the pack groupable (traced packs fall
+    back to 1 — distributed planners pass pack stats at plan time).
+    """
+    per_col = 2 * (n_b + 2 * row_tile) * itemsize  # x2: double buffering
+    r_tile = r
+    for d in _divisors_desc(r):
+        r_tile = d
+        if d * per_col <= vmem_budget or d <= 128:
+            break
+    if tile_base is None:
+        bps = 1
+    else:
+        bps = groupable_blocks_per_step(tile_base, k)
+        if nb % bps:
+            bps = 1
+    return Tiling(r_tile=r_tile, blocks_per_step=bps)

@@ -8,8 +8,19 @@ matrix PROPAGATES via cyclic shifts within each layer.
 Block schedule: A row-block i lives on device (i // c, i % c).  B row-block
 j starts on device (j // c, j % c); after t shifts device (u, v) holds
 B block ((u - t) mod L) * c + v.  The planner materializes, for every
-(device, phase), the row-tiled pack of the S block the local kernel needs,
-so the jitted executor is a pure scan of {local kernel; ppermute}.
+(device, phase), the row-tiled pack of the S block the local kernel needs
+— padded per *phase*, so a sparse phase no longer pays the densest phase's
+block count — plus a static kernel tiling chosen from the pack statistics.
+
+Comm/compute overlap (see DESIGN.md): every phase loop is Python-unrolled
+with a double-buffered carry — the cyclic ``ppermute`` of the *next* B
+shard is issued before the local kernel consumes the current one, so shift
+latency hides behind SDDMM/SpMM/FusedMM compute.  Where the traveling
+buffer itself accumulates kernel output (SpMMB, FusedMMB), the *next*
+phase's local contribution is instead precomputed from stationary data
+while the current shift is in flight.  ``overlap=False`` reproduces the
+serial compute-then-shift schedule (numerically identical; kept for A/B
+benchmarking and the equivalence tests).
 
 Modes (unified, per the paper's SpMM<->SDDMM conversion):
   sddmm_d15   : R = S * (A @ B.T)          A replicated-in, B shifts
@@ -28,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import common
+from repro.core import common, costmodel
 from repro.core.grid import Grid15
 from repro.kernels import ops
 
@@ -36,16 +47,21 @@ from repro.kernels import ops
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PlanD15:
-    """Device-placed per-(device, phase) packs of S (and S^T)."""
-    rows_local: jax.Array   # (L, c, T, nb, k) int32
-    cols: jax.Array
-    vals: jax.Array
-    tile_base: jax.Array    # (L, c, T, nb)
+    """Device-placed per-(device, phase) packs of S (and S^T).
+
+    Each field is a tuple with one stacked array per phase; block counts
+    may differ across phases (per-phase padding).
+    """
+    rows_local: Tuple[jax.Array, ...]   # T x (L, c, nb_t, k) int32
+    cols: Tuple[jax.Array, ...]
+    vals: Tuple[jax.Array, ...]
+    tile_base: Tuple[jax.Array, ...]    # T x (L, c, nb_t)
     m: int = dataclasses.field(metadata=dict(static=True))
     n: int = dataclasses.field(metadata=dict(static=True))
     r: int = dataclasses.field(metadata=dict(static=True))
     row_tile: int = dataclasses.field(metadata=dict(static=True))
     transpose: bool = dataclasses.field(metadata=dict(static=True))
+    tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     # host-only metadata (not traced):
     meta: object = dataclasses.field(metadata=dict(static=True))
 
@@ -74,11 +90,12 @@ class MetaD15:
 
 def plan_d15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
              transpose: bool = False, row_tile: int = 256,
-             nz_block: int = 256) -> PlanD15:
+             nz_block: int = 256, group: int = 1) -> PlanD15:
     """Pack S for the 1.5D dense-shifting schedule (host, amortized).
 
     transpose=True packs S^T blocks (needed by replication-reuse FusedMM
-    and by SpMMB — the paper stores both copies, §IV-B).
+    and by SpMMB — the paper stores both copies, §IV-B).  ``group`` pads
+    window runs so ``blocks_per_step`` up to ``group`` stays feasible.
     """
     L, c, p = grid.L, grid.c, grid.p
     assert m % p == 0 and n % p == 0, (m, n, p)
@@ -91,36 +108,47 @@ def plan_d15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
                                   np.asarray(vals), cmA, nB, p)
     empty = (np.zeros(0, np.int32), np.zeros(0, np.int32),
              np.zeros(0, np.float32))
-    blocks, row_off, col_off = [], [], []
-    for u in range(L):
-        for v in range(c):
-            for t in range(L):
+    sh5 = grid.sharding("layer", "fiber")
+    rls, cls, vls, tbs, tilings = [], [], [], [], []
+    row_off = np.zeros((L, L, c), np.int64)   # (phase, layer, fiber)
+    col_off = np.zeros((L, L, c), np.int64)
+    n_dense = cmA if transpose else nB        # rows of the gathered/shifted
+    for t in range(L):                        # dense operand fed to kernels
+        blocks = []
+        for u in range(L):
+            for v in range(c):
                 j = ((u - t) % L) * c + v
                 br, bc, bv = part.get((u, j), empty)
                 if transpose:
                     br, bc = bc, br
-                    row_off.append(j * nB), col_off.append(u * cmA)
+                    row_off[t, u, v], col_off[t, u, v] = j * nB, u * cmA
                 else:
-                    row_off.append(u * cmA), col_off.append(j * nB)
+                    row_off[t, u, v], col_off[t, u, v] = u * cmA, j * nB
                 blocks.append((br, bc, bv))
-    rl, cl, vl, tb = common.pack_block_list(blocks, blk_shape, row_tile,
-                                            nz_block)
-    shp = (L, c, L) + rl.shape[1:]
-    sh5 = grid.sharding("layer", "fiber")
+        rl, cl, vl, tb = common.pack_block_list(blocks, blk_shape, row_tile,
+                                                nz_block, group=group)
+        tilings.append(common.plan_tiling(tb, n_b=n_dense, r=r,
+                                          k=nz_block, row_tile=row_tile))
+        shp = (L, c) + rl.shape[1:]
+        rls.append(jax.device_put(rl.reshape(shp), sh5))
+        cls.append(jax.device_put(cl.reshape(shp), sh5))
+        vls.append(jax.device_put(vl.reshape(shp), sh5))
+        tbs.append(jax.device_put(tb.reshape((L, c) + tb.shape[1:]), sh5))
+
     meta = MetaD15(cmA, nB, common.BlockMeta(
-        np.array(row_off).reshape(L, c, L),
-        np.array(col_off).reshape(L, c, L),
-        (n, m) if transpose else (m, n)))
-    return PlanD15(
-        jax.device_put(rl.reshape(shp), sh5),
-        jax.device_put(cl.reshape(shp), sh5),
-        jax.device_put(vl.reshape(shp), sh5),
-        jax.device_put(tb.reshape((L, c, L) + tb.shape[1:]), sh5),
-        m, n, r, row_tile, transpose, meta)
+        row_off, col_off, (n, m) if transpose else (m, n)))
+    return PlanD15(tuple(rls), tuple(cls), tuple(vls), tuple(tbs),
+                   m, n, r, row_tile, transpose,
+                   common.merge_tilings(tilings), meta)
 
 
-def _coo(plan: PlanD15, s):
-    rl, cl, vl, tb = s
+def _s(s, t):
+    """Phase-t local pack (drop the (layer, fiber) unit dims)."""
+    return tuple(x[t][0, 0] for x in s)
+
+
+def _coo(plan: PlanD15, s_t):
+    rl, cl, vl, tb = s_t
     return common.coo_of(rl, cl, vl, tb, plan.block_shape, plan.row_tile)
 
 
@@ -130,81 +158,115 @@ def _shift(x, axis_name, size):
 
 
 def _exec(grid: Grid15, plan: PlanD15, body, A, B, out_specs):
-    """Common shard_map/jit harness; S pack enters with (layer,fiber) dims."""
+    """Common shard_map/jit harness; S packs enter with (layer,fiber) dims."""
     mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
     s_spec = P(lay, fib)
-    fn = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=((s_spec,) * 4, P((lay, fib)), P((lay, fib))),
-        out_specs=out_specs, check_vma=False)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
+    s_specs = jax.tree_util.tree_map(lambda _: s_spec, s_pack)
+    fn = common.shard_map(
+        body, mesh=mesh,
+        in_specs=(s_specs, P((lay, fib)), P((lay, fib))),
+        out_specs=out_specs)
     return fn(s_pack, A, B)
 
 
-def _squeeze_s(s):
-    return tuple(x[0, 0] for x in s)   # drop (layer, fiber) unit dims
+def _sddmm_phases(plan, T, B0, s, L, lay, overlap, swap=False):
+    """L SDDMM phases against a shifting B; returns (vals list, B home).
+
+    Overlapped: the shift of B for phase t+1 is issued before the phase-t
+    kernel, so it has no consumer inside the phase and hides behind it.
+    """
+    tk = plan.tiling.kernel_kwargs()
+    vals_out = []
+    B_cur = B0
+    B_nxt = _shift(B0, lay, L) if overlap else None
+    for t in range(L):
+        coo = _coo(plan, _s(s, t))
+        args = (B_cur, T) if swap else (T, B_cur)
+        vals_out.append(ops.sddmm(*args, coo, **tk).vals)
+        if overlap:
+            B_cur = B_nxt
+            if t + 1 < L:
+                B_nxt = _shift(B_nxt, lay, L)
+        else:
+            B_cur = _shift(B_cur, lay, L)
+    return vals_out, B_cur
 
 
 # ---------------------------------------------------------------------------
 # Unified Algorithm 1: SDDMM / SpMMA / SpMMB
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def sddmm_d15(grid: Grid15, plan: PlanD15, A, B):
-    """R = S * (A @ B.T); returns stacked vals (L, c, T, nb, k)."""
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("overlap",))
+def sddmm_d15(grid: Grid15, plan: PlanD15, A, B, overlap: bool = True):
+    """R = S * (A @ B.T); returns per-phase vals, T x (L, c, nb_t, k)."""
     lay, fib, L = grid.layer, grid.fiber, grid.L
 
     def body(s, A_loc, B_loc):
-        s = _squeeze_s(s)
         T = jax.lax.all_gather(A_loc, fib, tiled=True)     # (c m/p, r)
+        r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap)
+        return tuple(v[None, None] for v in r_vals)
 
-        def phase(B_cur, s_t):
-            vals = ops.sddmm(T, B_cur, _coo(plan, s_t)).vals
-            return _shift(B_cur, lay, L), vals
-
-        _, r_vals = jax.lax.scan(phase, B_loc, s)
-        return r_vals[None, None]
-
-    return _exec(grid, plan, body, A, B, P(lay, fib))
+    return _exec(grid, plan, body, A, B,
+                 tuple(P(lay, fib) for _ in range(L)))
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def spmma_d15(grid: Grid15, plan: PlanD15, B):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("overlap",))
+def spmma_d15(grid: Grid15, plan: PlanD15, B, overlap: bool = True):
     """A = S @ B with A replicated as output, reduce-scattered at the end."""
     lay, fib, L, c = grid.layer, grid.fiber, grid.L, grid.c
+    tk = plan.tiling.kernel_kwargs()
 
     def body(s, _unused, B_loc):
-        s = _squeeze_s(s)
-        T0 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
-
-        def phase(carry, s_t):
-            B_cur, T = carry
-            T = T + ops.spmm(_coo(plan, s_t), B_cur, m=plan.cmA)
-            return (_shift(B_cur, lay, L), T), None
-
-        (_, T), _ = jax.lax.scan(phase, (B_loc, T0), s)
+        T = jnp.zeros((plan.cmA, plan.r), jnp.float32)
+        B_cur = B_loc
+        B_nxt = _shift(B_loc, lay, L) if overlap else None
+        for t in range(L):
+            T = T + ops.spmm(_coo(plan, _s(s, t)), B_cur, m=plan.cmA, **tk)
+            if overlap:
+                B_cur = B_nxt
+                if t + 1 < L:
+                    B_nxt = _shift(B_nxt, lay, L)
+            else:
+                B_cur = _shift(B_cur, lay, L)
         return jax.lax.psum_scatter(T, fib, scatter_dimension=0, tiled=True)
 
     dummy = jnp.zeros((grid.p, 1), jnp.float32)  # placeholder A slot
     return _exec(grid, plan, body, dummy, B, P((lay, fib)))
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def spmmb_d15(grid: Grid15, plan: PlanD15, A):
-    """B = S.T @ A: A replicated-in; the shifting B buffer accumulates."""
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("overlap",))
+def spmmb_d15(grid: Grid15, plan: PlanD15, A, overlap: bool = True):
+    """B = S.T @ A: A replicated-in; the shifting B buffer accumulates.
+
+    The traveling buffer is an accumulator, so its shift depends on the
+    local kernel; overlap instead precomputes the *next* phase's local
+    contribution (stationary S^T against the gathered T) while the shift
+    is in flight — only the cheap add serializes with communication.
+    """
     assert plan.transpose, "spmmb_d15 needs a transpose-packed plan"
     lay, fib, L = grid.layer, grid.fiber, grid.L
+    tk = plan.tiling.kernel_kwargs()
 
     def body(s, A_loc, B0):
-        s = _squeeze_s(s)
         T = jax.lax.all_gather(A_loc, fib, tiled=True)
-
-        def phase(B_cur, s_t):
-            B_cur = B_cur + ops.spmm(_coo(plan, s_t), T, m=plan.nB)
-            return _shift(B_cur, lay, L), None
-
-        B_out, _ = jax.lax.scan(phase, B0, s)
-        return B_out   # full cycle: home again
+        B_cur = B0
+        if overlap:
+            contrib = ops.spmm(_coo(plan, _s(s, 0)), T, m=plan.nB, **tk)
+            for t in range(L):
+                B_cur = _shift(B_cur + contrib, lay, L)
+                if t + 1 < L:
+                    contrib = ops.spmm(_coo(plan, _s(s, t + 1)), T,
+                                       m=plan.nB, **tk)
+        else:
+            for t in range(L):
+                B_cur = B_cur + ops.spmm(_coo(plan, _s(s, t)), T,
+                                         m=plan.nB, **tk)
+                B_cur = _shift(B_cur, lay, L)
+        return B_cur   # full cycle: home again
 
     zeros = jnp.zeros((plan.n, plan.r), jnp.float32)
     zeros = jax.device_put(zeros, grid.sharding((lay, fib)))
@@ -215,92 +277,99 @@ def spmmb_d15(grid: Grid15, plan: PlanD15, A):
 # FusedMM with the paper's three strategies
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("elision",))
-def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "none"):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("elision", "overlap"))
+def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "none",
+                overlap: bool = True):
     """FusedMM on the 1.5D dense-shifting grid.
 
     elision="none"  : FusedMMA, SDDMM then SpMMA (2 rounds, AG + RS)
     elision="reuse" : FusedMMB on the S^T pack (2 rounds, single AG)
     elision="fused" : FusedMMA via the fused local kernel (1 round, AG + RS)
 
-    Returns (out_dense, R_vals_stacked).
+    Returns (out_dense, per-phase R_vals tuple).
     """
     lay, fib, L = grid.layer, grid.fiber, grid.L
+    tk = plan.tiling.kernel_kwargs()
+    r_specs = tuple(P(lay, fib) for _ in range(L))
 
     if elision == "none":
         assert not plan.transpose
 
         def body(s, A_loc, B_loc):
-            s = _squeeze_s(s)
             T = jax.lax.all_gather(A_loc, fib, tiled=True)
-
-            def phase1(B_cur, s_t):
-                vals = ops.sddmm(T, B_cur, _coo(plan, s_t)).vals
-                return _shift(B_cur, lay, L), vals
-
-            B_home, r_vals = jax.lax.scan(phase1, B_loc, s)
+            r_vals, B_cur = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap)
             T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
-
-            def phase2(carry, inp):
-                s_t, rv = inp
-                B_cur, T2 = carry
-                R_t = _coo(plan, s_t).with_vals(rv)
-                T2 = T2 + ops.spmm(R_t, B_cur, m=plan.cmA)
-                return (_shift(B_cur, lay, L), T2), None
-
-            (_, T2), _ = jax.lax.scan(phase2, (B_home, T2), (s, r_vals))
+            B_nxt = _shift(B_cur, lay, L) if overlap else None
+            for t in range(L):
+                R_t = _coo(plan, _s(s, t)).with_vals(r_vals[t])
+                T2 = T2 + ops.spmm(R_t, B_cur, m=plan.cmA, **tk)
+                if overlap:
+                    B_cur = B_nxt
+                    if t + 1 < L:
+                        B_nxt = _shift(B_nxt, lay, L)
+                else:
+                    B_cur = _shift(B_cur, lay, L)
             out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
                                        tiled=True)
-            return out, r_vals[None, None]
+            return out, tuple(v[None, None] for v in r_vals)
 
-        return _exec(grid, plan, body, A, B, (P((lay, fib)), P(lay, fib)))
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs))
 
     if elision == "reuse":
         # FusedMMB: replicate A once; it serves the SDDMM *and* the SpMMB.
         assert plan.transpose, "reuse needs a transpose-packed plan"
 
         def body(s, A_loc, B_loc):
-            s = _squeeze_s(s)
             T = jax.lax.all_gather(A_loc, fib, tiled=True)   # single AG
+            # sampled <B_j, A_i> on the S^T layout
+            r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap,
+                                      swap=True)
+            out_cur = jnp.zeros((plan.nB, plan.r), jnp.float32)
+            if overlap:
+                contrib = ops.spmm(
+                    _coo(plan, _s(s, 0)).with_vals(r_vals[0]), T,
+                    m=plan.nB, **tk)
+                for t in range(L):
+                    out_cur = _shift(out_cur + contrib, lay, L)
+                    if t + 1 < L:
+                        contrib = ops.spmm(
+                            _coo(plan, _s(s, t + 1)).with_vals(r_vals[t + 1]),
+                            T, m=plan.nB, **tk)
+            else:
+                for t in range(L):
+                    Rt = _coo(plan, _s(s, t)).with_vals(r_vals[t])
+                    out_cur = out_cur + ops.spmm(Rt, T, m=plan.nB, **tk)
+                    out_cur = _shift(out_cur, lay, L)
+            # out home after full cycle
+            return out_cur, tuple(v[None, None] for v in r_vals)
 
-            def phase1(B_cur, s_t):
-                # sampled <B_j, A_i> on the S^T layout
-                vals = ops.sddmm(B_cur, T, _coo(plan, s_t)).vals
-                return _shift(B_cur, lay, L), vals
-
-            _, r_vals = jax.lax.scan(phase1, B_loc, s)
-            out0 = jnp.zeros((plan.nB, plan.r), jnp.float32)
-
-            def phase2(out_cur, inp):
-                s_t, rv = inp
-                Rt = _coo(plan, s_t).with_vals(rv)
-                out_cur = out_cur + ops.spmm(Rt, T, m=plan.nB)
-                return _shift(out_cur, lay, L), None
-
-            out, _ = jax.lax.scan(phase2, out0, (s, r_vals))
-            return out, r_vals[None, None]   # out home after full cycle
-
-        return _exec(grid, plan, body, A, B, (P((lay, fib)), P(lay, fib)))
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs))
 
     if elision == "fused":
         assert not plan.transpose
 
         def body(s, A_loc, B_loc):
-            s = _squeeze_s(s)
             T = jax.lax.all_gather(A_loc, fib, tiled=True)
             T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
-
-            def phase(carry, s_t):
-                B_cur, T2 = carry
-                contrib, R_t = ops.fusedmm(T, B_cur, _coo(plan, s_t),
-                                           m=plan.cmA)
-                return (_shift(B_cur, lay, L), T2 + contrib), R_t.vals
-
-            (_, T2), r_vals = jax.lax.scan(phase, (B_loc, T2), s)
+            r_vals = []
+            B_cur = B_loc
+            B_nxt = _shift(B_loc, lay, L) if overlap else None
+            for t in range(L):
+                contrib, R_t = ops.fusedmm(T, B_cur, _coo(plan, _s(s, t)),
+                                           m=plan.cmA, **tk)
+                T2 = T2 + contrib
+                r_vals.append(R_t.vals)
+                if overlap:
+                    B_cur = B_nxt
+                    if t + 1 < L:
+                        B_nxt = _shift(B_nxt, lay, L)
+                else:
+                    B_cur = _shift(B_cur, lay, L)
             out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
                                        tiled=True)
-            return out, r_vals[None, None]
+            return out, tuple(v[None, None] for v in r_vals)
 
-        return _exec(grid, plan, body, A, B, (P((lay, fib)), P(lay, fib)))
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs))
 
     raise ValueError(f"unknown elision {elision!r}")

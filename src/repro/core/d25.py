@@ -15,6 +15,14 @@ pre-skews S and B (the paper's "initial shift", done for free at fill time).
 SDDMM sample values accumulate inside the traveling S pack (partial dots
 over each visited column slice W_y) and are scaled by the original values
 once the pack returns home — so only 3 words per nonzero ever move.
+
+Comm/compute overlap (see DESIGN.md): the Cannon loops are Python-unrolled
+with a double-buffered carry — the ``ppermute`` of the next phase's S pack
+and B block is issued before the local kernel runs on the current ones.
+The accumulating buffers (traveling partial dots / FusedMMB output) still
+serialize their own small shift behind the kernel that feeds them, but the
+dense-block and coordinate shifts all hide behind compute.
+``overlap=False`` reproduces the serial schedule (numerically identical).
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import common
+from repro.core import common, costmodel
 from repro.core.grid import Grid25
 from repro.kernels import ops
 
@@ -43,6 +51,7 @@ class PlanD25:
     r: int = dataclasses.field(metadata=dict(static=True))
     row_tile: int = dataclasses.field(metadata=dict(static=True))
     transpose: bool = dataclasses.field(metadata=dict(static=True))
+    tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     meta: object = dataclasses.field(metadata=dict(static=True))
 
     @property
@@ -63,7 +72,7 @@ class MetaD25:
 
 def plan_d25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
              transpose: bool = False, row_tile: int = 256,
-             nz_block: int = 256) -> PlanD25:
+             nz_block: int = 256, group: int = 1) -> PlanD25:
     G, c, p = grid.G, grid.c, grid.p
     assert m % (G * c) == 0 and n % (G * c) == 0 and r % G == 0
     mS, nS, mA, rW = m // G, n // (G * c), m // (G * c), r // G
@@ -86,7 +95,9 @@ def plan_d25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
                     row_off.append(r0), col_off.append(c0)
                 blocks.append((br, bc, bv))
     rl, cl, vl, tb = common.pack_block_list(blocks, blk_shape, row_tile,
-                                            nz_block)
+                                            nz_block, group=group)
+    tiling = common.plan_tiling(tb, n_b=mS if transpose else nS, r=rW,
+                                k=nz_block, row_tile=row_tile)
     sh = grid.sharding("row", "col", "fiber")
     shp = (G, G, c) + rl.shape[1:]
     meta = MetaD25(mS, nS, mA, rW, common.BlockMeta(
@@ -98,7 +109,7 @@ def plan_d25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
         jax.device_put(cl.reshape(shp), sh),
         jax.device_put(vl.reshape(shp), sh),
         jax.device_put(tb.reshape((G, G, c) + tb.shape[1:]), sh),
-        m, n, r, row_tile, transpose, meta)
+        m, n, r, row_tile, transpose, tiling, meta)
 
 
 def skew_b(grid: Grid25, B: np.ndarray) -> jax.Array:
@@ -144,10 +155,10 @@ def _exec(grid: Grid25, plan: PlanD25, body, A, B_sk, out_specs):
     mesh = grid.mesh
     rw, cl_ax, fib = grid.row, grid.col, grid.fiber
     s_spec = P(rw, cl_ax, fib)
-    fn = jax.shard_map(
+    fn = common.shard_map(
         body, mesh=mesh,
         in_specs=((s_spec,) * 4, P((rw, fib), cl_ax), s_spec),
-        out_specs=out_specs, check_vma=False)
+        out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
     return fn(s_pack, A, B_sk)
 
@@ -156,37 +167,48 @@ def _sq(args):
     return tuple(x[0, 0, 0] for x in args)
 
 
-def _sddmm_round(grid, plan, T, s, B0):
+def _sddmm_round(grid, plan, T, s, B0, overlap=True):
     """Cannon round accumulating partial dots in the traveling S pack.
 
     For a normal pack the kernel samples <T_i, B_j>; for a transpose pack
-    the roles of the dense args swap.  Returns (pack home w/ partial dots,
-    B home).
+    the roles of the dense args swap.  The coordinate and B shifts are
+    issued double-buffered ahead of the kernel; the partial-dot buffer
+    lags one kernel behind (it needs the dots before it can travel).
+    Returns (pack home w/ partial dots, B home).
     """
     G = grid.G
-    rl, cl, _, tb = s
-    partial = jnp.zeros_like(s[2])
-    ones = jnp.ones_like(partial)
-
-    def phase(carry, _):
-        rl, cl, partial, tb, B_cur = carry
+    tk = plan.tiling.kernel_kwargs()
+    rl, cl, vl, tb = s
+    partial = jnp.zeros_like(vl)
+    ones = jnp.ones_like(vl)
+    struct = (rl, cl, tb)
+    B_cur = B0
+    if overlap and G > 1:
+        nxt = tuple(_shift_back(x, grid.col, G) for x in struct)
+        B_nxt = _shift_back(B_cur, grid.row, G)
+    for t in range(G):
+        rl_c, cl_c, tb_c = struct
+        coo = _coo(plan, rl_c, cl_c, ones, tb_c)
         if plan.transpose:
-            dots = ops.sddmm(B_cur, T, _coo(plan, rl, cl, ones, tb)).vals
+            dots = ops.sddmm(B_cur, T, coo, **tk).vals
         else:
-            dots = ops.sddmm(T, B_cur, _coo(plan, rl, cl, ones, tb)).vals
-        partial = partial + dots
-        rl, cl, partial, tb = (
-            _shift_back(v, grid.col, G) for v in (rl, cl, partial, tb))
-        B_cur = _shift_back(B_cur, grid.row, G)
-        return (rl, cl, partial, tb, B_cur), None
+            dots = ops.sddmm(T, B_cur, coo, **tk).vals
+        partial = _shift_back(partial + dots, grid.col, G)
+        if overlap and G > 1:
+            struct, B_cur = nxt, B_nxt
+            if t + 1 < G:
+                nxt = tuple(_shift_back(x, grid.col, G) for x in nxt)
+                B_nxt = _shift_back(B_nxt, grid.row, G)
+        else:
+            struct = tuple(_shift_back(x, grid.col, G) for x in struct)
+            B_cur = _shift_back(B_cur, grid.row, G)
+    rl, cl, tb = struct
+    return (rl, cl, partial, tb), B_cur
 
-    (rl, cl, partial, tb, B_home), _ = jax.lax.scan(
-        phase, (rl, cl, partial, tb, B0), None, length=G)
-    return (rl, cl, partial, tb), B_home
 
-
-@functools.partial(jax.jit, static_argnums=(0,))
-def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("overlap",))
+def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, overlap: bool = True):
     """R = S * (A @ B.T); values return to skewed-home layout."""
     fib = grid.fiber
 
@@ -194,32 +216,35 @@ def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk):
         s = _sq(s)
         B0 = B_loc[0, 0, 0]
         T = jax.lax.all_gather(A_loc, fib, tiled=True)
-        (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0)
+        (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0,
+                                                overlap)
         return (s[2] * partial)[None, None, None]
 
     return _exec(grid, plan, body, A, B_sk, P(grid.row, grid.col, grid.fiber))
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def spmma_d25(grid: Grid25, plan: PlanD25, B_sk):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("overlap",))
+def spmma_d25(grid: Grid25, plan: PlanD25, B_sk, overlap: bool = True):
     """A = S @ B, output replicated along fiber then reduce-scattered."""
     G, fib = grid.G, grid.fiber
+    tk = plan.tiling.kernel_kwargs()
 
     def body(s, _A, B_loc):
-        s = _sq(s)
-        B0 = B_loc[0, 0, 0]
+        cur = _sq(s) + (B_loc[0, 0, 0],)
+        if overlap and G > 1:
+            nxt = _advance(grid, cur, G)
         T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
-
-        def phase(carry, _):
-            rl, cl, vl, tb, B_cur, T2 = carry
+        for t in range(G):
+            rl, cl, vl, tb, B_cur = cur
             T2 = T2 + ops.spmm(_coo(plan, rl, cl, vl, tb), B_cur,
-                               m=plan.meta.mS)
-            rl, cl, vl, tb = (
-                _shift_back(v, grid.col, G) for v in (rl, cl, vl, tb))
-            B_cur = _shift_back(B_cur, grid.row, G)
-            return (rl, cl, vl, tb, B_cur, T2), None
-
-        (*_, T2), _ = jax.lax.scan(phase, (*s, B0, T2), None, length=G)
+                               m=plan.meta.mS, **tk)
+            if overlap and G > 1:
+                cur = nxt
+                if t + 1 < G:
+                    nxt = _advance(grid, nxt, G)
+            else:
+                cur = _advance(grid, cur, G)
         out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0, tiled=True)
         return out
 
@@ -228,8 +253,17 @@ def spmma_d25(grid: Grid25, plan: PlanD25, B_sk):
                  P((grid.row, grid.fiber), grid.col))
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("elision",))
-def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none"):
+def _advance(grid, cur, G):
+    """Cannon advance of a (struct..., B) carry: pack along col, B along row."""
+    *struct, B = cur
+    return tuple(_shift_back(x, grid.col, G) for x in struct) \
+        + (_shift_back(B, grid.row, G),)
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("elision", "overlap"))
+def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none",
+                overlap: bool = True):
     """FusedMM on the 2.5D dense-replicating grid.
 
     elision="none" : FusedMMA — AG(A) + 2 Cannon rounds + RS(out).
@@ -239,6 +273,7 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none"):
                      transpose pack.  Returns (out stacked skewed, R_vals).
     """
     G, fib = grid.G, grid.fiber
+    tk = plan.tiling.kernel_kwargs()
 
     if elision == "none":
         assert not plan.transpose
@@ -247,21 +282,23 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none"):
             s = _sq(s)
             B0 = B_loc[0, 0, 0]
             T = jax.lax.all_gather(A_loc, fib, tiled=True)
-            (rl, cl, partial, tb), B_home = _sddmm_round(grid, plan, T, s, B0)
+            (rl, cl, partial, tb), B_home = _sddmm_round(grid, plan, T, s,
+                                                         B0, overlap)
             r_vals = s[2] * partial
             T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
-
-            def phase2(carry, _):
-                rl, cl, vl, tb, B_cur, T2 = carry
-                T2 = T2 + ops.spmm(_coo(plan, rl, cl, vl, tb), B_cur,
-                                   m=plan.meta.mS)
-                rl, cl, vl, tb = (
-                    _shift_back(v, grid.col, G) for v in (rl, cl, vl, tb))
-                B_cur = _shift_back(B_cur, grid.row, G)
-                return (rl, cl, vl, tb, B_cur, T2), None
-
-            (*_, T2), _ = jax.lax.scan(
-                phase2, (rl, cl, r_vals, tb, B_home, T2), None, length=G)
+            cur = (rl, cl, r_vals, tb, B_home)
+            if overlap and G > 1:
+                nxt = _advance(grid, cur, G)
+            for t in range(G):
+                rl_c, cl_c, vl_c, tb_c, B_cur = cur
+                T2 = T2 + ops.spmm(_coo(plan, rl_c, cl_c, vl_c, tb_c),
+                                   B_cur, m=plan.meta.mS, **tk)
+                if overlap and G > 1:
+                    cur = nxt
+                    if t + 1 < G:
+                        nxt = _advance(grid, nxt, G)
+                else:
+                    cur = _advance(grid, cur, G)
             out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
                                        tiled=True)
             return out, r_vals[None, None, None]
@@ -277,22 +314,32 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none"):
             s = _sq(s)
             B0 = B_loc[0, 0, 0]
             T = jax.lax.all_gather(A_loc, fib, tiled=True)   # single AG
-            (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0)
+            (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0,
+                                                    overlap)
             r_vals = s[2] * partial
-            out0 = jnp.zeros((plan.meta.nS, plan.meta.rW), jnp.float32)
-
-            def phase2(carry, _):
-                rl, cl, vl, tb, out_cur = carry
-                out_cur = out_cur + ops.spmm(_coo(plan, rl, cl, vl, tb), T,
-                                             m=plan.meta.nS)
-                rl, cl, vl, tb = (
-                    _shift_back(v, grid.col, G) for v in (rl, cl, vl, tb))
-                out_cur = _shift_back(out_cur, grid.row, G)
-                return (rl, cl, vl, tb, out_cur), None
-
-            (*_, out), _ = jax.lax.scan(
-                phase2, (rl, cl, r_vals, tb, out0), None, length=G)
-            return out[None, None, None], r_vals[None, None, None]
+            out_cur = jnp.zeros((plan.meta.nS, plan.meta.rW), jnp.float32)
+            # the output travels and accumulates, so its shift trails the
+            # kernel; the *next* contribution is precomputed from the
+            # double-buffered traveling structure while it is in flight
+            struct = (rl, cl, r_vals, tb)
+            contrib = ops.spmm(_coo(plan, *struct), T, m=plan.meta.nS, **tk)
+            if overlap and G > 1:
+                nxt = tuple(_shift_back(x, grid.col, G) for x in struct)
+            for t in range(G):
+                out_cur = _shift_back(out_cur + contrib, grid.row, G)
+                if t + 1 < G:
+                    if overlap:
+                        contrib = ops.spmm(_coo(plan, *nxt), T,
+                                           m=plan.meta.nS, **tk)
+                        if t + 2 < G:
+                            nxt = tuple(_shift_back(x, grid.col, G)
+                                        for x in nxt)
+                    else:
+                        struct = tuple(_shift_back(x, grid.col, G)
+                                       for x in struct)
+                        contrib = ops.spmm(_coo(plan, *struct), T,
+                                           m=plan.meta.nS, **tk)
+            return out_cur[None, None, None], r_vals[None, None, None]
 
         return _exec(grid, plan, body, A, B_sk,
                      (P(grid.row, grid.col, grid.fiber),

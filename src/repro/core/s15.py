@@ -20,6 +20,13 @@ values again, emitting per-phase output slabs out[rows(b_t), W_u].
 Because phi = nnz/(nr) is low exactly when this layout wins (paper Fig. 6),
 the shifted payload (3*nnz/p words/phase) is tiny compared to the dense
 blocks the d15 algorithm would shift.
+
+Comm/compute overlap (see DESIGN.md): the propagation loops are
+Python-unrolled with double-buffered carries — the coordinate shift for
+the next phase is issued before the local kernel consumes the current
+pack, so the (already tiny) payload transfer hides entirely behind the
+SDDMM/SpMM compute.  The partial-dot buffer lags one kernel behind, as it
+must include the current phase's dots before traveling.
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import common
+from repro.core import common, costmodel
 from repro.core.grid import Grid15
 from repro.kernels import ops
 
@@ -47,6 +54,7 @@ class PlanS15:
     n: int = dataclasses.field(metadata=dict(static=True))
     r: int = dataclasses.field(metadata=dict(static=True))
     row_tile: int = dataclasses.field(metadata=dict(static=True))
+    tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     meta: object = dataclasses.field(metadata=dict(static=True))
 
     @property
@@ -66,7 +74,8 @@ class MetaS15:
 
 
 def plan_s15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
-             row_tile: int = 256, nz_block: int = 256) -> PlanS15:
+             row_tile: int = 256, nz_block: int = 256,
+             group: int = 1) -> PlanS15:
     L, c, p = grid.L, grid.c, grid.p
     assert m % p == 0 and r % p == 0, (m, r, p)
     mS = m // p
@@ -80,7 +89,9 @@ def plan_s15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
             blocks.append((br, bc, bv))
             row_off.append(b * mS)
     rl, cl, vl, tb = common.pack_block_list(blocks, (mS, n), row_tile,
-                                            nz_block)
+                                            nz_block, group=group)
+    tiling = common.plan_tiling(tb, n_b=n, r=r * c // p, k=nz_block,
+                                row_tile=row_tile)
     sh = grid.sharding("layer", "fiber")
     shp = (L, c) + rl.shape[1:]
     meta = MetaS15(mS, r * c // p, common.BlockMeta(
@@ -90,7 +101,7 @@ def plan_s15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
         jax.device_put(cl.reshape(shp), sh),
         jax.device_put(vl.reshape(shp), sh),
         jax.device_put(tb.reshape((L, c) + tb.shape[1:]), sh),
-        m, n, r, row_tile, meta)
+        m, n, r, row_tile, tiling, meta)
 
 
 def _coo(plan, rl, cl, vl, tb):
@@ -102,13 +113,17 @@ def _shift(x, axis_name, size):
                             [(i, (i + 1) % size) for i in range(size)])
 
 
+def _shift_tuple(xs, axis_name, size):
+    return tuple(_shift(x, axis_name, size) for x in xs)
+
+
 def _exec(grid: Grid15, plan: PlanS15, body, A, B, out_specs):
     mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
     s_spec = P(lay, fib)
-    fn = jax.shard_map(
+    fn = common.shard_map(
         body, mesh=mesh,
         in_specs=((s_spec,) * 4, P(None, (lay, fib)), P(None, (lay, fib))),
-        out_specs=out_specs, check_vma=False)
+        out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
     return fn(s_pack, A, B)
 
@@ -118,39 +133,53 @@ def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
 
     s = (rl, cl, vals, tb) local pack; returns pack home again with
     partial dot products in the values slot (UNSCALED by original vals).
+    The coordinate shifts are double-buffered ahead of the kernel; the
+    partial buffer trails one kernel behind.
     """
     u = jax.lax.axis_index(lay)
+    tk = plan.tiling.kernel_kwargs()
     rl, cl, _, tb = s
     partial = jnp.zeros_like(s[2])
     ones = jnp.ones_like(partial)
 
-    def phase(carry, t):
-        rl, cl, partial, tb = carry
+    struct = (rl, cl, tb)
+    nxt = _shift_tuple(struct, lay, L) if L > 1 else None
+    for t in range(L):
         blk = (u - t) % L                       # layer-row of resident block
         off = (blk * grid.c + jax.lax.axis_index(grid.fiber)) * plan.mS
         a_slice = jax.lax.dynamic_slice(
             T_A, (off, 0), (plan.mS, plan.rc))
+        rl_c, cl_c, tb_c = struct
         dots = ops.sddmm(a_slice, T_B,
-                         _coo(plan, rl, cl, ones, tb)).vals
-        partial = partial + dots
-        return tuple(_shift(x, lay, L) for x in (rl, cl, partial, tb)), None
-
-    (rl, cl, partial, tb), _ = jax.lax.scan(
-        phase, (rl, cl, partial, tb), jnp.arange(L))
+                         _coo(plan, rl_c, cl_c, ones, tb_c), **tk).vals
+        partial = _shift(partial + dots, lay, L)
+        if L > 1:
+            struct = nxt
+            if t + 1 < L:
+                nxt = _shift_tuple(nxt, lay, L)
+        else:
+            struct = _shift_tuple(struct, lay, L)
+    rl, cl, tb = struct
     return rl, cl, partial, tb
 
 
 def _spmm_round(grid, plan, T_B, s, L, lay):
     """Propagation round for SpMMA: emits per-phase output slabs."""
-    u = jax.lax.axis_index(lay)
-
-    def phase(carry, t):
-        rl, cl, vals, tb = carry
-        slab = ops.spmm(_coo(plan, rl, cl, vals, tb), T_B, m=plan.mS)
-        return tuple(_shift(x, lay, L) for x in (rl, cl, vals, tb)), slab
-
-    _, slabs = jax.lax.scan(phase, s, jnp.arange(L))
-    return slabs    # (L, mS, rc) — slab t covers rows of block b_t
+    tk = plan.tiling.kernel_kwargs()
+    cur = s
+    nxt = _shift_tuple(cur, lay, L) if L > 1 else None
+    slabs = []
+    for t in range(L):
+        rl, cl, vals, tb = cur
+        slabs.append(ops.spmm(_coo(plan, rl, cl, vals, tb), T_B,
+                              m=plan.mS, **tk))
+        if L > 1:
+            cur = nxt
+            if t + 1 < L:
+                nxt = _shift_tuple(nxt, lay, L)
+        else:
+            cur = _shift_tuple(cur, lay, L)
+    return jnp.stack(slabs)  # (L, mS, rc) — slab t covers rows of block b_t
 
 
 def _gather_cols(x, fib):

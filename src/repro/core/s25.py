@@ -21,6 +21,13 @@ schedule) and accumulate R @ B contributions from every column block.
 FusedMM admits NO dense-replication elision here (nothing dense is
 replicated) — the fiber traffic is values-only: AG + RS + AG, i.e. the
 paper's 3*phi*nr*(c-1)/p term.
+
+Comm/compute overlap (see DESIGN.md): the Cannon loops are Python-unrolled
+with double-buffered carries — the r-chunk shifts for the next phase are
+issued before the local kernel consumes the current chunks.  In the SpMM
+round the traveling output accumulates kernel results, so its own shift
+trails the kernel; the next contribution is instead precomputed from the
+double-buffered incoming B chunk while the output chunk is in flight.
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import common
+from repro.core import common, costmodel
 from repro.core.grid import Grid25
 from repro.kernels import ops
 
@@ -48,6 +55,7 @@ class PlanS25:
     n: int = dataclasses.field(metadata=dict(static=True))
     r: int = dataclasses.field(metadata=dict(static=True))
     row_tile: int = dataclasses.field(metadata=dict(static=True))
+    tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     meta: object = dataclasses.field(metadata=dict(static=True))
 
     @property
@@ -72,7 +80,8 @@ class MetaS25:
 
 
 def plan_s25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
-             row_tile: int = 256, nz_block: int = 256) -> PlanS25:
+             row_tile: int = 256, nz_block: int = 256,
+             group: int = 1) -> PlanS25:
     G, c, p = grid.G, grid.c, grid.p
     assert m % G == 0 and n % G == 0 and r % (G * c) == 0
     mS, nS, rc = m // G, n // G, r // (G * c)
@@ -86,7 +95,7 @@ def plan_s25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
             blocks.append((br, bc, bv))
             row_off.append(x * mS), col_off.append(y * nS)
     rl, cl, vl, tb = common.pack_block_list(blocks, (mS, nS), row_tile,
-                                            nz_block)
+                                            nz_block, group=group)
     nb = rl.shape[1]
     if nb % c:                       # pad so the value shards split evenly
         pad = c - nb % c
@@ -96,6 +105,8 @@ def plan_s25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
         tb = np.pad(tb, ((0, 0), (0, pad)), mode="edge")
         nb += pad
     k = rl.shape[-1]
+    tiling = common.plan_tiling(tb, n_b=nS, r=rc, k=nz_block,
+                                row_tile=row_tile)
     # replicate structure across z; shard values by nonzero-block across z
     rl_g = np.broadcast_to(rl[:, None], (G * G, c, nb, k)).reshape(
         G, G, c, nb, k)
@@ -110,7 +121,7 @@ def plan_s25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
     return PlanS25(
         jax.device_put(rl_g, sh), jax.device_put(cl_g, sh),
         jax.device_put(vl_g, sh), jax.device_put(tb_g, sh),
-        m, n, r, row_tile, meta)
+        m, n, r, row_tile, tiling, meta)
 
 
 def skew_dense(grid: Grid25, X: np.ndarray, along: str) -> jax.Array:
@@ -160,32 +171,42 @@ def _shift_back(x, axis_name, size):
 
 def _exec(grid: Grid25, plan: PlanS25, body, A_sk, B_sk, out_specs):
     s_spec = P(grid.row, grid.col, grid.fiber)
-    fn = jax.shard_map(
+    fn = common.shard_map(
         body, mesh=grid.mesh,
         in_specs=((s_spec,) * 4, s_spec, s_spec),
-        out_specs=out_specs, check_vma=False)
+        out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
     return fn(s_pack, A_sk, B_sk)
 
 
 def _sddmm_round(grid, plan, s, A0, B0):
-    """Cannon round over r-chunks; returns layer-partial dots (nb, k)."""
+    """Cannon round over r-chunks; returns layer-partial dots (nb, k).
+
+    The A/B chunk shifts for phase t+1 are issued before the phase-t
+    kernel; the partial accumulator stays local (fiber-reduced later).
+    """
     G = grid.G
+    tk = plan.tiling.kernel_kwargs()
     rl, cl, _, tb = s
     partial = jnp.zeros(rl.shape, jnp.float32)
     ones = jnp.ones(rl.shape, jnp.float32)
-
-    def phase(carry, _):
-        A_cur, B_cur, partial = carry
-        dots = ops.sddmm(A_cur, B_cur, _coo(plan, rl, cl, ones, tb)).vals
+    A_cur, B_cur = A0, B0
+    if G > 1:
+        A_nxt = _shift_back(A_cur, grid.col, G)
+        B_nxt = _shift_back(B_cur, grid.row, G)
+    for t in range(G):
+        dots = ops.sddmm(A_cur, B_cur, _coo(plan, rl, cl, ones, tb),
+                         **tk).vals
         partial = partial + dots
-        A_cur = _shift_back(A_cur, grid.col, G)
-        B_cur = _shift_back(B_cur, grid.row, G)
-        return (A_cur, B_cur, partial), None
-
-    (A_home, B_home, partial), _ = jax.lax.scan(
-        phase, (A0, B0, partial), None, length=G)
-    return partial, A_home, B_home
+        if G > 1:
+            A_cur, B_cur = A_nxt, B_nxt
+            if t + 1 < G:
+                A_nxt = _shift_back(A_nxt, grid.col, G)
+                B_nxt = _shift_back(B_nxt, grid.row, G)
+        else:
+            A_cur = _shift_back(A_cur, grid.col, G)
+            B_cur = _shift_back(B_cur, grid.row, G)
+    return partial, A_cur, B_cur
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -206,6 +227,26 @@ def sddmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
                  P(grid.row, grid.col, grid.fiber))
 
 
+def _spmm_round(grid, plan, s, B0):
+    """Cannon round for SpMM: the traveling output accumulates, so its
+    shift trails the kernel; the next contribution is precomputed from the
+    double-buffered incoming B chunk while the output is in flight."""
+    G = grid.G
+    tk = plan.tiling.kernel_kwargs()
+    rl, cl, vals, tb = s
+    coo = _coo(plan, rl, cl, vals, tb)
+    out_cur = jnp.zeros((plan.mS, plan.rc), jnp.float32)
+    contrib = ops.spmm(coo, B0, m=plan.mS, **tk)
+    B_nxt = _shift_back(B0, grid.row, G) if G > 1 else None
+    for t in range(G):
+        out_cur = _shift_back(out_cur + contrib, grid.col, G)
+        if t + 1 < G:
+            contrib = ops.spmm(coo, B_nxt, m=plan.mS, **tk)
+            if t + 2 < G:
+                B_nxt = _shift_back(B_nxt, grid.row, G)
+    return out_cur
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def spmma_s25(grid: Grid25, plan: PlanS25, B_sk):
     """A = S @ B; output chunks end in skewed-home layout."""
@@ -214,18 +255,7 @@ def spmma_s25(grid: Grid25, plan: PlanS25, B_sk):
     def body(s, _A, B_loc):
         rl, cl, vshard, tb = tuple(x[0, 0, 0] for x in s)
         vals = jax.lax.all_gather(vshard, fib, tiled=True)   # (nb, k)
-        out0 = jnp.zeros((plan.mS, plan.rc), jnp.float32)
-
-        def phase(carry, _):
-            B_cur, out_cur = carry
-            out_cur = out_cur + ops.spmm(_coo(plan, rl, cl, vals, tb),
-                                         B_cur, m=plan.mS)
-            B_cur = _shift_back(B_cur, grid.row, G)
-            out_cur = _shift_back(out_cur, grid.col, G)
-            return (B_cur, out_cur), None
-
-        (_, out), _ = jax.lax.scan(phase, (B_loc[0, 0, 0], out0), None,
-                                   length=G)
+        out = _spmm_round(grid, plan, (rl, cl, vals, tb), B_loc[0, 0, 0])
         return out[None, None, None]
 
     dummy = jnp.zeros((grid.G, grid.G, grid.c, 1, 1), jnp.float32)
@@ -254,17 +284,7 @@ def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
                                     tiled=True)                  # RS
         r_mine = vshard * mine
         r_vals = jax.lax.all_gather(r_mine, fib, tiled=True)     # AG
-        out0 = jnp.zeros((plan.mS, plan.rc), jnp.float32)
-
-        def phase2(carry, _):
-            B_cur, out_cur = carry
-            out_cur = out_cur + ops.spmm(_coo(plan, rl, cl, r_vals, tb),
-                                         B_cur, m=plan.mS)
-            B_cur = _shift_back(B_cur, grid.row, G)
-            out_cur = _shift_back(out_cur, grid.col, G)
-            return (B_cur, out_cur), None
-
-        (_, out), _ = jax.lax.scan(phase2, (B_home, out0), None, length=G)
+        out = _spmm_round(grid, plan, (rl, cl, r_vals, tb), B_home)
         return out[None, None, None], r_mine[None, None, None]
 
     return _exec(grid, plan, body, A_sk, B_sk,

@@ -119,14 +119,20 @@ def pack_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 
 def pack_row_tiled(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
                    shape: Tuple[int, int], *, row_tile: int = 256,
-                   nz_block: int = 256,
-                   nblocks: int | None = None) -> RowTiledCOO:
+                   nz_block: int = 256, nblocks: int | None = None,
+                   group: int = 1) -> RowTiledCOO:
     """Sort by row, then emit nz blocks confined to row_tile windows.
 
     A block is flushed (padded) whenever it fills up or the next nonzero
     falls outside the current row window.  Window boundaries are aligned to
     multiples of ``row_tile`` so ``tile_base`` can double as a BlockSpec
     index.
+
+    ``group > 1`` pads every window's run of blocks (and the total block
+    count) to a multiple of ``group``, so the kernels may merge any
+    ``blocks_per_step`` dividing ``group`` — each aligned group then shares
+    one ``tile_base`` window (the precondition checked by
+    ``costmodel.groupable_blocks_per_step``).
     """
     # clamp to the largest divisor of the row count (kernel window blocking
     # requires row_tile | m)
@@ -137,26 +143,37 @@ def pack_row_tiled(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     rows, cols, vals = rows[order], cols[order], vals[order]
     nnz = rows.shape[0]
 
+    def zero_block():
+        return (np.zeros(nz_block, np.int32), np.zeros(nz_block, np.int32),
+                np.zeros(nz_block, np.float32))
+
     blk_rows, blk_cols, blk_vals, bases = [], [], [], []
     i = 0
     while i < nnz:
         base = (int(rows[i]) // row_tile) * row_tile
-        # all nonzeros in [base, base+row_tile) starting at i, up to nz_block
-        hi = np.searchsorted(rows, base + row_tile, side="left")
-        j = min(i + nz_block, int(hi))
-        n = j - i
-        lr = np.zeros(nz_block, np.int32)
-        lc = np.zeros(nz_block, np.int32)
-        lv = np.zeros(nz_block, np.float32)
-        lr[:n] = rows[i:j] - base
-        lc[:n] = cols[i:j]
-        lv[:n] = vals[i:j]
-        blk_rows.append(lr); blk_cols.append(lc); blk_vals.append(lv)
-        bases.append(base)
-        i = j
+        # all nonzeros in [base, base+row_tile) starting at i
+        hi = int(np.searchsorted(rows, base + row_tile, side="left"))
+        run = 0
+        while i < hi:
+            j = min(i + nz_block, hi)
+            n = j - i
+            lr, lc, lv = zero_block()
+            lr[:n] = rows[i:j] - base
+            lc[:n] = cols[i:j]
+            lv[:n] = vals[i:j]
+            blk_rows.append(lr); blk_cols.append(lc); blk_vals.append(lv)
+            bases.append(base)
+            run += 1
+            i = j
+        while run % group:           # pad the window run to a group boundary
+            lr, lc, lv = zero_block()
+            blk_rows.append(lr); blk_cols.append(lc); blk_vals.append(lv)
+            bases.append(base)
+            run += 1
 
     nb = len(bases)
     target = nblocks if nblocks is not None else max(nb, 1)
+    target = _round_up(target, group)
     if nb > target:
         raise ValueError(f"needs {nb} blocks > target {target}")
     # Padding blocks inherit the last real base so the sequence of output

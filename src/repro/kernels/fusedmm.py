@@ -4,13 +4,24 @@ This is the paper's "local kernel fusion" primitive [11] adapted to TPU:
 for each nonzero block the sampled dot products are computed and the scaled
 rows of B aggregated into the output window *in one VMEM round trip* — the
 intermediate R never travels to HBM between two kernels.  The sampled
-values are still emitted (cheap, (1,K) per step) because applications such
-as GAT attention need them; the fusion win is the elided HBM round trip and
-the single propagation round in the distributed algorithm.
+values are still emitted (cheap, (bps, K) per step) because applications
+such as GAT attention need them; the fusion win is the elided HBM round
+trip and the single propagation round in the distributed algorithm.
 
     dots   = rowsum(A[rows] * B[cols])          (VPU)
     coeff  = vals * dots
     out   += onehot(rows_local) @ (coeff * B[cols])   (MXU)
+
+VMEM tiling (see DESIGN.md): when the full embedding width r fits the VMEM
+budget (``r_tile == r``) a single 2-D grid step does both halves fused.
+For wider embeddings B enters VMEM in (n_b, r_tile) slabs; the SDDMM
+coefficient then needs *all* slabs before any SpMM contribution, so the
+grid grows a leading phase axis: phase 0 sweeps the slabs accumulating
+partial dots into the R output, phase 1 re-sweeps them scattering
+``R * B`` into the output windows.  R round-trips through HBM once —
+3 words/nnz, negligible next to the dense slab traffic — while B slabs and
+output windows still never exceed the VMEM budget.  ``blocks_per_step``
+(bps) merges same-window nonzero blocks into one step as in spmm/sddmm.
 """
 from __future__ import annotations
 
@@ -24,57 +35,134 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _fusedmm_kernel(base_ref, rows_ref, cols_ref, vals_ref, a_ref, b_ref,
                     acc_ref, out_ref, rvals_ref, *, row_tile):
-    rl = rows_ref[0]
-    cl = cols_ref[0]
-    v = vals_ref[0].astype(jnp.float32)
+    """Single-phase variant: full r resident, one VMEM round trip."""
+    rl = rows_ref[...].reshape(-1)
+    cl = cols_ref[...].reshape(-1)
+    v = vals_ref[...].reshape(-1).astype(jnp.float32)
     a = a_ref[...].astype(jnp.float32)
     b = b_ref[...].astype(jnp.float32)
-    a_rows = jnp.take(a, rl, axis=0)                     # (K, r)
-    b_rows = jnp.take(b, cl, axis=0)                     # (K, r)
-    coeff = v * jnp.sum(a_rows * b_rows, axis=-1)        # f32[K]  (SDDMM)
-    scaled = coeff[:, None] * b_rows                     # (K, r)
+    a_rows = jnp.take(a, rl, axis=0)                     # (bps*K, r)
+    b_rows = jnp.take(b, cl, axis=0)                     # (bps*K, r)
+    coeff = v * jnp.sum(a_rows * b_rows, axis=-1)        # f32  (SDDMM)
+    scaled = coeff[:, None] * b_rows
     iota = jax.lax.broadcasted_iota(jnp.int32, (row_tile, rl.shape[0]), 0)
     onehot = (iota == rl[None, :]).astype(jnp.float32)
     out_ref[...] += jax.lax.dot(                         # (SpMM)
         onehot, scaled, preferred_element_type=jnp.float32
     ).astype(out_ref.dtype)
-    rvals_ref[0] = coeff.astype(rvals_ref.dtype)
+    rvals_ref[...] = coeff.reshape(rvals_ref.shape).astype(rvals_ref.dtype)
+
+
+def _fusedmm2_kernel(base_ref, rows_ref, cols_ref, vals_ref, a_ref, b_ref,
+                     acc_out_ref, acc_rv_ref, out_ref, rvals_ref, *,
+                     row_tile):
+    """Two-phase variant: r tiled into slabs; phase 0 SDDMM, phase 1 SpMM."""
+    ph = pl.program_id(0)
+    rl = rows_ref[...].reshape(-1)
+    cl = cols_ref[...].reshape(-1)
+    b = b_ref[...].astype(jnp.float32)                   # (n_b, r_tile)
+    b_rows = jnp.take(b, cl, axis=0)                     # (bps*K, r_tile)
+
+    @pl.when(ph == 0)
+    def _sddmm_phase():
+        v = vals_ref[...].astype(jnp.float32)
+        a = a_ref[...].astype(jnp.float32)               # (row_tile, r_tile)
+        a_rows = jnp.take(a, rl, axis=0)
+        dots = jnp.sum(a_rows * b_rows, axis=-1).reshape(v.shape)
+        # accumulation across non-consecutive revisits: the aliased acc
+        # input restores the prior partial into the shared window buffer
+        # on every block-index change (see DESIGN.md §2)
+        rvals_ref[...] += v * dots
+
+    @pl.when(ph == 1)
+    def _spmm_phase():
+        coeff = rvals_ref[...].reshape(-1)               # final R (f32, HBM)
+        scaled = coeff[:, None] * b_rows
+        iota = jax.lax.broadcasted_iota(jnp.int32,
+                                        (row_tile, rl.shape[0]), 0)
+        onehot = (iota == rl[None, :]).astype(jnp.float32)
+        out_ref[...] += jax.lax.dot(
+            onehot, scaled, preferred_element_type=jnp.float32
+        ).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("row_tile", "m", "interpret"))
+                   static_argnames=("row_tile", "m", "r_tile",
+                                    "blocks_per_step", "interpret"))
 def fusedmm_pallas(tile_base_blk: jax.Array, rows_local: jax.Array,
                    cols: jax.Array, vals: jax.Array, A: jax.Array,
                    B: jax.Array, *, row_tile: int, m: int,
+                   r_tile: int | None = None, blocks_per_step: int = 1,
                    interpret: bool = False):
     """Returns (out (m,r) f32->B.dtype, r_vals (nblocks, nz_block))."""
     nb, k = rows_local.shape
     r = B.shape[-1]
     n_b = B.shape[0]
+    bps = blocks_per_step
+    r_tile = r if r_tile is None else r_tile
     assert m % row_tile == 0, (m, row_tile)
-    zeros = jnp.zeros((m, r), jnp.float32)
+    assert r % r_tile == 0, (r, r_tile)
+    assert nb % bps == 0, (nb, bps)
+    out_zeros = jnp.zeros((m, r), jnp.float32)
+
+    if r_tile == r:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb // bps,),
+            in_specs=[
+                pl.BlockSpec((bps, k), lambda i, base: (i, 0)),
+                pl.BlockSpec((bps, k), lambda i, base: (i, 0)),
+                pl.BlockSpec((bps, k), lambda i, base: (i, 0)),
+                pl.BlockSpec((row_tile, r),
+                             lambda i, base: (base[i * bps], 0)),   # A
+                pl.BlockSpec((n_b, r), lambda i, base: (0, 0)),     # B
+                pl.BlockSpec((row_tile, r),
+                             lambda i, base: (base[i * bps], 0)),   # acc
+            ],
+            out_specs=[
+                pl.BlockSpec((row_tile, r),
+                             lambda i, base: (base[i * bps], 0)),
+                pl.BlockSpec((bps, k), lambda i, base: (i, 0)),
+            ],
+        )
+        out, r_vals = pl.pallas_call(
+            functools.partial(_fusedmm_kernel, row_tile=row_tile),
+            grid_spec=grid_spec,
+            out_shape=[jax.ShapeDtypeStruct((m, r), jnp.float32),
+                       jax.ShapeDtypeStruct((nb, k), vals.dtype)],
+            input_output_aliases={6: 0},   # acc zeros -> out (incl. prefetch)
+            interpret=interpret,
+        )(tile_base_blk, rows_local, cols, vals, A, B, out_zeros)
+        return out.astype(B.dtype), r_vals
+
+    rv_zeros = jnp.zeros((nb, k), jnp.float32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nb,),
+        grid=(2, r // r_tile, nb // bps),       # phase axis is outermost
         in_specs=[
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
-            pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),  # A
-            pl.BlockSpec((n_b, r), lambda i, base: (0, 0)),             # B
-            pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),  # acc
+            pl.BlockSpec((bps, k), lambda ph, j, i, base: (i, 0)),
+            pl.BlockSpec((bps, k), lambda ph, j, i, base: (i, 0)),
+            pl.BlockSpec((bps, k), lambda ph, j, i, base: (i, 0)),
+            pl.BlockSpec((row_tile, r_tile),
+                         lambda ph, j, i, base: (base[i * bps], j)),  # A
+            pl.BlockSpec((n_b, r_tile),
+                         lambda ph, j, i, base: (0, j)),              # B slab
+            pl.BlockSpec((row_tile, r_tile),
+                         lambda ph, j, i, base: (base[i * bps], j)),  # acc out
+            pl.BlockSpec((bps, k), lambda ph, j, i, base: (i, 0)),    # acc rv
         ],
         out_specs=[
-            pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
+            pl.BlockSpec((row_tile, r_tile),
+                         lambda ph, j, i, base: (base[i * bps], j)),
+            pl.BlockSpec((bps, k), lambda ph, j, i, base: (i, 0)),
         ],
     )
     out, r_vals = pl.pallas_call(
-        functools.partial(_fusedmm_kernel, row_tile=row_tile),
+        functools.partial(_fusedmm2_kernel, row_tile=row_tile),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((m, r), jnp.float32),
-                   jax.ShapeDtypeStruct((nb, k), vals.dtype)],
-        input_output_aliases={6: 0},   # acc zeros -> out (index incl. prefetch)
+                   jax.ShapeDtypeStruct((nb, k), jnp.float32)],
+        input_output_aliases={6: 0, 7: 1},     # indices include prefetch arg
         interpret=interpret,
-    )(tile_base_blk, rows_local, cols, vals, A, B, zeros)
-    return out.astype(B.dtype), r_vals
+    )(tile_base_blk, rows_local, cols, vals, A, B, out_zeros, rv_zeros)
+    return out.astype(B.dtype), r_vals.astype(vals.dtype)

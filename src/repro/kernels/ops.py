@@ -2,13 +2,22 @@
 
 ``backend="pallas"`` runs the Pallas kernels (interpret mode on CPU, native
 on TPU); ``backend="ref"`` uses the pure-jnp oracles.  The distributed
-algorithms in ``repro.core.algorithms`` call these for every local kernel
-invocation, so flipping the backend flips the whole system.
+algorithms in ``repro.core`` call these for every local kernel invocation,
+so flipping the backend flips the whole system.
+
+Tiling knobs (see DESIGN.md): every wrapper accepts ``r_tile`` (width of
+the embedding slab resident in VMEM per grid step) and ``blocks_per_step``
+(nonzero blocks merged per grid step).  When left ``None`` they default via
+``costmodel.choose_tiling`` — VMEM-budget-driven for ``r_tile``; pack-stat-
+driven for ``blocks_per_step`` when the pack structure is concrete (inside
+jit-traced callers the structure is abstract, so the default stays 1 and
+planners pass explicit values chosen at plan time).
 """
 from __future__ import annotations
 
 import jax
 
+from repro.core import costmodel
 from repro.core.sparse import RowTiledCOO
 from repro.kernels import ref as _ref
 from repro.kernels.sddmm import sddmm_pallas
@@ -28,39 +37,78 @@ def set_default_backend(backend: str) -> None:
     _DEFAULT_BACKEND = backend
 
 
+def _resolve_tiling(S: RowTiledCOO, n_b: int, r: int,
+                    r_tile: int | None, blocks_per_step: int | None):
+    """Fill unset knobs from the cost model; never inspects traced data."""
+    concrete = not isinstance(S.tile_base, jax.core.Tracer)
+    derived_bps = False
+    if r_tile is None or blocks_per_step is None:
+        t = costmodel.choose_tiling(
+            n_b=n_b, r=r, nb=S.nblocks, k=S.nz_block, row_tile=S.row_tile,
+            tile_base=S.tile_base if concrete else None)
+        if r_tile is None:
+            r_tile = t.r_tile
+        if blocks_per_step is None:
+            blocks_per_step = t.blocks_per_step
+            derived_bps = True   # choose_tiling already proved feasibility
+    if blocks_per_step > 1 and concrete and not derived_bps:
+        # merging blocks is only sound when every aligned group shares one
+        # row window — a silently wrong answer otherwise, so refuse here.
+        # (Traced packs can't be checked; planners validate at plan time.)
+        feasible = costmodel.groupable_blocks_per_step(
+            S.tile_base, S.nz_block, cap=blocks_per_step)
+        if S.nblocks % blocks_per_step or feasible % blocks_per_step:
+            raise ValueError(
+                f"blocks_per_step={blocks_per_step} infeasible for this "
+                f"pack (nblocks={S.nblocks}, largest groupable step "
+                f"{feasible}); repack with pack_row_tiled(..., "
+                f"group={blocks_per_step})")
+    return r_tile, blocks_per_step
+
+
 def sddmm(A: jax.Array, B: jax.Array, S: RowTiledCOO,
-          backend: str | None = None) -> RowTiledCOO:
+          backend: str | None = None, *, r_tile: int | None = None,
+          blocks_per_step: int | None = None) -> RowTiledCOO:
     """R = S * (A @ B.T) sampled at nnz(S); returns S with new values."""
     backend = backend or _DEFAULT_BACKEND
     if backend == "ref":
         return _ref.sddmm(A, B, S)
+    r_tile, bps = _resolve_tiling(S, B.shape[0], B.shape[-1],
+                                  r_tile, blocks_per_step)
     vals = sddmm_pallas(S.tile_base // S.row_tile, S.rows_local, S.cols,
-                        S.vals, A, B, row_tile=S.row_tile,
-                        interpret=_interpret())
+                        S.vals, A, B, row_tile=S.row_tile, r_tile=r_tile,
+                        blocks_per_step=bps, interpret=_interpret())
     return S.with_vals(vals)
 
 
 def spmm(S: RowTiledCOO, B: jax.Array, m: int | None = None,
-         backend: str | None = None) -> jax.Array:
+         backend: str | None = None, *, r_tile: int | None = None,
+         blocks_per_step: int | None = None) -> jax.Array:
     """out = S @ B (shape (m, r))."""
     backend = backend or _DEFAULT_BACKEND
     m = m if m is not None else S.shape[0]
     if backend == "ref":
         return _ref.spmm(S, B, m)
+    r_tile, bps = _resolve_tiling(S, B.shape[0], B.shape[-1],
+                                  r_tile, blocks_per_step)
     return spmm_pallas(S.tile_base // S.row_tile, S.rows_local, S.cols,
-                       S.vals, B, row_tile=S.row_tile, m=m,
-                       interpret=_interpret())
+                       S.vals, B, row_tile=S.row_tile, m=m, r_tile=r_tile,
+                       blocks_per_step=bps, interpret=_interpret())
 
 
 def fusedmm(A: jax.Array, B: jax.Array, S: RowTiledCOO,
-            m: int | None = None, backend: str | None = None):
+            m: int | None = None, backend: str | None = None, *,
+            r_tile: int | None = None, blocks_per_step: int | None = None):
     """FusedMMA: out = SDDMM(A,B,S) @ B; returns (out, R)."""
     backend = backend or _DEFAULT_BACKEND
     m = m if m is not None else S.shape[0]
     if backend == "ref":
         return _ref.fusedmm(A, B, S, m)
+    r_tile, bps = _resolve_tiling(S, B.shape[0], B.shape[-1],
+                                  r_tile, blocks_per_step)
     out, r_vals = fusedmm_pallas(S.tile_base // S.row_tile, S.rows_local,
                                  S.cols, S.vals, A, B,
-                                 row_tile=S.row_tile, m=m,
+                                 row_tile=S.row_tile, m=m, r_tile=r_tile,
+                                 blocks_per_step=bps,
                                  interpret=_interpret())
     return out, S.with_vals(r_vals)

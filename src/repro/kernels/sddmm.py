@@ -2,12 +2,19 @@
 
 TPU adaptation (see DESIGN.md): nonzeros are pre-sorted by row and chunked
 into blocks of ``nz_block`` entries confined to a ``row_tile``-row window of
-A.  Per grid step we bring one (row_tile x r) window of A plus the whole
-local B tile into VMEM, gather the K participating rows of each, and emit
-K sampled dot products.  The window index comes from a scalar-prefetched
-``tile_base`` array (PrefetchScalarGridSpec), so block placement is
-data-dependent but known before the kernel runs — the Pallas analogue of the
-paper's amortized preprocessing of S.
+A.  The grid is 2-D, ``(r // r_tile, nb // bps)`` with the step axis minor:
+per grid step we bring one (row_tile x r_tile) window of A plus an
+(n_b, r_tile) slab of the local B tile into VMEM, gather the participating
+rows of each, and accumulate the partial sampled dot products over the
+embedding-dimension slabs.  ``blocks_per_step`` (bps) merges that many
+same-window nonzero blocks into one step to amortize dispatch overhead.
+
+The window index comes from a scalar-prefetched ``tile_base`` array
+(PrefetchScalarGridSpec), so block placement is data-dependent but known
+before the kernel runs — the Pallas analogue of the paper's amortized
+preprocessing of S.  Partial dots accumulate in f32 through an
+input/output-aliased zeros buffer (revisited once per r-slab sweep) and are
+cast to the sample dtype once at the end.
 """
 from __future__ import annotations
 
@@ -20,43 +27,58 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _sddmm_kernel(base_ref, rows_ref, cols_ref, vals_ref, a_ref, b_ref,
-                  out_ref):
-    rl = rows_ref[0]                     # int32[K], window-local row ids
-    cl = cols_ref[0]                     # int32[K]
-    v = vals_ref[0].astype(jnp.float32)  # f32[K]
-    a = a_ref[...].astype(jnp.float32)   # (row_tile, r) VMEM window of A
-    b = b_ref[...].astype(jnp.float32)   # (nB, r) local B tile
-    a_rows = jnp.take(a, rl, axis=0)     # (K, r) gather within the window
-    b_rows = jnp.take(b, cl, axis=0)     # (K, r)
-    dots = jnp.sum(a_rows * b_rows, axis=-1)  # f32[K]
-    out_ref[0] = (v * dots).astype(out_ref.dtype)
+                  acc_ref, out_ref):
+    rl = rows_ref[...].reshape(-1)       # int32[bps*K], window-local row ids
+    cl = cols_ref[...].reshape(-1)       # int32[bps*K]
+    v = vals_ref[...].astype(jnp.float32)   # f32[bps, K]
+    a = a_ref[...].astype(jnp.float32)   # (row_tile, r_tile) VMEM window of A
+    b = b_ref[...].astype(jnp.float32)   # (n_b, r_tile) slab of local B tile
+    a_rows = jnp.take(a, rl, axis=0)     # (bps*K, r_tile) gather in window
+    b_rows = jnp.take(b, cl, axis=0)     # (bps*K, r_tile)
+    dots = jnp.sum(a_rows * b_rows, axis=-1).reshape(v.shape)
+    # Accumulate through the out window: revisits across r-slab sweeps are
+    # non-consecutive, but the aliased acc input shares the window buffer
+    # and is re-fetched from HBM on every block-index change, restoring
+    # the prior partial before this add (see DESIGN.md §2).
+    out_ref[...] += v * dots
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("row_tile", "interpret"))
+                   static_argnames=("row_tile", "r_tile", "blocks_per_step",
+                                    "interpret"))
 def sddmm_pallas(tile_base_blk: jax.Array, rows_local: jax.Array,
                  cols: jax.Array, vals: jax.Array, A: jax.Array,
-                 B: jax.Array, *, row_tile: int,
+                 B: jax.Array, *, row_tile: int, r_tile: int | None = None,
+                 blocks_per_step: int = 1,
                  interpret: bool = False) -> jax.Array:
     """Returns new sampled values, shape (nblocks, nz_block)."""
     nb, k = rows_local.shape
     r = A.shape[-1]
     n_b = B.shape[0]
+    bps = blocks_per_step
+    r_tile = r if r_tile is None else r_tile
+    assert r % r_tile == 0, (r, r_tile)
+    assert nb % bps == 0, (nb, bps)
+    zeros = jnp.zeros((nb, k), jnp.float32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nb,),
+        grid=(r // r_tile, nb // bps),
         in_specs=[
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),        # rows_local
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),        # cols
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),        # vals
-            pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),  # A win
-            pl.BlockSpec((n_b, r), lambda i, base: (0, 0)),      # B (whole)
+            pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),  # rows_local
+            pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),  # cols
+            pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),  # vals
+            pl.BlockSpec((row_tile, r_tile),
+                         lambda j, i, base: (base[i * bps], j)),  # A window
+            pl.BlockSpec((n_b, r_tile), lambda j, i, base: (0, j)),  # B slab
+            pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),  # acc
         ],
-        out_specs=pl.BlockSpec((1, k), lambda i, base: (i, 0)),
+        out_specs=pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _sddmm_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nb, k), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((nb, k), jnp.float32),
+        input_output_aliases={6: 0},   # acc zeros -> out (index incl. prefetch)
         interpret=interpret,
-    )(tile_base_blk, rows_local, cols, vals, A, B)
+    )(tile_base_blk, rows_local, cols, vals, A, B, zeros)
+    return out.astype(vals.dtype)

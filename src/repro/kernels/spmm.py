@@ -5,11 +5,21 @@ runs on the MXU: for each nonzero block we gather the K participating rows
 of B, scale by the sample values, and accumulate
 
     out_window += onehot(rows_local)  @  (vals[:, None] * B[cols])
-      (row_tile x K)                     (K x r)
+      (row_tile x K)                     (K x r_tile)
 
-Row-sorted packing guarantees output windows are revisited consecutively,
-so the accumulator stays resident in VMEM across grid steps; the output is
-input/output-aliased to a zeros buffer so untouched windows are zero.
+VMEM tiling (see DESIGN.md): the grid is 2-D, ``(r // r_tile, nb // bps)``
+with the step axis minor.  B enters VMEM as an ``(n_b, r_tile)`` slab that
+stays resident for a whole sweep over the nonzero blocks, so the kernel
+scales to embedding widths far beyond what a whole-B residency allows.
+``blocks_per_step`` (bps) merges that many row-sorted nonzero blocks — all
+sharing one ``tile_base`` window, guaranteed by the packer's ``group``
+option — into a single grid step, deepening the one-hot contraction and
+amortizing per-step dispatch overhead for small-K packs.
+
+Output windows are input/output-aliased to a zeros buffer: on first visit
+the fetched alias initializes the accumulator, on revisits (consecutive
+within a sweep thanks to row-sorted packing) the partial stays resident in
+VMEM; untouched windows remain zero.
 """
 from __future__ import annotations
 
@@ -23,41 +33,51 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _spmm_kernel(base_ref, rows_ref, cols_ref, vals_ref, b_ref, acc_ref,
                  out_ref, *, row_tile):
-    rl = rows_ref[0]
-    cl = cols_ref[0]
-    v = vals_ref[0].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    b_rows = jnp.take(b, cl, axis=0)                     # (K, r)
-    scaled = v[:, None] * b_rows                         # (K, r)
+    rl = rows_ref[...].reshape(-1)                       # (bps*K,)
+    cl = cols_ref[...].reshape(-1)
+    v = vals_ref[...].reshape(-1).astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)                   # (n_b, r_tile)
+    b_rows = jnp.take(b, cl, axis=0)                     # (bps*K, r_tile)
+    scaled = v[:, None] * b_rows
     iota = jax.lax.broadcasted_iota(jnp.int32, (row_tile, rl.shape[0]), 0)
-    onehot = (iota == rl[None, :]).astype(jnp.float32)   # (row_tile, K)
+    onehot = (iota == rl[None, :]).astype(jnp.float32)   # (row_tile, bps*K)
     out_ref[...] += jax.lax.dot(
         onehot, scaled, preferred_element_type=jnp.float32
     ).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("row_tile", "m", "interpret"))
+                   static_argnames=("row_tile", "m", "r_tile",
+                                    "blocks_per_step", "interpret"))
 def spmm_pallas(tile_base_blk: jax.Array, rows_local: jax.Array,
                 cols: jax.Array, vals: jax.Array, B: jax.Array, *,
-                row_tile: int, m: int, interpret: bool = False) -> jax.Array:
+                row_tile: int, m: int, r_tile: int | None = None,
+                blocks_per_step: int = 1,
+                interpret: bool = False) -> jax.Array:
     """Returns out (m, r) = S @ B accumulated in f32, cast to B.dtype."""
     nb, k = rows_local.shape
     r = B.shape[-1]
     n_b = B.shape[0]
+    bps = blocks_per_step
+    r_tile = r if r_tile is None else r_tile
     assert m % row_tile == 0, (m, row_tile)
+    assert r % r_tile == 0, (r, r_tile)
+    assert nb % bps == 0, (nb, bps)
     zeros = jnp.zeros((m, r), jnp.float32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nb,),
+        # step axis minor: one B slab stays VMEM-resident per block sweep
+        grid=(r // r_tile, nb // bps),
         in_specs=[
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, base: (i, 0)),
-            pl.BlockSpec((n_b, r), lambda i, base: (0, 0)),          # B
-            pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),  # acc
+            pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),
+            pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),
+            pl.BlockSpec((bps, k), lambda j, i, base: (i, 0)),
+            pl.BlockSpec((n_b, r_tile), lambda j, i, base: (0, j)),    # B
+            pl.BlockSpec((row_tile, r_tile),
+                         lambda j, i, base: (base[i * bps], j)),       # acc
         ],
-        out_specs=pl.BlockSpec((row_tile, r), lambda i, base: (base[i], 0)),
+        out_specs=pl.BlockSpec((row_tile, r_tile),
+                               lambda j, i, base: (base[i * bps], j)),
     )
     out = pl.pallas_call(
         functools.partial(_spmm_kernel, row_tile=row_tile),

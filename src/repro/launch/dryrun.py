@@ -30,6 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import (ModelConfig, ParallelConfig, ServeConfig,
                           TrainConfig, get_config)
+from repro.distributed import sharding
 from repro.distributed.sharding import fsdp_extend_tree, sanitize_tree
 from repro.launch.mesh import make_production_mesh
 
@@ -96,7 +97,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
 
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.set_mesh(mesh)   # ambient mesh: activation constraints apply
+    sharding.set_mesh(mesh)   # ambient mesh: activation constraints apply
     info = SHAPES[shape]
     kind = info["kind"]
     pcfg = ParallelConfig(

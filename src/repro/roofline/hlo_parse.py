@@ -88,16 +88,23 @@ def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
         if "-start" in line and op + "-start" in line:
             continue  # paired with -done; avoid double counting
         args = line[line.index(op + "(") + len(op) + 1:]
+        # split top-level commas only: shape strings ("f32[64,64]{1,0}")
+        # and nested calls carry commas of their own
         depth, arglist, cur = 0, [], ""
         for ch in args:
-            if ch == "(":
+            if ch in "([{":
                 depth += 1
+                cur += ch
             elif ch == ")":
                 if depth == 0:
                     arglist.append(cur)
                     break
                 depth -= 1
-            if ch == "," and depth == 0:
+                cur += ch
+            elif ch in "]}":
+                depth -= 1
+                cur += ch
+            elif ch == "," and depth == 0:
                 arglist.append(cur)
                 cur = ""
             else:

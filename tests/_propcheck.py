@@ -1,0 +1,95 @@
+"""Fallback property-test sampler used when ``hypothesis`` is unavailable.
+
+Provides just enough of the ``hypothesis`` surface for our test suite —
+``given``, ``settings`` and the ``strategies`` used in it — backed by a
+deterministic numpy sampler.  Each ``@given`` test runs ``max_examples``
+times (default 12) over seeded draws, so the property tests still exercise
+many random cases without the optional dependency installed.
+
+Usage (in test modules)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 12
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `hypothesis.strategies` as a namespace
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.integers(len(options))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Decorator recording the example budget on the test function."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Run the test over deterministic seeded draws of the strategies."""
+    def deco(fn):
+        # settings() may be applied above or below @given
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_propcheck_max_examples",
+                        getattr(wrapper, "_propcheck_max_examples",
+                                _DEFAULT_EXAMPLES))
+            # stable across processes (hash() is PYTHONHASHSEED-randomized)
+            base = zlib.crc32(fn.__qualname__.encode()) % (2 ** 31)
+            for ex in range(n):
+                rng = np.random.default_rng(base + ex)
+                drawn = {name: s.draw(rng) for name, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {ex}: {drawn}"
+                    ) from e
+        # hide the strategy parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def _signature_check():  # pragma: no cover - sanity helper
+    return inspect.signature(given)

@@ -53,8 +53,13 @@ for c in (2, 4):
                         ("fused", plan, "d15_local_fusion")):
         low = d15.fusedmm_d15.lower(g, pl, Ash, Bsh, elision=el)
         n_ag_rs = {"none": 2, "reuse": 1, "fused": 2}[el]
-        n_rounds = {"none": 2, "reuse": 2, "fused": 1}[el]
-        impl = n_ag_rs * (c - 1) * mA * r + n_rounds * L * nB * r
+        # Unrolled double-buffered rounds: a round whose final shifted
+        # buffer is consumed costs L shifts, a round whose cycle-closing
+        # shift is dead costs L-1 (XLA DCEs it) — so 2 rounds -> 2L-1,
+        # the single fused round -> L-1.
+        n_shifts = {"none": 2 * L - 1, "reuse": 2 * L - 1,
+                    "fused": L - 1}[el]
+        impl = n_ag_rs * (c - 1) * mA * r + n_shifts * nB * r
         paper = costmodel.words_fusedmm(alg, p=p, c=c, n=n, r=r, nnz=nnz).words
         report(f"{alg} c={c}", wire_words(low), impl, paper)
 
@@ -65,7 +70,9 @@ for c in (2, 4):
     nb, k = plans.rows_local.shape[-2:]
     for el, n_ag in (("reuse", 2), ("none", 3)):
         low = s15.fusedmm_s15.lower(g, plans, As, Bs, elision=el)
-        shift_words = 2 * L * (3 * nb * k + nb)          # pack payload
+        # pack payload: SDDMM round L shifts (pack returns home, live),
+        # SpMM round L-1 (cycle-closing shift dead, DCE'd)
+        shift_words = (2 * L - 1) * (3 * nb * k + nb)
         impl = n_ag * (c - 1) * m * (r // p) + shift_words
         paper = costmodel.words_fusedmm("s15_replication_reuse",
                                         p=p, c=c, n=n, r=r, nnz=nnz).words
@@ -79,12 +86,25 @@ B_sk = d25.skew_b(g25, B)
 pland = d25.plan_d25(g25, rows, cols, vals, m, n, r, row_tile=32, nz_block=32)
 plandt = d25.plan_d25(g25, rows, cols, vals, m, n, r, transpose=True, row_tile=32, nz_block=32)
 mA, rW, nS = m // (G * c), r // G, n // (G * c)
-nb, k = pland.rows_local.shape[-2:]
 for el, pl, alg, n_agrs in (("none", pland, "d25_no_elision", 2),
                             ("reuse", plandt, "d25_replication_reuse", 1)):
     low = d25.fusedmm_d25.lower(g25, pl, Ash, B_sk, elision=el)
+    nb, k = pl.rows_local.shape[-2:]
     pack_words = 3 * nb * k + nb
-    impl = n_agrs * (c - 1) * mA * rW + 2 * G * (pack_words + nS * rW)
+    # Unrolled double-buffered Cannon rounds: a shift whose result is
+    # consumed downstream costs its payload; cycle-closing shifts of
+    # buffers nobody reads again are dead and DCE'd by XLA.
+    if el == "none":
+        # round 1: pack coords+partials and B, G live shifts each (both
+        # feed round 2); round 2: value pack + B, G-1 live shifts.
+        impl_shifts = G * (pack_words + nS * rW) \
+            + (G - 1) * (pack_words + nS * rW)
+    else:
+        # round 1: pack G, B G-1 (B home unused); round 2: traveling
+        # (nS, rW) output G, contrib structure G-1.
+        impl_shifts = G * pack_words + (G - 1) * nS * rW \
+            + G * nS * rW + (G - 1) * pack_words
+    impl = n_agrs * (c - 1) * mA * rW + impl_shifts
     paper = costmodel.words_fusedmm(alg, p=p, c=c, n=n, r=r, nnz=nnz).words
     report(f"{alg}", wire_words(low), impl, paper)
 
@@ -94,7 +114,10 @@ B_sk2 = s25.skew_dense(g25, B, along="col")
 low = s25.fusedmm_s25.lower(g25, plans25, A_sk, B_sk2)
 nb, k = plans25.rows_local.shape[-2:]
 mS, nS2, rc = plans25.mS, plans25.nS, plans25.rc
-impl = 2 * (c - 1) / c * nb * k + 2 * G * (mS * rc + nS2 * rc)
+# dense r-chunk shifts: A G-1 (home copy dead), B G + G-1 across the two
+# rounds, traveling output G; values-only fiber traffic (RS + AG)
+impl = 2 * (c - 1) / c * nb * k \
+    + (2 * G - 1) * (mS * rc + nS2 * rc)
 paper = costmodel.words_fusedmm("s25_no_elision", p=p, c=c, n=n, r=r,
                                 nnz=nnz).words
 report("s25_no_elision", wire_words(low), impl, paper)

@@ -28,7 +28,7 @@ def run(c, m=256, n=320, r=64, nnz_row=5, seed=0):
 
     # --- SDDMM
     rv = sddmm_vals = d15.sddmm_d15(grid, plan, Ash, Bsh)
-    got = plan.meta.block_meta.to_dense(plan.rows_local, plan.cols, np.asarray(rv), plan.tile_base)
+    got = plan.meta.block_meta.to_dense(plan.rows_local, plan.cols, rv, plan.tile_base)
     want = np.asarray(ref.sddmm_dense(A, B, jnp.asarray(Sd)))
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
     print(f"c={c} sddmm ok")

@@ -2,7 +2,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fall back to the deterministic sampler
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import costmodel as cm
 

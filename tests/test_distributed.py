@@ -54,6 +54,12 @@ def test_s25_all_modes():
 
 
 @pytest.mark.slow
+def test_d15_overlap_matches_serial_bitwise():
+    out = run_script("check_d15_overlap.py")
+    assert "D15 OVERLAP IDENTITY OK" in out
+
+
+@pytest.mark.slow
 def test_comm_costs_match_table3():
     out = run_script("check_comm_costs.py")
     assert "ALL COMM COSTS OK" in out

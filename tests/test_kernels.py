@@ -7,7 +7,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fall back to the deterministic sampler
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import sparse
 from repro.kernels import ops, ref
@@ -155,6 +159,98 @@ def test_property_fused_equals_unfused(seed):
     unfused = ops.spmm(R, B)
     np.testing.assert_allclose(np.asarray(fused_out), np.asarray(unfused),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# VMEM tiling knobs: r_tile / blocks_per_step (see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+TILINGS = [  # (r_tile, blocks_per_step) against r=128 packs with group=4
+    (128, 1),   # whole-r residency, single block per step (baseline)
+    (64, 1),    # r tiled into 2 VMEM slabs
+    (32, 2),    # 4 slabs x 2-block steps
+    (32, 4),    # 4 slabs x 4-block steps
+]
+
+
+def make_tiled_problem(m, n, k, seed, dtype, r=128):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = sparse.erdos_renyi(m, n, k, seed=seed)
+    S = sparse.pack_row_tiled(rows, cols, vals, (m, n), row_tile=64,
+                              nz_block=32, group=4)
+    A = jnp.asarray(rng.standard_normal((m, r)), dtype)
+    B = jnp.asarray(rng.standard_normal((n, r)), dtype)
+    return S, A, B
+
+
+@pytest.mark.parametrize("r_tile,bps", TILINGS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sddmm_tiling_equivalence(r_tile, bps, dtype):
+    S, A, B = make_tiled_problem(256, 192, 6, seed=11, dtype=dtype)
+    got = ops.sddmm(A, B, S, r_tile=r_tile, blocks_per_step=bps).vals
+    want = ref.sddmm(A, B, S).vals
+    tol = 2e-4 if dtype == jnp.float32 else 0.12 * np.sqrt(128) / 8
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("r_tile,bps", TILINGS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_tiling_equivalence(r_tile, bps, dtype):
+    S, A, B = make_tiled_problem(256, 192, 6, seed=13, dtype=dtype)
+    got = ops.spmm(S, B, r_tile=r_tile, blocks_per_step=bps)
+    want = ref.spmm(S, B)
+    tol = 2e-4 if dtype == jnp.float32 else 0.2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("r_tile,bps", TILINGS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fusedmm_tiling_equivalence(r_tile, bps, dtype):
+    """Covers both fused paths: single-phase (r_tile==r) and two-phase."""
+    S, A, B = make_tiled_problem(256, 192, 6, seed=17, dtype=dtype)
+    got_out, got_R = ops.fusedmm(A, B, S, r_tile=r_tile, blocks_per_step=bps)
+    want_out, want_R = ref.fusedmm(A, B, S)
+    tol = 2e-3 if dtype == jnp.float32 else 0.5
+    np.testing.assert_allclose(np.asarray(got_out, np.float32),
+                               np.asarray(want_out, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(got_R.vals, np.float32),
+                               np.asarray(want_R.vals, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_grouped_pack_feasibility():
+    """group=g packing must make every blocks_per_step dividing g legal."""
+    from repro.core import costmodel
+    rows, cols, vals = sparse.erdos_renyi(512, 256, 3, seed=5)
+    S = sparse.pack_row_tiled(rows, cols, vals, (512, 256), row_tile=64,
+                              nz_block=32, group=4)
+    assert S.nblocks % 4 == 0
+    tb = np.asarray(S.tile_base)
+    for g in (2, 4):
+        groups = tb.reshape(-1, g)
+        assert (groups == groups[:, :1]).all()
+    assert costmodel.groupable_blocks_per_step(tb, S.nz_block, cap=4) == 4
+    # and the matrix survives the padding round-trip
+    dense = np.zeros((512, 256), np.float32)
+    dense[rows, cols] = vals
+    np.testing.assert_array_equal(np.asarray(S.to_dense()), dense)
+
+
+def test_choose_tiling_respects_vmem_budget():
+    from repro.core import costmodel
+    t = costmodel.choose_tiling(n_b=1 << 16, r=1024, nb=64, k=256,
+                                row_tile=256,
+                                vmem_budget=8 * 1024 * 1024)
+    assert 1024 % t.r_tile == 0 and t.r_tile < 1024
+    assert 2 * (1 << 16) * t.r_tile * 4 <= 8 * 1024 * 1024 or t.r_tile <= 128
+    # small problems keep full-r residency
+    t2 = costmodel.choose_tiling(n_b=256, r=128, nb=8, k=32, row_tile=64)
+    assert t2.r_tile == 128
 
 
 def test_packer_roundtrip():
