@@ -1,0 +1,75 @@
+"""Distributed-algorithm benchmarks through the unified repro.core.api.
+
+Sweeps algorithm x elision x replication-caching (Session on/off) on
+Erdos-Renyi inputs over the 8-device host mesh, timing the full
+FusedMM path (device kernels + host assembly — the api contract).  The
+session rows measure the across-call replication-reuse elision: the
+second-and-later calls of an iterative solver, with the stationary
+operand's fiber gather served from cache.
+
+Writes ``BENCH_dist.json`` so the perf trajectory of the distributed
+layer is machine-readable from PR to PR.
+"""
+import numpy as np
+
+from benchmarks import common
+from repro.core import api, sparse
+
+JSON_PATH = "BENCH_dist.json"
+
+M = N = 1024
+R = 64
+NNZ_ROW = 8
+
+
+def run(out, json_path=JSON_PATH):
+    rows, cols, vals = sparse.erdos_renyi(M, N, NNZ_ROW, seed=0)
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((M, R)).astype(np.float32)
+    Y = rng.standard_normal((N, R)).astype(np.float32)
+    records = []
+
+    for name in sorted(api.ALGORITHMS):
+        prob = api.make_problem(rows, cols, vals, (M, N), R,
+                                algorithm=name)
+        for elision in prob.alg.elisions:
+            # uncached: every call pays the full gather
+            t_plain = common.timeit(
+                lambda: prob.fusedmm(X, Y, elision=elision)[0], iters=2)
+            # session-cached steady state: fill once, then time hits
+            sess = api.Session()
+            prob.fusedmm(X, Y, elision=elision, session=sess)
+            t_cached = common.timeit(
+                lambda: prob.fusedmm(X, Y, elision=elision,
+                                     session=sess)[0], iters=2)
+            out(common.csv_line(
+                f"dist.{name}.{elision}", t_plain,
+                f"c={prob.c};cached_ratio={t_cached / t_plain:.2f}"))
+            for cached, t in ((False, t_plain), (True, t_cached)):
+                records.append(dict(
+                    name=name, elision=elision, session_cached=cached,
+                    c=prob.c, m=M, n=N, r=R, nnz=prob.nnz,
+                    phi=prob.phi, seconds=t))
+
+        t_sddmm = common.timeit(lambda: prob.sddmm(X, Y).to_dense(),
+                                iters=2)
+        t_spmm = common.timeit(lambda: prob.spmm(Y), iters=2)
+        out(common.csv_line(f"dist.{name}.sddmm", t_sddmm, f"c={prob.c}"))
+        out(common.csv_line(f"dist.{name}.spmm", t_spmm, f"c={prob.c}"))
+        records.append(dict(name=name, elision=None, kernel="sddmm",
+                            session_cached=False, c=prob.c, m=M, n=N,
+                            r=R, nnz=prob.nnz, phi=prob.phi,
+                            seconds=t_sddmm))
+        records.append(dict(name=name, elision=None, kernel="spmm",
+                            session_cached=False, c=prob.c, m=M, n=N,
+                            r=R, nnz=prob.nnz, phi=prob.phi,
+                            seconds=t_spmm))
+
+    path = common.emit_json(json_path, records,
+                            meta=dict(bench="dist", m=M, n=N, r=R,
+                                      nnz_row=NNZ_ROW))
+    out(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run(print)

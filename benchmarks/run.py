@@ -15,6 +15,7 @@ import traceback
 
 MODULES = [
     ("kernels", "benchmarks.bench_kernels"),
+    ("dist", "benchmarks.bench_dist"),
     ("table3", "benchmarks.bench_table3_comm"),
     ("fig4", "benchmarks.bench_fig4_weak_scaling"),
     ("fig5", "benchmarks.bench_fig5_breakdown"),

@@ -1,7 +1,13 @@
 """Paper application 2: GAT forward pass via the r=2-SDDMM score trick.
 
-  PYTHONPATH=src python examples/gat_inference.py
+  PYTHONPATH=src python examples/gat_inference.py [--distributed]
+
+With --distributed the score SDDMM and aggregation SpMM run through the
+unified repro.core.api (cost-model-chosen algorithm), with the row
+softmax between them applied on completed rows (paper Fig. 9).
 """
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,12 +15,19 @@ import numpy as np
 from repro.apps import gat
 
 if __name__ == "__main__":
+    distributed = "--distributed" in sys.argv[1:]
     n, d, heads = 8192, 64, 4
-    S = gat.make_graph(n, nnz_per_row=16, seed=0)
     rng = np.random.default_rng(0)
     H = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
     layers = [gat.init_gat_layer(jax.random.PRNGKey(i), d, d)
               for i in range(2)]
-    out = gat.gat_forward(S, H, layers, n_heads=heads)
+    if distributed:
+        graph = gat.make_dist_graph(n, nnz_per_row=16, r=d // heads,
+                                    seed=0)
+        print(f"distributed on {graph.alg.name} (c={graph.c})")
+        out = gat.gat_forward_distributed(graph, H, layers, n_heads=heads)
+    else:
+        S = gat.make_graph(n, nnz_per_row=16, seed=0)
+        out = gat.gat_forward(S, H, layers, n_heads=heads)
     print("GAT output:", out.shape, "finite:",
           bool(np.isfinite(np.asarray(out)).all()))

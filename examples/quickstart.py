@@ -3,6 +3,7 @@
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import costmodel, sparse
@@ -32,3 +33,13 @@ ranking = costmodel.select_algorithm(p=256, n=n, r=r, nnz=len(vals))
 print("algorithm ranking at p=256 (words/proc):")
 for name, cost in ranking.items():
     print(f"  {name:28s} c*={cost.c:3d}  words={cost.words:,.0f}")
+
+# 5. the unified distributed entrypoint: every algorithm family behind
+# one signature, dispatched by the same cost model (repro.core.api)
+from repro.core import api
+prob = api.make_problem(rows, cols, vals, (m, n), r)     # algorithm="auto"
+print(f"auto dispatch on {len(jax.devices())} device(s): "
+      f"{prob.alg.name} c={prob.c} elision={prob.resolve_elision()}")
+out, _ = prob.fusedmm(A, B)
+print("api fusedmm == local fused:",
+      bool(np.allclose(out, np.asarray(F), rtol=1e-3, atol=1e-3)))

@@ -8,6 +8,16 @@ rows at once.  The batched matvec
 
 is exactly FusedMMA(mask, X, B) + lambda X — the paper's key observation —
 so every CG iteration is one FusedMM call through the repro kernels.
+
+Two paths share the math:
+
+* the single-device path (`run_als`) calls the local Pallas kernels;
+* the distributed path (`run_als_distributed`) runs every kernel through
+  `repro.core.api` — any registered algorithm, `algorithm="auto"` by
+  default — and threads an `api.Session` through the CG loop, so the
+  fiber replication of the *stationary* factor matrix is paid once per
+  solve instead of once per iteration (the paper's replication-reuse
+  elision extended across iterations).
 """
 from __future__ import annotations
 
@@ -17,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sparse
+from repro.core import api, sparse
 from repro.kernels import ops
 
 
@@ -84,6 +94,114 @@ def loss(prob: ALSProblem, A, B):
     """|| C - SDDMM(A, B, mask) ||_F^2 on observed entries."""
     pred = ops.sddmm(A, B, prob.mask)
     return float(jnp.sum((prob.S.vals - pred.vals) ** 2))
+
+
+# ---------------------------------------------------------------------------
+# Distributed path: every kernel call through the unified repro.core.api
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DistALSProblem:
+    """Ratings + mask problems in both orientations, one grid.
+
+    A-solve matvecs run FusedMM on `mask`; B-solve matvecs on `mask_t`
+    (the normal equations of the transposed system).  `ratings` /
+    `ratings_t` supply the right-hand sides via SpMM.
+    """
+    ratings: api.DistProblem
+    ratings_t: api.DistProblem
+    mask: api.DistProblem
+    mask_t: api.DistProblem
+    m: int
+    n: int
+    r: int
+    reg: float = 0.1
+
+
+def make_dist_problem(m, n, nnz_per_row, r, *, algorithm="auto", c=None,
+                      devices=None, seed=0, reg=0.1, row_tile=32,
+                      nz_block=32) -> DistALSProblem:
+    """Distributed analogue of make_problem: one grid, four plans."""
+    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_per_row, seed=seed)
+    vals = np.abs(vals) + 0.5
+    ratings = api.make_problem(rows, cols, vals, (m, n), r,
+                               algorithm=algorithm, c=c, devices=devices,
+                               row_tile=row_tile, nz_block=nz_block)
+    mask = ratings.with_values(np.ones_like(vals))
+    return DistALSProblem(ratings, ratings.transposed(),
+                          mask, mask.transposed(), m, n, r, reg)
+
+
+def dist_fusedmm_matvec(maskP: api.DistProblem, X, B, reg,
+                        session: api.Session | None = None,
+                        elision: str = "auto"):
+    """y = FusedMM(mask, X, B) + reg*X through the unified API."""
+    out, _ = maskP.fusedmm(X, B, elision=elision, session=session)
+    return out + reg * np.asarray(X, np.float32)
+
+
+def dist_cg_solve(maskP: api.DistProblem, B, rhs, reg, iters=10,
+                  session: api.Session | None = None,
+                  elision: str = "auto"):
+    """Batched CG with every matvec one distributed FusedMM call.
+
+    B is stationary across the whole solve, so with a Session its fiber
+    replication happens exactly once (first matvec); the iterate X
+    changes every iteration and is replicated fresh — never stale.
+    """
+    rhs = np.asarray(rhs, np.float32)
+    X = np.zeros_like(rhs)
+    R = rhs - dist_fusedmm_matvec(maskP, X, B, reg, session, elision)
+    P = R
+    rs = np.sum(R * R, axis=1, keepdims=True)
+    for _ in range(iters):
+        AP = dist_fusedmm_matvec(maskP, P, B, reg, session, elision)
+        alpha = rs / np.maximum(np.sum(P * AP, axis=1, keepdims=True),
+                                1e-12)
+        X = X + alpha * P
+        R = R - alpha * AP
+        rs_new = np.sum(R * R, axis=1, keepdims=True)
+        P = R + (rs_new / np.maximum(rs, 1e-12)) * P
+        rs = rs_new
+    return X
+
+
+def dist_als_round(dp: DistALSProblem, A, B, cg_iters=10,
+                   session: api.Session | None = None):
+    """One distributed ALS round: optimize A given B, then B given A."""
+    rhs_a = dp.ratings.spmm(B)
+    A = dist_cg_solve(dp.mask, B, rhs_a, dp.reg, cg_iters, session)
+    rhs_b = dp.ratings_t.spmm(A)
+    B = dist_cg_solve(dp.mask_t, A, rhs_b, dp.reg, cg_iters, session)
+    return A, B
+
+
+def dist_loss(dp: DistALSProblem, A, B):
+    """|| C - SDDMM(A, B, mask) ||_F^2 on observed entries."""
+    pred = dp.mask.sddmm(A, B).values()
+    return float(np.sum((dp.ratings.vals - pred) ** 2))
+
+
+def run_als_distributed(m=1024, n=1024, nnz_per_row=8, r=32, rounds=3,
+                        cg_iters=10, seed=0, algorithm="auto", c=None,
+                        devices=None, verbose=True):
+    """End-to-end distributed ALS: the §VI-E application on any
+    registered algorithm, with Session-cached replication in the CG loop.
+    """
+    dp = make_dist_problem(m, n, nnz_per_row, r, seed=seed,
+                           algorithm=algorithm, c=c, devices=devices)
+    rng = np.random.default_rng(seed)
+    A = (rng.standard_normal((m, r)) * 0.1).astype(np.float32)
+    B = (rng.standard_normal((n, r)) * 0.1).astype(np.float32)
+    session = api.Session()
+    hist = [dist_loss(dp, A, B)]
+    for it in range(rounds):
+        A, B = dist_als_round(dp, A, B, cg_iters, session)
+        hist.append(dist_loss(dp, A, B))
+        if verbose:
+            print(f"ALS[{dp.mask.alg.name}] round {it}: "
+                  f"loss {hist[-2]:.1f} -> {hist[-1]:.1f}")
+    return A, B, hist
 
 
 def run_als(m=1024, n=1024, nnz_per_row=8, r=32, rounds=3, cg_iters=10,

@@ -12,6 +12,16 @@ A* = [u, 1] and B* = [1, v] the dot <A*_i, B*_j> = u_i + v_j, so the score
 computation IS an r=2 SDDMM through the repro kernels, and the aggregation
 is an SpMM — per the paper, local kernel fusion is NOT applicable because
 the softmax needs completed rows (noted in Fig. 9).
+
+The distributed path (`gat_layer_distributed`) runs the score SDDMM and
+the aggregation SpMM through `repro.core.api` on any registered
+algorithm.  Between the two kernels the row softmax is applied on
+*completed rows*, exactly as Fig. 9 requires: the sampled scores are
+collected into the problem's home COO order (each row's nonzeros
+complete — in the 1.5D sparse-shifting layout each processor's home
+block already holds full rows; host assembly generalizes this to all
+four families), softmaxed per row, and re-injected as the SpMM's sample
+values.
 """
 from __future__ import annotations
 
@@ -21,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sparse
+from repro.core import api, sparse
 from repro.kernels import ops
 
 
@@ -87,15 +97,95 @@ def gat_forward(S_ones, H0, layers, n_heads=1):
     return H
 
 
-def make_graph(n_nodes, nnz_per_row, seed=0, row_tile=128, nz_block=128):
+def graph_coo(n_nodes, nnz_per_row, seed=0):
+    """ER adjacency + self loops (standard GAT practice), unit values."""
     rows, cols, _ = sparse.erdos_renyi(n_nodes, n_nodes, nnz_per_row,
                                        seed=seed)
-    # add self loops (standard GAT practice) and unit values
     rows = np.concatenate([rows, np.arange(n_nodes, dtype=np.int32)])
     cols = np.concatenate([cols, np.arange(n_nodes, dtype=np.int32)])
     key = np.unique(rows.astype(np.int64) * n_nodes + cols)
     rows = (key // n_nodes).astype(np.int32)
     cols = (key % n_nodes).astype(np.int32)
-    vals = np.ones(len(rows), np.float32)
+    return rows, cols, np.ones(len(rows), np.float32)
+
+
+def make_graph(n_nodes, nnz_per_row, seed=0, row_tile=128, nz_block=128):
+    rows, cols, vals = graph_coo(n_nodes, nnz_per_row, seed=seed)
     return sparse.pack_row_tiled(rows, cols, vals, (n_nodes, n_nodes),
                                  row_tile=row_tile, nz_block=nz_block)
+
+
+# ---------------------------------------------------------------------------
+# Distributed path: score SDDMM + aggregation SpMM through repro.core.api,
+# row softmax on completed rows in between (paper Fig. 9)
+# ---------------------------------------------------------------------------
+
+def make_dist_graph(n_nodes, nnz_per_row, r, *, algorithm="auto", c=None,
+                    devices=None, seed=0, row_tile=32,
+                    nz_block=32) -> api.DistProblem:
+    """Adjacency as a DistProblem; ``r`` is the per-head output width the
+    aggregation SpMM will run at (must obey the family's r-divisibility)."""
+    rows, cols, vals = graph_coo(n_nodes, nnz_per_row, seed=seed)
+    return api.make_problem(rows, cols, vals, (n_nodes, n_nodes), r,
+                            algorithm=algorithm, c=c, devices=devices,
+                            row_tile=row_tile, nz_block=nz_block)
+
+
+def row_softmax_coo(rows, vals, n_rows):
+    """Numerically-safe softmax over each row's nonzeros, COO layout.
+
+    Operates on completed rows: every nonzero of a row must be present
+    (the api's home-COO assembly guarantees this for all four families).
+    """
+    vals = np.asarray(vals, np.float64)
+    rmax = np.full(n_rows, -np.inf)
+    np.maximum.at(rmax, rows, vals)
+    ex = np.exp(vals - np.where(np.isfinite(rmax), rmax, 0.0)[rows])
+    rsum = np.zeros(n_rows)
+    np.add.at(rsum, rows, ex)
+    return (ex / np.maximum(rsum[rows], 1e-30)).astype(np.float32)
+
+
+def gat_layer_distributed(graphP: api.DistProblem, H, p: GATParams,
+                          n_heads: int = 1, activation=jax.nn.elu):
+    """Distributed single layer, mirroring gat_layer head for head.
+
+    Per head: (1) score SDDMM via the augmented r=2 trick, zero-padded to
+    the family's minimum feasible width (padding columns contribute 0 to
+    every dot product); (2) LeakyReLU + row softmax on the completed-row
+    COO; (3) aggregation SpMM with the softmaxed attention as the sample
+    values.  No local fusion — the softmax barrier between the kernels is
+    exactly why (Fig. 9).
+    """
+    H = np.asarray(H, np.float32)
+    n = graphP.m
+    d_out = p.W.shape[1] // n_heads
+    mult = graphP.alg.min_r_multiple(graphP.grid)
+    r_score = max(2, ((2 + mult - 1) // mult) * mult)
+    scoreP = graphP.with_r(r_score)
+    aggP = graphP if graphP.r == d_out else graphP.with_r(d_out)
+    W = np.asarray(p.W)
+    a1, a2 = np.asarray(p.a1), np.asarray(p.a2)
+    outs = []
+    for h in range(n_heads):
+        Wh = H @ W[:, h * d_out:(h + 1) * d_out]
+        u = Wh @ a1[h * d_out:(h + 1) * d_out]
+        v = Wh @ a2[h * d_out:(h + 1) * d_out]
+        A_star = np.zeros((n, r_score), np.float32)
+        B_star = np.zeros((n, r_score), np.float32)
+        A_star[:, 0], A_star[:, 1] = u, 1.0
+        B_star[:, 0], B_star[:, 1] = 1.0, v
+        e = scoreP.sddmm(A_star, B_star).values()      # completed rows
+        e = np.where(e >= 0, e, 0.2 * e)               # LeakyReLU
+        attn = row_softmax_coo(graphP.rows, e, n)
+        outs.append(aggP.with_values(attn).spmm(Wh))
+    return activation(jnp.concatenate([jnp.asarray(o) for o in outs],
+                                      axis=1))
+
+
+def gat_forward_distributed(graphP: api.DistProblem, H0, layers,
+                            n_heads: int = 1):
+    H = H0
+    for p in layers:
+        H = gat_layer_distributed(graphP, H, p, n_heads=n_heads)
+    return H

@@ -1,0 +1,815 @@
+"""Unified distributed-algorithm API: Algorithm registry, DistProblem,
+Session (paper §V + §VI-E applications).
+
+The four executor families (``d15``, ``s15``, ``d25``, ``s25``) implement
+the same mathematical procedures — SDDMM, SpMM and FusedMM — with four
+different communication schedules.  This module puts them behind ONE
+abstraction so applications, launch tooling and benchmarks never branch
+per family:
+
+* **Algorithm** — registry entry binding a family's planner and its
+  sddmm/spmm/fusedmm executors to a shared signature.  All algorithms
+  expose *FusedMMA semantics*: ``fusedmm(S, X, Y) = (S * (X @ Y.T)) @ Y``
+  with output ``(m, r)``; where a family's replication-reuse executor is
+  the FusedMMB form (d15/d25), the registry runs it on the transpose pack
+  with swapped operands — ``FusedMMA(S, X, Y) = FusedMMB(S^T, Y, X)`` —
+  so the caller-visible contract never changes.
+* **DistProblem** — owns the host COO of S, the processor grid, and the
+  device-placed packs in every orientation the chosen strategies need
+  (built lazily, amortized across calls like the paper's preprocessing).
+* **Session** — caches *replication state*: the fiber-all-gathered copy of
+  a dense operand.  Within one FusedMM call the paper's replication-reuse
+  elision shares a single all-gather between the SDDMM and SpMM rounds;
+  the Session extends the same elision **across calls** — ALS's CG loop
+  calls FusedMM every iteration with the same stationary factor matrix,
+  so its gather is paid once per solve instead of once per iteration.
+  Cached calls are bitwise-identical to uncached ones: the executors'
+  ``pre_gathered`` paths feed the local kernels the very same operand
+  values the in-call all-gather would have produced.
+
+Dispatch: ``make_problem(..., algorithm="auto")`` ranks every feasible
+(family, elision, c) by the paper's Table-III bandwidth formulas
+(:func:`repro.core.costmodel.choose_algorithm`) — low phi = nnz/(n*r)
+selects the sparse-shifting/replicating families, high phi the dense ones.
+
+Results come back host-assembled (numpy) so the contract is uniform
+across the four families' on-device layouts; the family modules remain
+the layout-aware fast path for callers that keep data device-resident.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel, d15, d25, s15, s25
+from repro.core.grid import make_grid15, make_grid25
+
+__all__ = [
+    "ALGORITHMS", "Algorithm", "DistProblem", "Session", "SparseResult",
+    "make_problem", "sddmm", "spmm", "fusedmm", "activate",
+]
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+def _match_coo(sorted_keys, order, keys):
+    """Locate query coordinate keys (r*n + c) in a problem's COO.
+
+    ``(sorted_keys, order)`` come from :meth:`DistProblem.coo_sort`
+    (computed once per problem — the coordinates never change).  Returns
+    (positions, ok): for each query key, a position into the problem's
+    COO order and a mask of keys that actually occur there.  O(q log nnz)
+    per call; never materializes a dense matrix.
+    """
+    if len(order) == 0:
+        return (np.zeros(len(keys), np.int64),
+                np.zeros(len(keys), bool))
+    pos = np.minimum(np.searchsorted(sorted_keys, keys), len(order) - 1)
+    idx = order[pos]
+    return idx, sorted_keys[pos] == keys
+
+@dataclasses.dataclass
+class SparseResult:
+    """Sampled (SDDMM-shaped) output in its family's home layout.
+
+    ``raw`` keeps the device-side values exactly as the executor returned
+    them (per-phase tuples for d15, fiber-sharded shards for s25, ...);
+    ``_triples`` assembles the flat global COO view — O(nnz), never a
+    dense matrix — from which ``values``/``to_dense`` derive.
+    """
+    problem: "DistProblem"
+    raw: object
+    _triples: Callable[[], tuple]
+    _coo: Optional[tuple] = None
+    _vals: Optional[np.ndarray] = None
+
+    def to_coo(self):
+        """Flat global (rows, cols, vals), padding filtered."""
+        if self._coo is None:
+            self._coo = self._triples()
+        return self._coo
+
+    def to_dense(self) -> np.ndarray:
+        """Dense (m, n) matrix with the sampled values scattered in.
+
+        Quadratic in the matrix dimensions — small/debug problems only;
+        prefer ``values``/``to_coo`` on production shapes.
+        """
+        r, c, v = self.to_coo()
+        out = np.zeros((self.problem.m, self.problem.n), np.float64)
+        np.add.at(out, (r, c), v)
+        return out.astype(np.float32)
+
+    def values(self) -> np.ndarray:
+        """Values aligned with the problem's host COO (rows, cols) order.
+
+        O(nnz log nnz): the assembled triples are matched to the
+        problem's coordinate keys — no dense materialization.
+        """
+        if self._vals is None:
+            prob = self.problem
+            r, c, v = self.to_coo()
+            sk, order = prob.coo_sort()
+            idx, ok = _match_coo(sk, order, r * prob.n + c)
+            out = np.zeros(prob.nnz, np.float64)
+            np.add.at(out, idx[ok], v[ok])
+            self._vals = out.astype(np.float32)
+        return self._vals
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry
+# ---------------------------------------------------------------------------
+
+ALGORITHMS: Dict[str, "Algorithm"] = {}
+
+
+class Algorithm:
+    """Registry entry: one distributed algorithm family behind the shared
+    plan/sddmm/spmm/fusedmm signature.  Subclasses adapt layouts only —
+    the executors live in their family modules."""
+
+    name: str = ""
+    elisions: Tuple[str, ...] = ()       # strategies fusedmm accepts
+    auto_elisions: Tuple[str, ...] = ()  # candidates for elision="auto"
+
+    # -- grid / feasibility --------------------------------------------------
+    def make_grid(self, c: int, devices):
+        raise NotImplementedError
+
+    def make_plan(self, prob, orient: str):
+        """Build this family's pack for one orientation (host, amortized)."""
+        raise NotImplementedError
+
+    def feasible(self, *, m: int, n: int, r: int, p: int, c: int) -> bool:
+        return costmodel.family_feasible(self.name, m=m, n=n, r=r, p=p, c=c)
+
+    def min_r_multiple(self, grid) -> int:
+        """Smallest multiple the dense operand width r must obey."""
+        return 1
+
+    # -- layouts -------------------------------------------------------------
+    def shard_x(self, prob, X):
+        """Place an (m, r) operand in this family's X input layout."""
+        raise NotImplementedError
+
+    def shard_y(self, prob, Y):
+        """Place an (n, r) operand in this family's Y input layout."""
+        raise NotImplementedError
+
+    def replicate(self, prob, arr, slot: str):
+        """Place an operand in the fiber-replicated (gathered) layout —
+        the across-call replication state a Session caches."""
+        raise NotImplementedError
+
+    # -- execution (device in, host out) ------------------------------------
+    def sddmm(self, prob, X, Y) -> SparseResult:
+        raise NotImplementedError
+
+    def spmm(self, prob, Y) -> np.ndarray:
+        raise NotImplementedError
+
+    def fusedmm(self, prob, X, Y, elision: str,
+                session: Optional["Session"]):
+        fn, args, kwargs, post = self._fusedmm_call(prob, X, Y, elision,
+                                                    session)
+        return post(fn(*args, **kwargs))
+
+    def lower_fusedmm(self, prob, elision: str):
+        """Lower the family's jitted FusedMM for HLO/roofline analysis."""
+        X = np.zeros((prob.m, prob.r), np.float32)
+        Y = np.zeros((prob.n, prob.r), np.float32)
+        fn, args, kwargs, _ = self._fusedmm_call(prob, X, Y, elision, None)
+        return fn.lower(*args, **kwargs)
+
+    def _fusedmm_call(self, prob, X, Y, elision, session):
+        raise NotImplementedError
+
+
+def register(cls):
+    alg = cls()
+    ALGORITHMS[alg.name] = alg
+    return cls
+
+
+def _put(arr, sharding):
+    return jax.device_put(jnp.asarray(np.asarray(arr, np.float32)),
+                          sharding)
+
+
+# ---------------------------------------------------------------------------
+# 1.5D dense shifting
+# ---------------------------------------------------------------------------
+
+@register
+class _D15(Algorithm):
+    name = "d15"
+    elisions = ("none", "reuse", "fused")
+    auto_elisions = ("none", "reuse", "fused")
+
+    def make_grid(self, c, devices):
+        return make_grid15(c, devices=devices)
+
+    def make_plan(self, prob, orient):
+        kw = dict(row_tile=prob.row_tile, nz_block=prob.nz_block)
+        if orient == "normal":
+            return d15.plan_d15(prob.grid, prob.rows, prob.cols, prob.vals,
+                                prob.m, prob.n, prob.r, **kw)
+        return d15.plan_d15(prob.grid, prob.cols, prob.rows, prob.vals,
+                            prob.n, prob.m, prob.r, transpose=True, **kw)
+
+    def shard_x(self, prob, X):
+        g = prob.grid
+        return _put(X, g.sharding((g.layer, g.fiber)))
+
+    shard_y = shard_x   # same layout, different row count
+
+    def replicate(self, prob, arr, slot):
+        g = prob.grid
+        return _put(arr, g.sharding(g.layer))
+
+    def sddmm(self, prob, X, Y):
+        plan = prob.plan("normal")
+        rv = d15.sddmm_d15(prob.grid, plan, self.shard_x(prob, X),
+                           self.shard_y(prob, Y))
+        return SparseResult(prob, rv,
+                            lambda: plan.meta.block_meta.to_triples(
+                                plan.rows_local, plan.cols, rv,
+                                plan.tile_base))
+
+    def spmm(self, prob, Y):
+        plan = prob.plan("normal")
+        return np.asarray(d15.spmma_d15(prob.grid, plan,
+                                        self.shard_y(prob, Y)))
+
+    def _fusedmm_call(self, prob, X, Y, elision, session):
+        grid = prob.grid
+        if elision == "reuse":
+            # FusedMMA(S, X, Y) = FusedMMB(S^T, Y, X): Y takes the
+            # replicated slot, X the shifting slot, on the S^T pack.
+            plan = prob.plan("transpose")
+            a_host, slot = Y, "y"
+            b = self.shard_x(prob, X)
+        else:
+            plan = prob.plan("normal")
+            a_host, slot = X, "x"
+            b = self.shard_y(prob, Y)
+        if session is not None:
+            a, pre = session.replicate(prob, a_host, slot), True
+        else:
+            a, pre = (self.shard_x if slot == "x" else self.shard_y)(
+                prob, a_host), False
+
+        def post(res):
+            out, rvals = res
+            return np.asarray(out), SparseResult(
+                prob, rvals, lambda: plan.meta.block_meta.to_triples(
+                    plan.rows_local, plan.cols, rvals, plan.tile_base))
+
+        return (d15.fusedmm_d15, (grid, plan, a, b),
+                dict(elision=elision, pre_gathered=pre), post)
+
+
+# ---------------------------------------------------------------------------
+# 1.5D sparse shifting
+# ---------------------------------------------------------------------------
+
+@register
+class _S15(Algorithm):
+    name = "s15"
+    elisions = ("reuse", "none")
+    auto_elisions = ("reuse",)   # "none" is the unoptimized baseline
+
+    def make_grid(self, c, devices):
+        return make_grid15(c, devices=devices)
+
+    def make_plan(self, prob, orient):
+        assert orient == "normal", "s15 keeps S stationary-by-row"
+        return s15.plan_s15(prob.grid, prob.rows, prob.cols, prob.vals,
+                            prob.m, prob.n, prob.r,
+                            row_tile=prob.row_tile, nz_block=prob.nz_block)
+
+    def min_r_multiple(self, grid):
+        return grid.p
+
+    def shard_x(self, prob, X):
+        g = prob.grid
+        return _put(X, g.sharding(None, (g.layer, g.fiber)))
+
+    shard_y = shard_x
+
+    def replicate(self, prob, arr, slot):
+        g = prob.grid
+        return _put(arr, g.sharding(None, g.layer))
+
+    def _rvals_triples(self, prob, plan, rv):
+        return lambda: plan.meta.block_meta.to_triples(
+            plan.rows_local, plan.cols, np.asarray(rv), plan.tile_base)
+
+    def sddmm(self, prob, X, Y):
+        plan = prob.plan("normal")
+        rv = s15.sddmm_s15(prob.grid, plan, self.shard_x(prob, X),
+                           self.shard_y(prob, Y))
+        return SparseResult(prob, rv, self._rvals_triples(prob, plan, rv))
+
+    def spmm(self, prob, Y):
+        plan = prob.plan("normal")
+        slabs = s15.spmma_s15(prob.grid, plan, self.shard_y(prob, Y))
+        return s15.assemble_spmm_out(prob.grid, plan, slabs)
+
+    def _fusedmm_call(self, prob, X, Y, elision, session):
+        grid = prob.grid
+        plan = prob.plan("normal")
+        if session is not None:
+            a = session.replicate(prob, X, "x")
+            b = session.replicate(prob, Y, "y")
+            pre = (True, True)
+        else:
+            a, b = self.shard_x(prob, X), self.shard_y(prob, Y)
+            pre = (False, False)
+
+        def post(res):
+            slabs, rvals = res
+            return (s15.assemble_spmm_out(grid, plan, slabs),
+                    SparseResult(prob, rvals,
+                                 self._rvals_triples(prob, plan, rvals)))
+
+        return (s15.fusedmm_s15, (grid, plan, a, b),
+                dict(elision=elision, pre_gathered=pre), post)
+
+
+# ---------------------------------------------------------------------------
+# 2.5D dense replicating
+# ---------------------------------------------------------------------------
+
+@register
+class _D25(Algorithm):
+    name = "d25"
+    elisions = ("none", "reuse")
+    auto_elisions = ("none", "reuse")
+
+    def make_grid(self, c, devices):
+        return make_grid25(c, devices=devices)
+
+    def make_plan(self, prob, orient):
+        kw = dict(row_tile=prob.row_tile, nz_block=prob.nz_block)
+        if orient == "normal":
+            return d25.plan_d25(prob.grid, prob.rows, prob.cols, prob.vals,
+                                prob.m, prob.n, prob.r, **kw)
+        return d25.plan_d25(prob.grid, prob.cols, prob.rows, prob.vals,
+                            prob.n, prob.m, prob.r, transpose=True, **kw)
+
+    def min_r_multiple(self, grid):
+        return grid.G
+
+    def shard_x(self, prob, X):
+        # the replicated-slot layout; the shifting operand is skewed via
+        # d25.skew_b at the call sites below
+        g = prob.grid
+        return _put(X, g.sharding((g.row, g.fiber), g.col))
+
+    def replicate(self, prob, arr, slot):
+        g = prob.grid
+        return _put(arr, g.sharding(g.row, g.col))
+
+    def sddmm(self, prob, X, Y):
+        plan = prob.plan("normal")
+        rv = d25.sddmm_d25(prob.grid, plan, self.shard_x(prob, X),
+                           d25.skew_b(prob.grid, np.asarray(Y, np.float32)))
+        return SparseResult(prob, rv,
+                            lambda: plan.meta.block_meta.to_triples(
+                                plan.rows_local, plan.cols,
+                                np.asarray(rv), plan.tile_base))
+
+    def spmm(self, prob, Y):
+        plan = prob.plan("normal")
+        out = d25.spmma_d25(prob.grid, plan,
+                            d25.skew_b(prob.grid, np.asarray(Y, np.float32)))
+        return np.asarray(out)
+
+    def _fusedmm_call(self, prob, X, Y, elision, session):
+        grid = prob.grid
+        if elision == "reuse":
+            plan = prob.plan("transpose")
+            a_host, slot = Y, "y"
+            b = d25.skew_b(grid, np.asarray(X, np.float32))
+        else:
+            plan = prob.plan("normal")
+            a_host, slot = X, "x"
+            b = d25.skew_b(grid, np.asarray(Y, np.float32))
+        if session is not None:
+            a, pre = session.replicate(prob, a_host, slot), True
+        else:
+            a, pre = self.shard_x(prob, a_host), False
+
+        def post(res):
+            out, rvals = res
+            triples = lambda: plan.meta.block_meta.to_triples(  # noqa: E731
+                plan.rows_local, plan.cols, np.asarray(rvals),
+                plan.tile_base)
+            if elision == "reuse":
+                return (d25.unskew_out(grid, plan, out),
+                        SparseResult(prob, rvals, triples))
+            return np.asarray(out), SparseResult(prob, rvals, triples)
+
+        return (d25.fusedmm_d25, (grid, plan, a, b),
+                dict(elision=elision, pre_gathered=pre), post)
+
+
+# ---------------------------------------------------------------------------
+# 2.5D sparse replicating
+# ---------------------------------------------------------------------------
+
+@register
+class _S25(Algorithm):
+    name = "s25"
+    elisions = ("none",)
+    auto_elisions = ("none",)
+
+    def make_grid(self, c, devices):
+        return make_grid25(c, devices=devices)
+
+    def make_plan(self, prob, orient):
+        assert orient == "normal", "s25 replicates the structure"
+        return s25.plan_s25(prob.grid, prob.rows, prob.cols, prob.vals,
+                            prob.m, prob.n, prob.r,
+                            row_tile=prob.row_tile, nz_block=prob.nz_block)
+
+    def min_r_multiple(self, grid):
+        return grid.G * grid.c
+
+    def shard_x(self, prob, X):
+        return s25.skew_dense(prob.grid, np.asarray(X, np.float32),
+                              along="row")
+
+    def shard_y(self, prob, Y):
+        return s25.skew_dense(prob.grid, np.asarray(Y, np.float32),
+                              along="col")
+
+    # nothing dense is replicated: Session caching is a no-op here
+    def replicate(self, prob, arr, slot):
+        return self.shard_x(prob, arr) if slot == "x" \
+            else self.shard_y(prob, arr)
+
+    def _rvals_triples(self, prob, plan, rv):
+        def triples():
+            g = prob.grid
+            G, nb = g.G, plan.rows_local.shape[3]
+            full = np.asarray(rv).reshape(G, G, nb, np.asarray(rv).shape[-1])
+            return plan.meta.block_meta.to_triples(
+                np.asarray(plan.rows_local)[:, :, 0],
+                np.asarray(plan.cols)[:, :, 0], full,
+                np.asarray(plan.tile_base)[:, :, 0])
+        return triples
+
+    def sddmm(self, prob, X, Y):
+        plan = prob.plan("normal")
+        rv = s25.sddmm_s25(prob.grid, plan, self.shard_x(prob, X),
+                           self.shard_y(prob, Y))
+        return SparseResult(prob, rv, self._rvals_triples(prob, plan, rv))
+
+    def spmm(self, prob, Y):
+        plan = prob.plan("normal")
+        out = s25.spmma_s25(prob.grid, plan, self.shard_y(prob, Y))
+        return s25.unskew_out(prob.grid, plan, out)
+
+    def _fusedmm_call(self, prob, X, Y, elision, session):
+        grid = prob.grid
+        plan = prob.plan("normal")
+        a, b = self.shard_x(prob, X), self.shard_y(prob, Y)
+
+        def post(res):
+            out, rvals = res
+            return (s25.unskew_out(grid, plan, out),
+                    SparseResult(prob, rvals,
+                                 self._rvals_triples(prob, plan, rvals)))
+
+        return (s25.fusedmm_s25, (grid, plan, a, b),
+                dict(elision="none"), post)
+
+
+# ---------------------------------------------------------------------------
+# DistProblem
+# ---------------------------------------------------------------------------
+
+_COST_NAME = {fe: name for name, fe in costmodel.FAMILY_ELISION.items()}
+
+
+@dataclasses.dataclass
+class DistProblem:
+    """A packed sparse matrix + dense layouts bound to one algorithm/grid.
+
+    Plans (the amortized host-side packing of S, and of S^T where a
+    strategy needs it) are built lazily per orientation and cached, so
+    repeated kernel calls — ALS's CG loop, GAT's per-layer sweeps — pay
+    planning once, exactly like the paper's preprocessing."""
+    alg: Algorithm
+    grid: object
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    m: int
+    n: int
+    r: int
+    row_tile: int = 32
+    nz_block: int = 32
+    _plans: dict = dataclasses.field(default_factory=dict)
+    _derived_r: dict = dataclasses.field(default_factory=dict)
+    _coo_sort: Optional[tuple] = None
+
+    # -- metadata ------------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int(len(self.vals))
+
+    @property
+    def phi(self) -> float:
+        return self.nnz / (self.n * self.r)
+
+    @property
+    def p(self) -> int:
+        return self.grid.p
+
+    @property
+    def c(self) -> int:
+        return self.grid.c
+
+    # -- planning ------------------------------------------------------------
+    def plan(self, orient: str = "normal"):
+        if orient not in self._plans:
+            self._plans[orient] = self.alg.make_plan(self, orient)
+        return self._plans[orient]
+
+    def coo_sort(self):
+        """(sorted coordinate keys, argsort order) — cached; coordinates
+        are immutable for a problem's lifetime."""
+        if self._coo_sort is None:
+            key = self.rows.astype(np.int64) * self.n + self.cols
+            order = np.argsort(key, kind="stable")
+            self._coo_sort = (key[order], order)
+        return self._coo_sort
+
+    # -- derived problems ----------------------------------------------------
+    def with_values(self, vals: np.ndarray) -> "DistProblem":
+        """Same structure, new sample values (e.g. softmaxed attention).
+
+        Packing is deterministic in the coordinates, so the derived
+        problem's blocks line up with this one's.  The derived problem
+        re-packs on first use (values are baked into the device packs);
+        injecting new values into the cached structural plan — the s25
+        family's "attractive property" generalized — is a known future
+        optimization for value-churn-heavy callers like GAT."""
+        vals = np.asarray(vals, np.float32)
+        assert vals.shape == self.rows.shape
+        return dataclasses.replace(self, vals=vals, _plans={},
+                                   _derived_r={})
+
+    def with_r(self, r: int) -> "DistProblem":
+        """Same sparse matrix, different dense-operand width.
+
+        Derived problems are cached by width, so repeated callers (e.g.
+        GAT deriving score/aggregation widths once per layer) reuse one
+        set of packs instead of re-planning every call."""
+        if r == self.r:
+            return self
+        if r not in self._derived_r:
+            mult = self.alg.min_r_multiple(self.grid)
+            if r % mult:
+                raise ValueError(f"r={r} must be a multiple of {mult} "
+                                 f"for {self.alg.name} on this grid")
+            self._derived_r[r] = dataclasses.replace(
+                self, r=r, _plans={}, _derived_r={})
+        return self._derived_r[r]
+
+    def transposed(self) -> "DistProblem":
+        """The S^T problem on the same grid (for SpMMB-style updates)."""
+        if not self.alg.feasible(m=self.n, n=self.m, r=self.r,
+                                 p=self.p, c=self.c):
+            raise ValueError(f"{self.alg.name} infeasible for the "
+                             f"transposed shape ({self.n}, {self.m})")
+        return dataclasses.replace(self, rows=self.cols, cols=self.rows,
+                                   m=self.n, n=self.m, _plans={},
+                                   _derived_r={}, _coo_sort=None)
+
+    # -- elision resolution --------------------------------------------------
+    def resolve_elision(self, elision: str = "auto",
+                        session: Optional["Session"] = None) -> str:
+        """Uniform default: rank this family's candidate strategies by
+        their Table-III words at the problem's (p, c, phi).
+
+        With a Session, "reuse" wins whenever the family offers it: its
+        gathered operand is the second (stationary-by-convention) one,
+        so after the first call the cache elides that all-gather and the
+        per-call traffic drops to the shift words alone — below every
+        alternative, which re-gathers the changing operand each call.
+        """
+        if elision != "auto":
+            if elision not in self.alg.elisions:
+                raise ValueError(f"{self.alg.name} supports "
+                                 f"{self.alg.elisions}, got {elision!r}")
+            return elision
+        if session is not None and "reuse" in self.alg.auto_elisions:
+            return "reuse"
+
+        def words(el):
+            cost = costmodel.words_fusedmm(
+                _COST_NAME[(self.alg.name, el)], p=self.p, c=self.c,
+                n=self.n, r=self.r, nnz=self.nnz)
+            return cost.words
+
+        return min(self.alg.auto_elisions, key=words)
+
+    # -- the shared-signature executors --------------------------------------
+    def sddmm(self, X, Y) -> SparseResult:
+        """R = S * (X @ Y.T) sampled at nnz(S)."""
+        return self.alg.sddmm(self, X, Y)
+
+    def spmm(self, Y) -> np.ndarray:
+        """out = S @ Y, host-assembled (m, r)."""
+        return self.alg.spmm(self, Y)
+
+    def fusedmm(self, X, Y, elision: str = "auto",
+                session: Optional["Session"] = None):
+        """out = (S * (X @ Y.T)) @ Y, host-assembled (m, r).
+
+        Returns (out, SparseResult of the intermediate R)."""
+        el = self.resolve_elision(elision, session)
+        return self.alg.fusedmm(self, X, Y, el, session)
+
+    def lower_fusedmm(self, elision: str = "auto"):
+        return self.alg.lower_fusedmm(self, self.resolve_elision(elision))
+
+
+# ---------------------------------------------------------------------------
+# Session: across-call replication reuse
+# ---------------------------------------------------------------------------
+
+class Session:
+    """Caches fiber-replicated dense operands across executor calls.
+
+    Keyed by operand identity (a strong reference pins the id), so the
+    stationary factor of an iterative solver hits the cache on every
+    iteration while the iterate itself simply misses and is replicated
+    fresh — never stale.  Cached and uncached calls are bitwise-identical
+    (the kernels consume the same values either way).
+
+    The cache is LRU-bounded: families that gather *both* operands (s15)
+    replicate the changing iterate through the session too, and without
+    eviction every iterate — host array plus device copy — would stay
+    pinned for the session's lifetime.  The stationary operand is hit on
+    every call and therefore never ages out.
+
+    In-place mutation of a cached numpy operand (``B *= 0.9``) is
+    detected by a content fingerprint (shape/dtype/sum) checked on every
+    hit — a mismatch transparently re-replicates.  jax arrays are
+    immutable, so identity alone is sound for them."""
+
+    def __init__(self, max_entries: int = 16):
+        self._cache = collections.OrderedDict()
+        self._max_entries = max_entries
+
+    @staticmethod
+    def _fingerprint(arr):
+        if isinstance(arr, np.ndarray):
+            return (arr.shape, str(arr.dtype),
+                    float(arr.sum(dtype=np.float64)))
+        return None          # jax arrays are immutable
+
+    def replicate(self, problem: DistProblem, arr, slot: str):
+        key = (id(problem.grid), problem.alg.name, slot, id(arr))
+        fp = self._fingerprint(arr)
+        hit = self._cache.get(key)
+        if hit is not None and hit[0] is arr and hit[2] == fp:
+            self._cache.move_to_end(key)
+            return hit[1]
+        rep = problem.alg.replicate(problem, arr, slot)
+        self._cache[key] = (arr, rep, fp)
+        while len(self._cache) > self._max_entries:
+            self._cache.popitem(last=False)
+        return rep
+
+    def clear(self):
+        self._cache.clear()
+
+    def __len__(self):
+        return len(self._cache)
+
+
+# ---------------------------------------------------------------------------
+# Construction + module-level conveniences
+# ---------------------------------------------------------------------------
+
+def make_problem(rows, cols, vals, shape: Tuple[int, int], r: int, *,
+                 algorithm: str = "auto", c: int | None = None,
+                 devices=None, row_tile: int = 32,
+                 nz_block: int = 32) -> DistProblem:
+    """Build a DistProblem, dispatching the algorithm by the cost model.
+
+    algorithm="auto" ranks every feasible (family, elision, c) by the
+    paper's Table-III bandwidth formulas; a family name pins the family
+    and picks its best feasible c (or the caller's explicit ``c``).
+    """
+    m, n = shape
+    devices = list(devices) if devices is not None else list(jax.devices())
+    p = len(devices)
+    families = costmodel.FAMILIES if algorithm == "auto" else (algorithm,)
+    if algorithm != "auto" and algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}; registered: "
+                         f"{sorted(ALGORITHMS)}")
+    choice = costmodel.choose_algorithm(m=m, n=n, nnz=len(vals), r=r, p=p,
+                                        c=c, families=families)
+    alg = ALGORITHMS[choice.family]
+    grid = alg.make_grid(choice.c, devices)
+    return DistProblem(alg, grid, np.asarray(rows), np.asarray(cols),
+                       np.asarray(vals, np.float32), m, n, r,
+                       row_tile=row_tile, nz_block=nz_block)
+
+
+def sddmm(problem: DistProblem, X, Y) -> SparseResult:
+    return problem.sddmm(X, Y)
+
+
+def spmm(problem: DistProblem, Y) -> np.ndarray:
+    return problem.spmm(Y)
+
+
+def fusedmm(problem: DistProblem, X, Y, elision: str = "auto",
+            session: Optional[Session] = None):
+    return problem.fusedmm(X, Y, elision=elision, session=session)
+
+
+# ---------------------------------------------------------------------------
+# Local-kernel routing (repro.kernels.ops)
+# ---------------------------------------------------------------------------
+
+class _Router:
+    """Routes ops.sddmm/spmm/fusedmm calls on a bound RowTiledCOO pack to
+    the active DistProblem.  Only exact pack identity routes; traced
+    arguments and mismatched shapes fall through to the local kernels."""
+
+    def __init__(self, problem: DistProblem, pack):
+        self.problem, self.pack = problem, pack
+
+    def _traced(self, *arrs) -> bool:
+        return any(isinstance(a, jax.core.Tracer) for a in arrs)
+
+    def _sample(self, result: SparseResult):
+        """Re-inject a distributed result into the bound pack's slots —
+        O(nnz log nnz) coordinate matching, no dense materialization."""
+        S = self.pack
+        prob = self.problem
+        vals_prob = result.values()            # problem COO order
+        key = (np.asarray(S.rows_global()).reshape(-1).astype(np.int64)
+               * prob.n + np.asarray(S.cols).reshape(-1))
+        sk, order = prob.coo_sort()
+        idx, ok = _match_coo(sk, order, key)
+        out = np.zeros(key.shape[0], np.float32)
+        out[ok] = vals_prob[idx[ok]]
+        # padding entries point at (tile_base, 0), which may collide with
+        # a real nonzero — mask them back to zero
+        vals_pack = np.asarray(S.vals)
+        out = np.where(vals_pack.reshape(-1) != 0, out, 0.0)
+        return S.with_vals(jnp.asarray(out.reshape(vals_pack.shape)))
+
+    def sddmm(self, A, B, S):
+        if S is not self.pack or self._traced(A, B, S.vals):
+            return NotImplemented
+        return self._sample(self.problem.sddmm(np.asarray(A),
+                                               np.asarray(B)))
+
+    def spmm(self, S, B, m):
+        if S is not self.pack or self._traced(B, S.vals) \
+                or m != self.problem.m:
+            return NotImplemented
+        return jnp.asarray(self.problem.spmm(np.asarray(B)))
+
+    def fusedmm(self, A, B, S, m):
+        if S is not self.pack or self._traced(A, B, S.vals) \
+                or m != self.problem.m:
+            return NotImplemented
+        out, r = self.problem.fusedmm(np.asarray(A), np.asarray(B))
+        return jnp.asarray(out), self._sample(r)
+
+
+@contextlib.contextmanager
+def activate(problem: DistProblem, local_pack):
+    """Route ``repro.kernels.ops`` calls on ``local_pack`` through the
+    distributed problem while the context is live (mesh-active mode).
+
+    Calls must be eager (outside jit) to route; traced calls fall through
+    to the local Pallas/ref kernels unchanged."""
+    from repro.kernels import ops
+    prev = ops._DIST_ROUTER
+    ops._DIST_ROUTER = _Router(problem, local_pack)
+    try:
+        yield
+    finally:
+        ops._DIST_ROUTER = prev

@@ -142,33 +142,51 @@ class BlockMeta:
     col_offsets: np.ndarray  # (...,) global col offset per block
     shape: Tuple[int, int]
 
-    def to_dense(self, rows_local, cols, vals, tile_base, row_tile=None):
-        """Scatter stacked (..., nb, k) block arrays into a dense matrix."""
-        out = np.zeros(self.shape, np.float64)
+    def to_triples(self, rows_local, cols, vals, tile_base,
+                   row_tile=None):
+        """Flat global COO (rows, cols, vals) of the stacked blocks.
+
+        Padding entries (vals == 0) are filtered out.  This is the
+        layout-independent view the api layer assembles results through;
+        unlike a dense scatter it is O(nnz), so it scales to the sparse
+        sizes the library targets.
+        """
+        parts = []
         if isinstance(rows_local, (tuple, list)):   # per-phase ragged packs
             for t in range(len(rows_local)):
-                self._scatter(out, rows_local[t], cols[t], vals[t],
-                              tile_base[t], self.row_offsets[t],
-                              self.col_offsets[t])
+                parts.append(self._triples_of(
+                    rows_local[t], cols[t], vals[t], tile_base[t],
+                    self.row_offsets[t], self.col_offsets[t]))
         else:
-            self._scatter(out, rows_local, cols, vals, tile_base,
-                          self.row_offsets, self.col_offsets)
+            parts.append(self._triples_of(rows_local, cols, vals,
+                                          tile_base, self.row_offsets,
+                                          self.col_offsets))
+        return (np.concatenate([p[0] for p in parts]),
+                np.concatenate([p[1] for p in parts]),
+                np.concatenate([p[2] for p in parts]))
+
+    def to_dense(self, rows_local, cols, vals, tile_base, row_tile=None):
+        """Scatter stacked (..., nb, k) block arrays into a dense matrix."""
+        r, c, v = self.to_triples(rows_local, cols, vals, tile_base)
+        out = np.zeros(self.shape, np.float64)
+        np.add.at(out, (r, c), v)
         return out.astype(np.float32)
 
     @staticmethod
-    def _scatter(out, rows_local, cols, vals, tile_base, row_off, col_off):
-        rows_local = np.asarray(rows_local)
-        cols = np.asarray(cols)
-        vals = np.asarray(vals)
-        tile_base = np.asarray(tile_base)
-        flat_ro = np.asarray(row_off).reshape(-1)
-        flat_co = np.asarray(col_off).reshape(-1)
-        rl = rows_local.reshape(-1, *rows_local.shape[-2:])
-        cl = cols.reshape(-1, *cols.shape[-2:])
-        vl = vals.reshape(-1, *vals.shape[-2:])
-        tb = tile_base.reshape(-1, tile_base.shape[-1])
-        for b in range(rl.shape[0]):
-            r = (rl[b] + tb[b][:, None]).reshape(-1) + flat_ro[b]
-            c = cl[b].reshape(-1) + flat_co[b]
-            v = vl[b].reshape(-1)
-            np.add.at(out, (r[v != 0], c[v != 0]), v[v != 0])
+    def _triples_of(rows_local, cols, vals, tile_base, row_off, col_off):
+        rl = np.asarray(rows_local)
+        cl = np.asarray(cols)
+        vl = np.asarray(vals)
+        tb = np.asarray(tile_base)
+        flat_ro = np.asarray(row_off).reshape(-1).astype(np.int64)
+        flat_co = np.asarray(col_off).reshape(-1).astype(np.int64)
+        rl = rl.reshape(-1, *rl.shape[-2:])
+        cl = cl.reshape(-1, *cl.shape[-2:])
+        vl = vl.reshape(-1, *vl.shape[-2:])
+        tb = tb.reshape(-1, tb.shape[-1])
+        r = (rl.astype(np.int64) + tb[:, :, None]
+             + flat_ro[:, None, None]).reshape(-1)
+        c = (cl.astype(np.int64) + flat_co[:, None, None]).reshape(-1)
+        v = vl.reshape(-1)
+        keep = v != 0
+        return r[keep], c[keep], v[keep]

@@ -28,6 +28,21 @@ ALGORITHMS = (
     "s25_no_elision",        # 2.5D sparse replicating (no elision possible)
 )
 
+# Table-III algorithm name -> (executor family, elision strategy).  The
+# families are the four implementations behind repro.core.api; elision is
+# the FusedMM strategy the family executor takes as its static argument.
+FAMILY_ELISION = {
+    "d15_no_elision": ("d15", "none"),
+    "d15_replication_reuse": ("d15", "reuse"),
+    "d15_local_fusion": ("d15", "fused"),
+    "s15_replication_reuse": ("s15", "reuse"),
+    "d25_no_elision": ("d25", "none"),
+    "d25_replication_reuse": ("d25", "reuse"),
+    "s25_no_elision": ("s25", "none"),
+}
+
+FAMILIES = ("d15", "s15", "d25", "s25")
+
 
 @dataclasses.dataclass(frozen=True)
 class CommCost:
@@ -146,6 +161,73 @@ def select_algorithm(*, p: int, n: int, r: int, nnz: int,
         except ValueError:
             continue
     return dict(sorted(costs.items(), key=lambda kv: kv[1].words))
+
+
+def family_feasible(family: str, *, m: int, n: int, r: int, p: int,
+                    c: int) -> bool:
+    """Can `family` run (m x n, width r) on p processors at replication c?
+
+    Mirrors the divisibility asserted by the planners in repro.core:
+      d15: m % p == 0 and n % p == 0          (dense row blocks)
+      s15: m % p == 0 and r % p == 0          (column-split dense)
+      d25: p/c a perfect square G^2, m,n % Gc == 0 and r % G == 0
+      s25: p/c a perfect square G^2, m,n % G == 0 and r % Gc == 0
+    """
+    if c < 1 or p % c:
+        return False
+    if family == "d15":
+        return m % p == 0 and n % p == 0
+    if family == "s15":
+        return m % p == 0 and r % p == 0
+    if family in ("d25", "s25"):
+        g = math.isqrt(p // c)
+        if g * g * c != p:
+            return False
+        if family == "d25":
+            return m % (g * c) == 0 and n % (g * c) == 0 and r % g == 0
+        return m % g == 0 and n % g == 0 and r % (g * c) == 0
+    raise ValueError(f"unknown family {family!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmChoice:
+    """Result of the `algorithm="auto"` dispatch rule (paper Fig. 6)."""
+    family: str       # one of FAMILIES — the executor module to use
+    elision: str      # FusedMM strategy for that family
+    c: int            # replication factor
+    cost: CommCost    # Table-III words/messages at (family, elision, c)
+
+
+def choose_algorithm(*, m: int, n: int, nnz: int, r: int, p: int,
+                     c: int | None = None,
+                     families=FAMILIES) -> AlgorithmChoice:
+    """Pick the cheapest feasible (family, elision, c) by Table III.
+
+    Implements the paper's bandwidth-cost dispatch: evaluate the per-
+    processor word count of every Table-III algorithm at every feasible
+    replication factor (or at the caller-pinned `c`), filter by the
+    planners' divisibility constraints, and return the minimizer.  Low
+    phi = nnz/(n*r) favors the sparse-shifting/replicating families,
+    high phi the dense ones (Fig. 6).
+    """
+    best = None
+    for name in ALGORITHMS:
+        family, elision = FAMILY_ELISION[name]
+        if family not in families:
+            continue
+        cs = [c] if c is not None else list(range(1, p + 1))
+        for ci in cs:
+            if p % ci or not family_feasible(family, m=m, n=n, r=r, p=p,
+                                             c=ci):
+                continue
+            cost = words_fusedmm(name, p=p, c=ci, n=n, r=r, nnz=nnz)
+            if best is None or cost.words < best.cost.words:
+                best = AlgorithmChoice(family, elision, ci, cost)
+    if best is None:
+        raise ValueError(
+            f"no feasible algorithm for m={m} n={n} r={r} p={p} c={c} "
+            f"among families {families}")
+    return best
 
 
 def flops_fusedmm(nnz: int, r: int) -> int:

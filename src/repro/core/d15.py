@@ -26,7 +26,7 @@ Modes (unified, per the paper's SpMM<->SDDMM conversion):
   sddmm_d15   : R = S * (A @ B.T)          A replicated-in, B shifts
   spmma_d15   : A = S @ B                  A replicated-out, B shifts
   spmmb_d15   : B = S.T @ A                A replicated-in, B shifts+accum
-  fusedmm_d15 : FusedMM with elision in {"none", "reuse", "fused"}
+  fusedmm_d15 : FusedMM, elision in {"auto", "none", "reuse", "fused"}
 """
 from __future__ import annotations
 
@@ -157,17 +157,46 @@ def _shift(x, axis_name, size):
                             [(i, (i + 1) % size) for i in range(size)])
 
 
-def _exec(grid: Grid15, plan: PlanD15, body, A, B, out_specs):
-    """Common shard_map/jit harness; S packs enter with (layer,fiber) dims."""
+def _exec(grid: Grid15, plan: PlanD15, body, A, B, out_specs,
+          a_spec=None):
+    """Common shard_map/jit harness; S packs enter with (layer,fiber) dims.
+
+    ``a_spec`` overrides the spec of the first dense operand — the
+    pre-gathered (Session-cached) paths pass ``P(layer)``, i.e. rows split
+    over the layer axis only and replicated along the fiber.
+    """
     mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
     s_spec = P(lay, fib)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
     s_specs = jax.tree_util.tree_map(lambda _: s_spec, s_pack)
     fn = common.shard_map(
         body, mesh=mesh,
-        in_specs=(s_specs, P((lay, fib)), P((lay, fib))),
+        in_specs=(s_specs, a_spec if a_spec is not None else P((lay, fib)),
+                  P((lay, fib))),
         out_specs=out_specs)
     return fn(s_pack, A, B)
+
+
+def replicated_spec(grid: Grid15) -> P:
+    """Sharding spec of a pre-gathered dense operand (see Session)."""
+    return P(grid.layer)
+
+
+def resolve_elision(elision: str, transpose: bool) -> str:
+    """Resolve the uniform ``"auto"`` default *for the pack in hand*.
+
+    A plan is already committed to an orientation, so only the elisions
+    that orientation supports are candidates: a transpose pack admits
+    replication reuse (FusedMMB) alone, and for a normal pack local
+    fusion beats the unoptimized sequence at every c (Table III: n*r/c
+    vs 2*n*r/c replication words, identical shift words), so "auto"
+    never resolves to "none".  The cross-orientation, phi-aware ranking
+    — which may *choose* to build the transpose pack — lives one level
+    up in ``repro.core.api.DistProblem.resolve_elision``.
+    """
+    if elision != "auto":
+        return elision
+    return "reuse" if transpose else "fused"
 
 
 def _sddmm_phases(plan, T, B0, s, L, lay, overlap, swap=False):
@@ -278,26 +307,40 @@ def spmmb_d15(grid: Grid15, plan: PlanD15, A, overlap: bool = True):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("elision", "overlap"))
-def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "none",
-                overlap: bool = True):
+                   static_argnames=("elision", "overlap", "pre_gathered"))
+def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "auto",
+                overlap: bool = True, pre_gathered: bool = False):
     """FusedMM on the 1.5D dense-shifting grid.
 
+    elision="auto"  : resolve via the cost model (see resolve_elision)
     elision="none"  : FusedMMA, SDDMM then SpMMA (2 rounds, AG + RS)
     elision="reuse" : FusedMMB on the S^T pack (2 rounds, single AG)
     elision="fused" : FusedMMA via the fused local kernel (1 round, AG + RS)
 
+    pre_gathered=True: the first dense operand arrives already replicated
+    along the fiber (sharding ``replicated_spec(grid)``) and the all-gather
+    is skipped — the across-call replication reuse exploited by
+    ``repro.core.api.Session``.  Numerically identical to the gathered
+    path: the local kernels consume the same T values either way.
+
     Returns (out_dense, per-phase R_vals tuple).
     """
+    elision = resolve_elision(elision, plan.transpose)
     lay, fib, L = grid.layer, grid.fiber, grid.L
     tk = plan.tiling.kernel_kwargs()
     r_specs = tuple(P(lay, fib) for _ in range(L))
+    a_spec = replicated_spec(grid) if pre_gathered else None
+
+    def gather(A_loc):
+        if pre_gathered:
+            return A_loc
+        return jax.lax.all_gather(A_loc, fib, tiled=True)
 
     if elision == "none":
         assert not plan.transpose
 
         def body(s, A_loc, B_loc):
-            T = jax.lax.all_gather(A_loc, fib, tiled=True)
+            T = gather(A_loc)
             r_vals, B_cur = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap)
             T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
             B_nxt = _shift(B_cur, lay, L) if overlap else None
@@ -314,14 +357,15 @@ def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "none",
                                        tiled=True)
             return out, tuple(v[None, None] for v in r_vals)
 
-        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs))
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs),
+                     a_spec=a_spec)
 
     if elision == "reuse":
         # FusedMMB: replicate A once; it serves the SDDMM *and* the SpMMB.
         assert plan.transpose, "reuse needs a transpose-packed plan"
 
         def body(s, A_loc, B_loc):
-            T = jax.lax.all_gather(A_loc, fib, tiled=True)   # single AG
+            T = gather(A_loc)                                # single AG
             # sampled <B_j, A_i> on the S^T layout
             r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap,
                                       swap=True)
@@ -344,13 +388,14 @@ def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "none",
             # out home after full cycle
             return out_cur, tuple(v[None, None] for v in r_vals)
 
-        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs))
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs),
+                     a_spec=a_spec)
 
     if elision == "fused":
         assert not plan.transpose
 
         def body(s, A_loc, B_loc):
-            T = jax.lax.all_gather(A_loc, fib, tiled=True)
+            T = gather(A_loc)
             T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
             r_vals = []
             B_cur = B_loc
@@ -370,6 +415,7 @@ def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "none",
                                        tiled=True)
             return out, tuple(v[None, None] for v in r_vals)
 
-        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs))
+        return _exec(grid, plan, body, A, B, (P((lay, fib)), r_specs),
+                     a_spec=a_spec)
 
     raise ValueError(f"unknown elision {elision!r}")

@@ -151,16 +151,39 @@ def _shift_back(x, axis_name, size):
                             [(i, (i - 1) % size) for i in range(size)])
 
 
-def _exec(grid: Grid25, plan: PlanD25, body, A, B_sk, out_specs):
+def _exec(grid: Grid25, plan: PlanD25, body, A, B_sk, out_specs,
+          a_spec=None):
+    """``a_spec`` overrides the replicated-operand spec — the pre-gathered
+    (Session-cached) paths pass ``P(row, col)``: rows split over the grid
+    row axis only, replicated along the fiber."""
     mesh = grid.mesh
     rw, cl_ax, fib = grid.row, grid.col, grid.fiber
     s_spec = P(rw, cl_ax, fib)
     fn = common.shard_map(
         body, mesh=mesh,
-        in_specs=((s_spec,) * 4, P((rw, fib), cl_ax), s_spec),
+        in_specs=((s_spec,) * 4,
+                  a_spec if a_spec is not None else P((rw, fib), cl_ax),
+                  s_spec),
         out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
     return fn(s_pack, A, B_sk)
+
+
+def replicated_spec(grid: Grid25) -> P:
+    """Sharding spec of a pre-gathered dense operand (see Session)."""
+    return P(grid.row, grid.col)
+
+
+def resolve_elision(elision: str, transpose: bool) -> str:
+    """Resolve the uniform ``"auto"`` default *for the pack in hand*:
+    reuse iff transpose-packed (FusedMMB), the plain Cannon FusedMMA
+    otherwise (no local fusion on the 2.5D grid — SDDMM values must
+    finish their full Cannon round before the SpMM can consume them).
+    The cross-orientation ranking lives in
+    ``repro.core.api.DistProblem.resolve_elision``."""
+    if elision != "auto":
+        return elision
+    return "reuse" if transpose else "none"
 
 
 def _sq(args):
@@ -261,19 +284,31 @@ def _advance(grid, cur, G):
 
 
 @functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("elision", "overlap"))
-def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none",
-                overlap: bool = True):
+                   static_argnames=("elision", "overlap", "pre_gathered"))
+def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
+                overlap: bool = True, pre_gathered: bool = False):
     """FusedMM on the 2.5D dense-replicating grid.
 
+    elision="auto" : resolve via the cost model (see resolve_elision)
     elision="none" : FusedMMA — AG(A) + 2 Cannon rounds + RS(out).
                      Requires a normal pack.  Returns (out (m,r), R_vals).
     elision="reuse": FusedMMB — single AG(A), output travels home with the
                      propagated buffer (no reduce-scatter).  Requires a
                      transpose pack.  Returns (out stacked skewed, R_vals).
+
+    pre_gathered=True: A arrives already fiber-replicated (sharding
+    ``replicated_spec(grid)``) and the all-gather is skipped — the
+    across-call replication reuse exploited by ``repro.core.api.Session``.
     """
+    elision = resolve_elision(elision, plan.transpose)
     G, fib = grid.G, grid.fiber
     tk = plan.tiling.kernel_kwargs()
+    a_spec = replicated_spec(grid) if pre_gathered else None
+
+    def gather(A_loc):
+        if pre_gathered:
+            return A_loc
+        return jax.lax.all_gather(A_loc, fib, tiled=True)
 
     if elision == "none":
         assert not plan.transpose
@@ -281,7 +316,7 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none",
         def body(s, A_loc, B_loc):
             s = _sq(s)
             B0 = B_loc[0, 0, 0]
-            T = jax.lax.all_gather(A_loc, fib, tiled=True)
+            T = gather(A_loc)
             (rl, cl, partial, tb), B_home = _sddmm_round(grid, plan, T, s,
                                                          B0, overlap)
             r_vals = s[2] * partial
@@ -305,7 +340,8 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none",
 
         return _exec(grid, plan, body, A, B_sk,
                      (P((grid.row, grid.fiber), grid.col),
-                      P(grid.row, grid.col, grid.fiber)))
+                      P(grid.row, grid.col, grid.fiber)),
+                     a_spec=a_spec)
 
     if elision == "reuse":
         assert plan.transpose
@@ -313,7 +349,7 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none",
         def body(s, A_loc, B_loc):
             s = _sq(s)
             B0 = B_loc[0, 0, 0]
-            T = jax.lax.all_gather(A_loc, fib, tiled=True)   # single AG
+            T = gather(A_loc)                                # single AG
             (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0,
                                                     overlap)
             r_vals = s[2] * partial
@@ -343,6 +379,7 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "none",
 
         return _exec(grid, plan, body, A, B_sk,
                      (P(grid.row, grid.col, grid.fiber),
-                      P(grid.row, grid.col, grid.fiber)))
+                      P(grid.row, grid.col, grid.fiber)),
+                     a_spec=a_spec)
 
     raise ValueError(f"unknown elision {elision!r}")

@@ -117,15 +117,26 @@ def _shift_tuple(xs, axis_name, size):
     return tuple(_shift(x, axis_name, size) for x in xs)
 
 
-def _exec(grid: Grid15, plan: PlanS15, body, A, B, out_specs):
+def _exec(grid: Grid15, plan: PlanS15, body, A, B, out_specs,
+          a_spec=None, b_spec=None):
+    """``a_spec``/``b_spec`` override the dense-operand specs — the
+    pre-gathered (Session-cached) paths pass ``P(None, layer)``: column
+    slabs split over the layer axis, replicated along the fiber."""
     mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
     s_spec = P(lay, fib)
     fn = common.shard_map(
         body, mesh=mesh,
-        in_specs=((s_spec,) * 4, P(None, (lay, fib)), P(None, (lay, fib))),
+        in_specs=((s_spec,) * 4,
+                  a_spec if a_spec is not None else P(None, (lay, fib)),
+                  b_spec if b_spec is not None else P(None, (lay, fib))),
         out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
     return fn(s_pack, A, B)
+
+
+def replicated_spec(grid: Grid15) -> P:
+    """Sharding spec of a pre-gathered dense operand (see Session)."""
+    return P(None, grid.layer)
 
 
 def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
@@ -218,23 +229,34 @@ def spmma_s15(grid: Grid15, plan: PlanS15, B):
     return _exec(grid, plan, body, dummy, B, P(lay, fib))
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("elision",))
-def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "reuse"):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("elision", "pre_gathered"))
+def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "auto",
+                pre_gathered: tuple = (False, False)):
     """FusedMMA = SpMMA(SDDMM(A,B,S), B) with sparse shifting.
 
+    elision="auto" : resolves to "reuse" (always cheapest here)
     elision="reuse": the fiber all-gathers of the dense column slices are
     performed ONCE and serve both rounds (paper's replication reuse).
     elision="none": B is re-gathered between the rounds, emulating two
     independent kernel launches (the unoptimized baseline).
 
+    pre_gathered=(a, b): the corresponding dense operand arrives already
+    fiber-replicated (sharding ``replicated_spec(grid)``) and its
+    all-gather is skipped — the across-call replication reuse exploited by
+    ``repro.core.api.Session``.
+
     Returns (slabs (L,c,T,mS,rc/p), R_vals (L,c,nb,k)).
     """
+    if elision == "auto":
+        elision = "reuse"
     lay, fib, L = grid.layer, grid.fiber, grid.L
+    pre_a, pre_b = pre_gathered
 
     def body(s, A_loc, B_loc):
         s = tuple(x[0, 0] for x in s)
-        T_A = _gather_cols(A_loc, fib)
-        T_B = _gather_cols(B_loc, fib)
+        T_A = A_loc if pre_a else _gather_cols(A_loc, fib)
+        T_B = B_loc if pre_b else _gather_cols(B_loc, fib)
         rl, cl, partial, tb = _sddmm_round(grid, plan, T_A, T_B, s, L, lay)
         r_vals = s[2] * partial
         if elision == "none":
@@ -253,7 +275,10 @@ def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "reuse"):
         slabs = _spmm_round(grid, plan, T_B, (rl, cl, r_vals, tb), L, lay)
         return slabs[None, None], r_vals[None, None]
 
-    return _exec(grid, plan, body, A, B, (P(lay, fib), P(lay, fib)))
+    rspec = replicated_spec(grid)
+    return _exec(grid, plan, body, A, B, (P(lay, fib), P(lay, fib)),
+                 a_spec=rspec if pre_a else None,
+                 b_spec=rspec if pre_b else None)
 
 
 def assemble_spmm_out(grid: Grid15, plan: PlanS15, slabs) -> np.ndarray:

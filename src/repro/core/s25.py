@@ -263,15 +263,23 @@ def spmma_s25(grid: Grid25, plan: PlanS25, B_sk):
                  P(grid.row, grid.col, grid.fiber))
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
-    """FusedMMA, no elision possible (paper §V-D).
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("elision",))
+def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk,
+                elision: str = "auto"):
+    """FusedMMA, no dense-replication elision possible (paper §V-D).
 
-    Fiber traffic is values-only: AG(vals) happens implicitly by computing
-    partials, RS reduces them home, AG re-broadcasts the final values for
-    the SpMM round — the 3*phi*nr*(c-1)/p term of Table III.
+    The ``elision`` argument exists for signature uniformity with the
+    other three families (repro.core.api registry); only "auto"/"none"
+    are accepted — nothing dense is replicated here, so there is nothing
+    to elide.  Fiber traffic is values-only: AG(vals) happens implicitly
+    by computing partials, RS reduces them home, AG re-broadcasts the
+    final values for the SpMM round — the 3*phi*nr*(c-1)/p term of
+    Table III.
     Returns (out chunks (G,G,c,mS,rc) skewed-home, R values fiber-sharded).
     """
+    if elision not in ("auto", "none"):
+        raise ValueError(f"s25 admits no elision, got {elision!r}")
     G, fib = grid.G, grid.fiber
 
     def body(s, A_loc, B_loc):

@@ -26,6 +26,15 @@ from repro.kernels.fusedmm import fusedmm_pallas
 
 _DEFAULT_BACKEND = "pallas"
 
+# Distributed routing hook, set by `repro.core.api.activate(problem, S)`:
+# while a mesh-bound DistProblem is active, eager calls on its registered
+# pack run the distributed algorithm instead of the local kernel.  The
+# router returns NotImplemented for anything it does not own (other
+# packs, traced values, mismatched shapes), which falls through to the
+# local path unchanged.  An explicit ``backend=`` argument always wins
+# over routing, preserving the ref-oracle escape hatch.
+_DIST_ROUTER = None
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
@@ -70,6 +79,10 @@ def sddmm(A: jax.Array, B: jax.Array, S: RowTiledCOO,
           backend: str | None = None, *, r_tile: int | None = None,
           blocks_per_step: int | None = None) -> RowTiledCOO:
     """R = S * (A @ B.T) sampled at nnz(S); returns S with new values."""
+    if _DIST_ROUTER is not None and backend is None:
+        routed = _DIST_ROUTER.sddmm(A, B, S)
+        if routed is not NotImplemented:
+            return routed
     backend = backend or _DEFAULT_BACKEND
     if backend == "ref":
         return _ref.sddmm(A, B, S)
@@ -85,8 +98,12 @@ def spmm(S: RowTiledCOO, B: jax.Array, m: int | None = None,
          backend: str | None = None, *, r_tile: int | None = None,
          blocks_per_step: int | None = None) -> jax.Array:
     """out = S @ B (shape (m, r))."""
-    backend = backend or _DEFAULT_BACKEND
     m = m if m is not None else S.shape[0]
+    if _DIST_ROUTER is not None and backend is None:
+        routed = _DIST_ROUTER.spmm(S, B, m)
+        if routed is not NotImplemented:
+            return routed
+    backend = backend or _DEFAULT_BACKEND
     if backend == "ref":
         return _ref.spmm(S, B, m)
     r_tile, bps = _resolve_tiling(S, B.shape[0], B.shape[-1],
@@ -100,8 +117,12 @@ def fusedmm(A: jax.Array, B: jax.Array, S: RowTiledCOO,
             m: int | None = None, backend: str | None = None, *,
             r_tile: int | None = None, blocks_per_step: int | None = None):
     """FusedMMA: out = SDDMM(A,B,S) @ B; returns (out, R)."""
-    backend = backend or _DEFAULT_BACKEND
     m = m if m is not None else S.shape[0]
+    if _DIST_ROUTER is not None and backend is None:
+        routed = _DIST_ROUTER.fusedmm(A, B, S, m)
+        if routed is not NotImplemented:
+            return routed
+    backend = backend or _DEFAULT_BACKEND
     if backend == "ref":
         return _ref.fusedmm(A, B, S, m)
     r_tile, bps = _resolve_tiling(S, B.shape[0], B.shape[-1],

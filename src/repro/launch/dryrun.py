@@ -172,6 +172,8 @@ def analyse(lowered, meta, want_hlo=False):
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {}
     txt = compiled.as_text()
     coll = collective_summary(txt)
     prog = program_totals(txt)
@@ -189,6 +191,16 @@ def analyse(lowered, meta, want_hlo=False):
     if want_hlo:
         out["hlo"] = txt
     return out
+
+
+def emit_result(result: dict, out_path: str | None) -> str:
+    """Shared JSON emission for the dry-run entrypoints."""
+    js = json.dumps(result, indent=1)
+    print(js)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(js)
+    return js
 
 
 def main(argv=None):
@@ -214,12 +226,8 @@ def main(argv=None):
 
     ok, why = runnable(args.arch, args.shape)
     if not ok:
-        js = json.dumps(dict(arch=args.arch, shape=args.shape,
-                             skipped=why))
-        print(js)
-        if args.out:
-            with open(args.out, "w") as f:
-                f.write(js)
+        emit_result(dict(arch=args.arch, shape=args.shape, skipped=why),
+                    args.out)
         return 0
 
     overrides = json.loads(args.opt) if args.opt else None
@@ -227,12 +235,7 @@ def main(argv=None):
                                multi_pod=args.multi_pod,
                                overrides=overrides,
                                microbatch=args.microbatch)
-    result = analyse(lowered, meta)
-    js = json.dumps(result, indent=1)
-    print(js)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(js)
+    emit_result(analyse(lowered, meta), args.out)
     return 0
 
 

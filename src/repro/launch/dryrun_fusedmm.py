@@ -3,35 +3,36 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " \
     + os.environ.get("XLA_FLAGS", "")
 
 """Dry-run the PAPER'S kernels on the production mesh: distributed FusedMM
-at p=256 (16x16 re-viewed as a (p/c) x c sparse grid).
+at p=256, dispatched through the unified repro.core.api registry — ANY
+registered algorithm, no per-family branching here.
 
   PYTHONPATH=src python -m repro.launch.dryrun_fusedmm \
-      [--c 16] [--elision reuse|none|fused] [--algo d15|s15] \
+      [--algo auto|d15|s15|d25|s25] [--c 16] \
+      [--elision auto|none|reuse|fused] \
       [--m 1048576] [--r 256] [--nnz-row 32] [--out out.json]
 
 This is the roofline cell most representative of the paper's contribution;
-the perf loop (EXPERIMENTS.md §Perf) iterates c / elision / block shapes.
+the perf loop (EXPERIMENTS.md §Perf) iterates algo / c / elision through
+`sweep_dryrun --fusedmm`.
 """
 import argparse
 import json
 import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, d15, s15, sparse
-from repro.core.grid import Grid15
+from repro.core import api, costmodel, sparse
 from repro.launch.mesh import make_production_mesh
-from jax.sharding import Mesh
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--c", type=int, default=16)
-    ap.add_argument("--elision", default="reuse",
-                    choices=["none", "reuse", "fused"])
-    ap.add_argument("--algo", default="d15", choices=["d15", "s15"])
+    ap.add_argument("--algo", default="auto",
+                    choices=["auto"] + sorted(api.ALGORITHMS))
+    ap.add_argument("--c", type=int, default=None,
+                    help="replication factor (default: cost-model best)")
+    ap.add_argument("--elision", default="auto",
+                    choices=["auto", "none", "reuse", "fused"])
     ap.add_argument("--m", type=int, default=1 << 20)
     ap.add_argument("--r", type=int, default=256)
     ap.add_argument("--nnz-row", type=int, default=32)
@@ -41,54 +42,42 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     mesh = make_production_mesh()          # 16 x 16 = 256 chips
-    devs = np.asarray(mesh.devices).reshape(-1)
-    p = devs.size
-    grid = Grid15(Mesh(devs.reshape(p // args.c, args.c),
-                       ("layer", "fiber")))
+    devices = np.asarray(mesh.devices).reshape(-1)
     m = n = args.m
     r = args.r
     rows, cols, vals = sparse.erdos_renyi(m, n, args.nnz_row, seed=0)
     nnz = len(vals)
-    rng = np.random.default_rng(1)
-    A = jax.device_put(jnp.zeros((m, r), jnp.float32),
-                       grid.sharding(("layer", "fiber"))
-                       if args.algo == "d15"
-                       else grid.sharding(None, ("layer", "fiber")))
-    B = jax.device_put(jnp.zeros((n, r), jnp.float32), A.sharding)
 
-    if args.algo == "d15":
-        plan = d15.plan_d15(grid, rows, cols, vals, m, n, r,
-                            transpose=(args.elision == "reuse"),
-                            row_tile=args.row_tile, nz_block=args.nz_block)
-        lowered = d15.fusedmm_d15.lower(grid, plan, A, B,
-                                        elision=args.elision)
-    else:
-        plan = s15.plan_s15(grid, rows, cols, vals, m, n, r,
-                            row_tile=args.row_tile, nz_block=args.nz_block)
-        lowered = s15.fusedmm_s15.lower(grid, plan, A, B,
-                                        elision=args.elision
-                                        if args.elision != "fused"
-                                        else "reuse")
+    from repro.launch.dryrun import analyse, emit_result
+    try:
+        prob = api.make_problem(rows, cols, vals, (m, n), r,
+                                algorithm=args.algo, c=args.c,
+                                devices=devices, row_tile=args.row_tile,
+                                nz_block=args.nz_block)
+        elision = prob.resolve_elision(args.elision)
+    except ValueError as e:
+        # structurally infeasible cell (divisibility, or an elision the
+        # family does not support): a skip record, not a crash
+        emit_result(dict(algo=args.algo, elision=args.elision, m=m, r=r,
+                         skipped=str(e)), args.out)
+        return 0
+    lowered = prob.lower_fusedmm(elision)
 
-    from repro.launch.dryrun import analyse
-    cm_name = {("d15", "none"): "d15_no_elision",
-               ("d15", "reuse"): "d15_replication_reuse",
-               ("d15", "fused"): "d15_local_fusion",
-               ("s15", "reuse"): "s15_replication_reuse",
-               ("s15", "none"): "s15_replication_reuse"}[
-                   (args.algo, args.elision)]
-    paper_words = costmodel.words_fusedmm(cm_name, p=p, c=args.c, n=n,
-                                          r=r, nnz=nnz).words
-    meta = dict(arch=f"paper-fusedmm-{args.algo}", shape=args.elision,
+    inv = {v: k for k, v in costmodel.FAMILY_ELISION.items()}
+    # s15's "none" baseline has no Table-III row of its own; price it by
+    # the family's closest formula (the measured-vs-paper band in
+    # check_comm_costs absorbs the difference)
+    cm_name = inv.get((prob.alg.name, elision)) or next(
+        name for name, (fam, _) in costmodel.FAMILY_ELISION.items()
+        if fam == prob.alg.name)
+    paper_words = costmodel.words_fusedmm(cm_name, p=prob.p, c=prob.c,
+                                          n=n, r=r, nnz=nnz).words
+    meta = dict(arch=f"paper-fusedmm-{prob.alg.name}", shape=elision,
                 kind="serve", multi_pod=False, mesh=str(mesh.shape),
                 microbatch=0, params=nnz, active_params=nnz,
-                c=args.c, phi=nnz / (n * r), paper_words=paper_words)
-    res = analyse(lowered, meta)
-    js = json.dumps(res, indent=1)
-    print(js)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(js)
+                algo=prob.alg.name, c=prob.c, phi=prob.phi,
+                paper_words=paper_words)
+    emit_result(analyse(lowered, meta), args.out)
     return 0
 
 

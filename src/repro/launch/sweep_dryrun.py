@@ -5,6 +5,14 @@ OOM or crash marks that cell failed without killing the sweep).  Results
 land in results/dryrun/<arch>__<shape>__<mesh>.json plus a summary JSONL.
 
   PYTHONPATH=src python -m repro.launch.sweep_dryrun [--only-single-pod]
+
+``--fusedmm`` sweeps the paper's distributed FusedMM cells instead: every
+algorithm registered in repro.core.api x its supported elisions, each
+cell one `dryrun_fusedmm` subprocess — the sweep itself never branches
+per family.
+
+  PYTHONPATH=src python -m repro.launch.sweep_dryrun --fusedmm \
+      [--fusedmm-m 1048576] [--fusedmm-r 256]
 """
 from __future__ import annotations
 
@@ -30,13 +38,78 @@ MICROBATCH = {
 }
 
 
+def fusedmm_cells():
+    """(algo, elision) cells from the unified registry — no per-family
+    branching; a new registered algorithm appears here automatically."""
+    from repro.core import api
+    return [(name, el) for name in sorted(api.ALGORITHMS)
+            for el in api.ALGORITHMS[name].elisions]
+
+
+def run_fusedmm_sweep(args):
+    os.makedirs(args.outdir, exist_ok=True)
+    summary_path = os.path.join(args.outdir, "summary_fusedmm.jsonl")
+    done = set()
+    if os.path.exists(summary_path):
+        with open(summary_path) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok"):     # failed/timed-out cells retry
+                    done.add((r["algo"], r["elision"]))
+    for algo, elision in fusedmm_cells():
+        if (algo, elision) in done:
+            continue
+        tag = f"fusedmm__{algo}__{elision}"
+        out = os.path.join(args.outdir, tag + ".json")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun_fusedmm",
+               "--algo", algo, "--elision", elision,
+               "--m", str(args.fusedmm_m), "--r", str(args.fusedmm_r),
+               "--nnz-row", str(args.fusedmm_nnz_row), "--out", out]
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=args.timeout)
+            ok = proc.returncode == 0
+            err = proc.stderr[-2000:] if not ok else ""
+        except subprocess.TimeoutExpired:
+            ok, err = False, "timeout"
+        rec = dict(algo=algo, elision=elision, ok=ok,
+                   seconds=round(time.time() - t0, 1), error=err)
+        if ok and os.path.exists(out):
+            try:
+                with open(out) as f:
+                    r = json.load(f)
+                if "skipped" in r:
+                    rec["skipped"] = r["skipped"]
+                else:
+                    rec["c"] = r.get("c")
+                    rec["paper_words"] = r.get("paper_words")
+                    rec["wire_gb"] = round(
+                        r["collectives"]["total_wire_bytes"] / 1e9, 3)
+            except Exception as e:     # pragma: no cover
+                rec["parse_error"] = str(e)
+        with open(summary_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        print(json.dumps(rec), flush=True)
+    print("FUSEDMM SWEEP COMPLETE")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--outdir", default="results/dryrun")
     ap.add_argument("--only-single-pod", action="store_true")
     ap.add_argument("--timeout", type=int, default=1500)
     ap.add_argument("--archs", default=None, help="comma-separated subset")
+    ap.add_argument("--fusedmm", action="store_true",
+                    help="sweep distributed FusedMM cells instead of LM")
+    ap.add_argument("--fusedmm-m", type=int, default=1 << 20)
+    ap.add_argument("--fusedmm-r", type=int, default=256)
+    ap.add_argument("--fusedmm-nnz-row", type=int, default=32)
     args = ap.parse_args(argv)
+
+    if args.fusedmm:
+        return run_fusedmm_sweep(args)
 
     os.makedirs(args.outdir, exist_ok=True)
     summary_path = os.path.join(args.outdir, "summary.jsonl")

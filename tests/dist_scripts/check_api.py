@@ -1,0 +1,86 @@
+"""Cross-algorithm parity of the unified API on 8 devices.
+
+Runs the SAME problem through every registered algorithm via
+repro.core.api and asserts all of them agree with the kernels/ref dense
+oracles; then asserts Session replication caching is bitwise-identical
+to uncached calls (same kernels, same operand values, gather elided).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+import numpy as np
+import jax
+
+from repro.core import api, costmodel, sparse
+
+assert len(jax.devices()) == 8
+
+m = n = 256
+r = 64
+nnz_row = 5
+rows, cols, vals = sparse.erdos_renyi(m, n, nnz_row, seed=0)
+rng = np.random.default_rng(1)
+X = rng.standard_normal((m, r)).astype(np.float32)
+Y = rng.standard_normal((n, r)).astype(np.float32)
+Sd = np.zeros((m, n), np.float32); Sd[rows, cols] = vals
+wantR = Sd * (X @ Y.T)
+wantF = wantR @ Y
+wantS = Sd @ Y
+
+CASES = [("d15", 2), ("d15", 4), ("s15", 2), ("s15", 4),
+         ("d25", 2), ("s25", 2)]
+
+for name, c in CASES:
+    prob = api.make_problem(rows, cols, vals, (m, n), r,
+                            algorithm=name, c=c)
+    assert prob.alg.name == name and prob.c == c
+    tag = f"{name} c={c}"
+
+    got = prob.sddmm(X, Y).to_dense()
+    np.testing.assert_allclose(got, wantR, rtol=2e-4, atol=2e-4)
+    print(tag, "sddmm ok")
+
+    np.testing.assert_allclose(prob.spmm(Y), wantS, rtol=2e-4, atol=2e-4)
+    print(tag, "spmm ok")
+
+    for el in prob.alg.elisions:
+        out, R = prob.fusedmm(X, Y, elision=el)
+        np.testing.assert_allclose(out, wantF, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(R.to_dense(), wantR, rtol=2e-3,
+                                   atol=2e-3)
+        print(tag, f"fusedmm {el} ok")
+
+    # the uniform default resolves per the cost model, never errors
+    out, _ = prob.fusedmm(X, Y)
+    np.testing.assert_allclose(out, wantF, rtol=2e-3, atol=2e-3)
+    print(tag, f"fusedmm auto={prob.resolve_elision()} ok")
+
+    # --- Session replication caching: bitwise identity vs uncached, per
+    # elision (the cache elides the gather, never the arithmetic)
+    for el in prob.alg.elisions:
+        sess = api.Session()
+        base, baseR = prob.fusedmm(X, Y, elision=el)
+        first, _ = prob.fusedmm(X, Y, elision=el, session=sess)   # fill
+        cached, cachedR = prob.fusedmm(X, Y, elision=el,
+                                       session=sess)              # hit
+        np.testing.assert_array_equal(base, first, err_msg=f"{tag} {el}")
+        np.testing.assert_array_equal(base, cached, err_msg=f"{tag} {el}")
+        np.testing.assert_array_equal(baseR.to_dense(),
+                                      cachedR.to_dense(),
+                                      err_msg=f"{tag} {el}")
+        print(tag, f"session bitwise ok [{el}] "
+                   f"({len(sess)} cached operands)")
+
+# --- auto dispatch picks the paper's regime (Fig. 6) and stays correct
+lo = api.make_problem(rows, cols, vals, (m, n), r, algorithm="auto")
+assert lo.alg.name.startswith("s"), (lo.alg.name, lo.phi)
+out, _ = lo.fusedmm(X, Y)
+np.testing.assert_allclose(out, wantF, rtol=2e-3, atol=2e-3)
+print(f"auto (phi={lo.phi:.3f}) -> {lo.alg.name} c={lo.c} ok")
+
+dense_rows, dense_cols, dense_vals = sparse.erdos_renyi(m, n, 128, seed=2)
+hi = api.make_problem(dense_rows, dense_cols, dense_vals, (m, n), 8,
+                      algorithm="auto")
+assert hi.alg.name.startswith("d"), (hi.alg.name, hi.phi)
+print(f"auto (phi={hi.phi:.3f}) -> {hi.alg.name} c={hi.c} ok")
+
+print("ALL API OK")

@@ -1,0 +1,234 @@
+"""Unified distributed-algorithm API: registry, dispatch, parity (1 device).
+
+The multi-device versions of these checks live in
+tests/dist_scripts/check_api.py / check_apps_dist.py (slow tier); here
+every registered algorithm degenerates onto a single-device grid, which
+exercises the full plan/execute/assemble path and the dispatch logic
+cheaply on every PR.
+"""
+import inspect
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, costmodel, d15, d25, s15, s25, sparse
+from repro.kernels import ops, ref
+
+
+def _problem_data(m=64, n=64, r=8, k=4, seed=0):
+    rows, cols, vals = sparse.erdos_renyi(m, n, k, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    X = rng.standard_normal((m, r)).astype(np.float32)
+    Y = rng.standard_normal((n, r)).astype(np.float32)
+    Sd = np.zeros((m, n), np.float32)
+    Sd[rows, cols] = vals
+    return rows, cols, vals, X, Y, Sd
+
+
+def _dev1():
+    # other fast-tier modules (dryrun) force a huge host device count at
+    # import time; the single-device degenerate grids are pinned here
+    return jax.devices()[:1]
+
+
+def _make(rows, cols, vals, shape, r, **kw):
+    return api.make_problem(rows, cols, vals, shape, r, devices=_dev1(),
+                            **kw)
+
+
+def test_registry_has_all_four_families():
+    assert set(api.ALGORITHMS) == set(costmodel.FAMILIES)
+    for name, alg in api.ALGORITHMS.items():
+        assert alg.name == name
+        assert alg.elisions, name
+
+
+def test_uniform_auto_elision_default():
+    """Satellite: every family fusedmm entrypoint defaults to "auto"."""
+    for fn in (d15.fusedmm_d15, s15.fusedmm_s15, d25.fusedmm_d25,
+               s25.fusedmm_s25):
+        sig = inspect.signature(fn)
+        assert sig.parameters["elision"].default == "auto", fn
+
+
+def test_choose_algorithm_regime_rule():
+    """Low phi -> sparse families; high phi -> dense families (Fig. 6)."""
+    kw = dict(m=1 << 16, n=1 << 16, r=128, p=64)
+    lo = costmodel.choose_algorithm(nnz=int(0.02 * kw["n"] * kw["r"]), **kw)
+    hi = costmodel.choose_algorithm(nnz=int(4.0 * kw["n"] * kw["r"]), **kw)
+    assert lo.family.startswith("s")
+    assert hi.family.startswith("d")
+
+
+def test_choose_algorithm_respects_feasibility():
+    # r=2 rules out s15 (needs r % p == 0) and s25/d25 at 4 procs
+    ch = costmodel.choose_algorithm(m=64, n=64, nnz=256, r=2, p=4)
+    assert ch.family == "d15"
+    with pytest.raises(ValueError):
+        costmodel.choose_algorithm(m=63, n=63, nnz=64, r=2, p=4)
+    # pinned c filters candidates
+    ch = costmodel.choose_algorithm(m=64, n=64, nnz=256, r=8, p=4, c=4)
+    assert ch.c == 4
+
+
+def test_family_feasible():
+    assert costmodel.family_feasible("d15", m=64, n=64, r=2, p=8, c=2)
+    assert not costmodel.family_feasible("s15", m=64, n=64, r=2, p=8, c=2)
+    assert costmodel.family_feasible("d25", m=64, n=64, r=4, p=8, c=2)
+    assert not costmodel.family_feasible("d25", m=64, n=64, r=4, p=8, c=4)
+
+
+@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
+def test_api_parity_vs_ref(name):
+    """Same problem through every registered algorithm == kernels/ref."""
+    rows, cols, vals, X, Y, Sd = _problem_data()
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1],
+                 algorithm=name)
+    wantR = np.asarray(ref.sddmm_dense(jnp.asarray(X), jnp.asarray(Y),
+                                       jnp.asarray(Sd)))
+    np.testing.assert_allclose(prob.sddmm(X, Y).to_dense(), wantR,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(prob.spmm(Y),
+                               np.asarray(ref.spmm_dense(Sd, Y)),
+                               rtol=2e-4, atol=2e-4)
+    want_out, _ = ref.fusedmm_dense(X, Y, Sd)
+    for el in prob.alg.elisions:
+        out, R = prob.fusedmm(X, Y, elision=el)
+        np.testing.assert_allclose(out, want_out, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(R.to_dense(), wantR, rtol=2e-3,
+                                   atol=2e-3)
+
+
+@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
+def test_session_caching_bitwise(name):
+    """Cached replication == uncached, bit for bit, at every elision."""
+    rows, cols, vals, X, Y, _ = _problem_data(seed=2)
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm=name)
+    for el in prob.alg.elisions:
+        sess = api.Session()
+        base, _ = prob.fusedmm(X, Y, elision=el)
+        one, _ = prob.fusedmm(X, Y, elision=el, session=sess)
+        two, _ = prob.fusedmm(X, Y, elision=el, session=sess)
+        np.testing.assert_array_equal(base, one)
+        np.testing.assert_array_equal(base, two)
+
+
+def test_sparse_result_values_without_dense():
+    """values()/to_coo assemble O(nnz) and match the dense view."""
+    rows, cols, vals, X, Y, Sd = _problem_data(seed=5)
+    wantR = Sd * (X @ Y.T)
+    for name in sorted(costmodel.FAMILIES):
+        prob = _make(rows, cols, vals, (64, 64), 8, algorithm=name)
+        res = prob.sddmm(X, Y)
+        np.testing.assert_allclose(res.values(), wantR[rows, cols],
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+        r, c, v = res.to_coo()
+        back = np.zeros((64, 64), np.float32)
+        np.add.at(back, (r, c), v)
+        np.testing.assert_allclose(back, wantR, rtol=2e-4, atol=2e-4,
+                                   err_msg=name)
+
+
+def test_session_lru_bound():
+    """The cache evicts cold iterates; the hot operand stays correct."""
+    rows, cols, vals, X, Y, _ = _problem_data(seed=6)
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="s15")
+    base, _ = prob.fusedmm(X, Y, elision="reuse")
+    sess = api.Session(max_entries=3)
+    rng = np.random.default_rng(9)
+    for _ in range(8):
+        it = rng.standard_normal((64, 8)).astype(np.float32)
+        prob.fusedmm(it, Y, elision="reuse", session=sess)
+    assert len(sess) <= 3
+    out, _ = prob.fusedmm(X, Y, elision="reuse", session=sess)
+    np.testing.assert_array_equal(base, out)
+
+
+def test_session_prefers_cacheable_elision():
+    rows, cols, vals, _, _, _ = _problem_data()
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="d15")
+    assert prob.resolve_elision("auto", api.Session()) == "reuse"
+    s25p = _make(rows, cols, vals, (64, 64), 8, algorithm="s25")
+    assert s25p.resolve_elision("auto", api.Session()) == "none"
+
+
+def test_with_values_and_transposed():
+    rows, cols, vals, X, Y, Sd = _problem_data()
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="d15")
+    ones = prob.with_values(np.ones_like(vals))
+    want = (Sd != 0).astype(np.float32) @ Y
+    np.testing.assert_allclose(ones.spmm(Y), want, rtol=2e-4, atol=2e-4)
+    probT = prob.transposed()
+    np.testing.assert_allclose(probT.spmm(X), Sd.T @ X, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_with_r_validates_divisibility():
+    rows, cols, vals, _, _, Sd = _problem_data()
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="s15")
+    assert prob.with_r(4).r == 4      # p=1: every width is feasible
+    # the divisibility rule itself (multi-device grids are slow-tier)
+    fake = type("G", (), {"p": 8, "G": 2, "c": 2})()
+    assert api.ALGORITHMS["s15"].min_r_multiple(fake) == 8
+    assert api.ALGORITHMS["d25"].min_r_multiple(fake) == 2
+    assert api.ALGORITHMS["s25"].min_r_multiple(fake) == 4
+    assert api.ALGORITHMS["d15"].min_r_multiple(fake) == 1
+
+
+def test_ops_routing_when_mesh_active():
+    """kernels/ops routes through the api while a problem is active."""
+    rows, cols, vals, X, Y, Sd = _problem_data(seed=3)
+    S = sparse.pack_row_tiled(rows, cols, vals, (64, 64), row_tile=32,
+                              nz_block=32)
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="d15")
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    local_R = ops.sddmm(Xj, Yj, S)
+    local_out = ops.spmm(S, Yj, m=64)
+    local_f, local_fR = ops.fusedmm(Xj, Yj, S, m=64)
+    with api.activate(prob, S):
+        routed_R = ops.sddmm(Xj, Yj, S)
+        routed_out = ops.spmm(S, Yj, m=64)
+        routed_f, routed_fR = ops.fusedmm(Xj, Yj, S, m=64)
+        # a different pack falls through to the local kernels
+        other = sparse.pack_row_tiled(rows, cols, vals, (64, 64),
+                                      row_tile=32, nz_block=32)
+        ops.spmm(other, Yj, m=64)
+        # an explicit backend request always wins over routing
+        ref_out = ops.spmm(S, Yj, m=64, backend="ref")
+        np.testing.assert_allclose(np.asarray(ref_out), Sd @ Y,
+                                   rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(routed_R.to_dense()),
+                               np.asarray(local_R.to_dense()),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(routed_out),
+                               np.asarray(local_out), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(routed_f),
+                               np.asarray(local_f), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(routed_fR.to_dense()),
+                               np.asarray(local_fR.to_dense()),
+                               rtol=2e-3, atol=2e-3)
+    assert ops._DIST_ROUTER is None    # context restored
+
+
+def test_distributed_als_single_device():
+    from repro.apps import als
+    _, _, hist = als.run_als_distributed(m=128, n=128, nnz_per_row=6,
+                                         r=16, rounds=2, cg_iters=8,
+                                         devices=_dev1(), verbose=False)
+    assert hist[-1] < 0.3 * hist[0], hist
+
+
+def test_distributed_gat_matches_local():
+    from repro.apps import gat
+    n, d, seed = 96, 16, 3
+    S = gat.make_graph(n, 4, seed=seed, row_tile=32, nz_block=32)
+    gp = gat.make_dist_graph(n, 4, d, seed=seed, devices=_dev1())
+    rng = np.random.default_rng(seed)
+    H = rng.standard_normal((n, d)).astype(np.float32)
+    p = gat.init_gat_layer(jax.random.PRNGKey(0), d, d)
+    want = np.asarray(gat.gat_layer(S, jnp.asarray(H), p))
+    got = np.asarray(gat.gat_layer_distributed(gp, H, p))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)

@@ -69,3 +69,18 @@ def test_comm_costs_match_table3():
 def test_elastic_remesh_8_to_4():
     out = run_script("check_elastic.py")
     assert "ELASTIC OK" in out
+
+
+@pytest.mark.slow
+def test_unified_api_cross_algorithm_parity():
+    """Every registered algorithm through repro.core.api == kernels/ref,
+    plus bitwise-identical Session replication caching."""
+    out = run_script("check_api.py")
+    assert "ALL API OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_als_and_gat():
+    """Paper §VI-E applications end-to-end on the unified API."""
+    out = run_script("check_apps_dist.py")
+    assert "ALL APPS DIST OK" in out
