@@ -13,7 +13,7 @@ layer is machine-readable from PR to PR.
 import numpy as np
 
 from benchmarks import common
-from repro.core import api, sparse
+from repro.core import api, costmodel, sparse
 
 JSON_PATH = "BENCH_dist.json"
 
@@ -33,6 +33,16 @@ def run(out, json_path=JSON_PATH):
         prob = api.make_problem(rows, cols, vals, (M, N), R,
                                 algorithm=name)
         for elision in prob.alg.elisions:
+            # modeled per-processor comm words (Table-III grid row) so
+            # the elision win is machine-readable even where the 8-host-
+            # device wall times are compile-bound; session rows get the
+            # steady-state (cached) model per docs/choosing.md
+            cm_kw = dict(p=prob.p, c=prob.c, n=N, r=R, nnz=prob.nnz)
+            cm_name = costmodel.ELISION_COST_NAME[(name, elision)]
+            model_words = {
+                False: costmodel.words_fusedmm(cm_name, **cm_kw).words,
+                True: costmodel.words_fusedmm_cached(cm_name,
+                                                     **cm_kw).words}
             # uncached: every call pays the full gather
             t_plain = common.timeit(
                 lambda: prob.fusedmm(X, Y, elision=elision)[0], iters=2)
@@ -49,7 +59,8 @@ def run(out, json_path=JSON_PATH):
                 records.append(dict(
                     name=name, elision=elision, session_cached=cached,
                     c=prob.c, m=M, n=N, r=R, nnz=prob.nnz,
-                    phi=prob.phi, seconds=t))
+                    phi=prob.phi, seconds=t,
+                    model_words=model_words[cached]))
 
         t_sddmm = common.timeit(lambda: prob.sddmm(X, Y).to_dense(),
                                 iters=2)

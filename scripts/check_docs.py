@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Link-check the repo docs: docs/*.md, README.md, DESIGN.md.
+
+Validates every inline markdown link ``[text](target)``:
+
+* relative file targets must exist (resolved against the linking file's
+  directory);
+* ``file#anchor`` / ``#anchor`` fragments must match a heading in the
+  target file (GitHub-style slugification) — a dead anchor fails the
+  build, per the CI docs job;
+* ``http(s)://`` targets are recorded but not fetched (CI has no
+  network guarantee).
+
+Exit code 0 iff no dead links.  Usage:
+
+    python scripts/check_docs.py [root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation (backticks
+    included), spaces to hyphens."""
+    text = heading.strip().lower()
+    text = re.sub(r"[`*_]", "", text)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    out, in_fence = set(), False
+    for line in path.read_text().splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            slug = slugify(m.group(1))
+            n, base = 1, slug
+            while slug in out:          # duplicate headings: -1, -2, ...
+                slug = f"{base}-{n}"
+                n += 1
+            out.add(slug)
+    return out
+
+
+def links_of(path: pathlib.Path):
+    in_fence = False
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield i, m.group(1)
+
+
+def check(root: pathlib.Path):
+    files = sorted(root.glob("docs/*.md"))
+    for name in ("README.md", "DESIGN.md"):
+        if (root / name).exists():
+            files.append(root / name)
+    errors, checked = [], 0
+    for f in files:
+        for lineno, target in links_of(f):
+            checked += 1
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = f if not target else (f.parent / target).resolve()
+            if not dest.exists():
+                errors.append(f"{f.relative_to(root)}:{lineno}: "
+                              f"missing file {target!r}")
+                continue
+            if frag is not None:
+                if dest.suffix != ".md":
+                    errors.append(f"{f.relative_to(root)}:{lineno}: "
+                                  f"anchor on non-markdown {target!r}")
+                elif frag not in anchors_of(dest):
+                    errors.append(f"{f.relative_to(root)}:{lineno}: "
+                                  f"dead anchor #{frag} in "
+                                  f"{dest.relative_to(root)}")
+    return errors, checked, len(files)
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    root = pathlib.Path(argv[0] if argv else ".").resolve()
+    errors, checked, nfiles = check(root)
+    for e in errors:
+        print(f"DEAD LINK: {e}")
+    print(f"checked {checked} links across {nfiles} files: "
+          f"{len(errors)} dead")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

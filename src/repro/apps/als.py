@@ -167,12 +167,22 @@ def dist_cg_solve(maskP: api.DistProblem, B, rhs, reg, iters=10,
 
 
 def dist_als_round(dp: DistALSProblem, A, B, cg_iters=10,
-                   session: api.Session | None = None):
-    """One distributed ALS round: optimize A given B, then B given A."""
+                   session: api.Session | None = None,
+                   elision: str = "auto"):
+    """One distributed ALS round: optimize A given B, then B given A.
+
+    ``elision`` pins the FusedMM strategy of every CG matvec (any cell
+    the chosen family implements — see docs/algorithms.md); the default
+    "auto" ranks the family's cells by their session-steady-state word
+    counts, so the cached loop lands on the cheapest cell for the grid
+    (docs/choosing.md's worked ALS example).
+    """
     rhs_a = dp.ratings.spmm(B)
-    A = dist_cg_solve(dp.mask, B, rhs_a, dp.reg, cg_iters, session)
+    A = dist_cg_solve(dp.mask, B, rhs_a, dp.reg, cg_iters, session,
+                      elision)
     rhs_b = dp.ratings_t.spmm(A)
-    B = dist_cg_solve(dp.mask_t, A, rhs_b, dp.reg, cg_iters, session)
+    B = dist_cg_solve(dp.mask_t, A, rhs_b, dp.reg, cg_iters, session,
+                      elision)
     return A, B
 
 
@@ -184,9 +194,11 @@ def dist_loss(dp: DistALSProblem, A, B):
 
 def run_als_distributed(m=1024, n=1024, nnz_per_row=8, r=32, rounds=3,
                         cg_iters=10, seed=0, algorithm="auto", c=None,
-                        devices=None, verbose=True):
+                        devices=None, elision="auto", verbose=True):
     """End-to-end distributed ALS: the §VI-E application on any
     registered algorithm, with Session-cached replication in the CG loop.
+    ``elision`` selects the FusedMM cell for the matvecs ("auto" = the
+    cost model's session-aware pick).
     """
     dp = make_dist_problem(m, n, nnz_per_row, r, seed=seed,
                            algorithm=algorithm, c=c, devices=devices)
@@ -196,7 +208,7 @@ def run_als_distributed(m=1024, n=1024, nnz_per_row=8, r=32, rounds=3,
     session = api.Session()
     hist = [dist_loss(dp, A, B)]
     for it in range(rounds):
-        A, B = dist_als_round(dp, A, B, cg_iters, session)
+        A, B = dist_als_round(dp, A, B, cg_iters, session, elision)
         hist.append(dist_loss(dp, A, B))
         if verbose:
             print(f"ALS[{dp.mask.alg.name}] round {it}: "

@@ -11,7 +11,11 @@ an identical communication pattern to SDDMM": with augmented embeddings
 A* = [u, 1] and B* = [1, v] the dot <A*_i, B*_j> = u_i + v_j, so the score
 computation IS an r=2 SDDMM through the repro kernels, and the aggregation
 is an SpMM — per the paper, local kernel fusion is NOT applicable because
-the softmax needs completed rows (noted in Fig. 9).
+the softmax needs completed rows (noted in Fig. 9).  This is an
+*application-level* barrier, distinct from the per-family elision matrix
+of docs/algorithms.md: even on d15, whose FusedMM has a true fused cell,
+GAT must run the two kernels separately — the elision grid applies to
+FusedMM calls (ALS's matvecs), not to sddmm;softmax;spmm pipelines.
 
 The distributed path (`gat_layer_distributed`) runs the score SDDMM and
 the aggregation SpMM through `repro.core.api` on any registered

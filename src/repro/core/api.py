@@ -13,7 +13,11 @@ per family:
   with output ``(m, r)``; where a family's replication-reuse executor is
   the FusedMMB form (d15/d25), the registry runs it on the transpose pack
   with swapped operands — ``FusedMMA(S, X, Y) = FusedMMB(S^T, Y, X)`` —
-  so the caller-visible contract never changes.
+  so the caller-visible contract never changes.  The elision matrix is
+  full rank: every entry declares ``reuse`` and (except s25, where it is
+  structurally impossible) ``fused``, each cell backed by a Table-III
+  word-count row in ``costmodel`` — docs/algorithms.md tabulates the
+  grid with per-cell formulas.
 * **DistProblem** — owns the host COO of S, the processor grid, and the
   device-placed packs in every orientation the chosen strategies need
   (built lazily, amortized across calls like the paper's preprocessing).
@@ -285,8 +289,8 @@ class _D15(Algorithm):
 @register
 class _S15(Algorithm):
     name = "s15"
-    elisions = ("reuse", "none")
-    auto_elisions = ("reuse",)   # "none" is the unoptimized baseline
+    elisions = ("none", "reuse", "fused")
+    auto_elisions = ("fused", "reuse", "none")
 
     def make_grid(self, c, devices):
         return make_grid15(c, devices=devices)
@@ -353,8 +357,8 @@ class _S15(Algorithm):
 @register
 class _D25(Algorithm):
     name = "d25"
-    elisions = ("none", "reuse")
-    auto_elisions = ("none", "reuse")
+    elisions = ("none", "reuse", "fused")
+    auto_elisions = ("fused", "reuse", "none")
 
     def make_grid(self, c, devices):
         return make_grid25(c, devices=devices)
@@ -431,8 +435,11 @@ class _D25(Algorithm):
 @register
 class _S25(Algorithm):
     name = "s25"
-    elisions = ("none",)
-    auto_elisions = ("none",)
+    # "fused" is structurally impossible here (docs/algorithms.md): the
+    # cross-fiber partial-sum reduction separates the SDDMM and SpMM
+    # halves, and the stationary S ships no structure to elide.
+    elisions = ("none", "reuse")
+    auto_elisions = ("reuse", "none")
 
     def make_grid(self, c, devices):
         return make_grid25(c, devices=devices)
@@ -493,14 +500,14 @@ class _S25(Algorithm):
                                  self._rvals_triples(prob, plan, rvals)))
 
         return (s25.fusedmm_s25, (grid, plan, a, b),
-                dict(elision="none"), post)
+                dict(elision=elision), post)
 
 
 # ---------------------------------------------------------------------------
 # DistProblem
 # ---------------------------------------------------------------------------
 
-_COST_NAME = {fe: name for name, fe in costmodel.FAMILY_ELISION.items()}
+_COST_NAME = costmodel.ELISION_COST_NAME
 
 
 @dataclasses.dataclass
@@ -602,25 +609,31 @@ class DistProblem:
     # -- elision resolution --------------------------------------------------
     def resolve_elision(self, elision: str = "auto",
                         session: Optional["Session"] = None) -> str:
-        """Uniform default: rank this family's candidate strategies by
-        their Table-III words at the problem's (p, c, phi).
+        """Resolve ``elision="auto"``: rank this family's candidate
+        strategies by their Table-III words at the problem's (p, c, phi).
 
-        With a Session, "reuse" wins whenever the family offers it: its
-        gathered operand is the second (stationary-by-convention) one,
-        so after the first call the cache elides that all-gather and the
-        per-call traffic drops to the shift words alone — below every
-        alternative, which re-gathers the changing operand each call.
+        Without a Session the per-call :func:`costmodel.words_fusedmm`
+        ranks the cells; with one, the *steady-state*
+        :func:`costmodel.words_fusedmm_cached` does — it credits each
+        cell the share of its replication term the Session elides (the
+        stationary operand's all-gather, paid once per cache fill
+        instead of once per call).  This is why a Session can flip the
+        choice: d15's "reuse" drops to its shift words alone and
+        overtakes "fused" at large c, while on s15 "fused" keeps its
+        4*phi/c-vs-6*phi/c shift advantage and wins either way.  An
+        explicit elision is validated against the registry entry and
+        returned unchanged.
         """
         if elision != "auto":
             if elision not in self.alg.elisions:
                 raise ValueError(f"{self.alg.name} supports "
                                  f"{self.alg.elisions}, got {elision!r}")
             return elision
-        if session is not None and "reuse" in self.alg.auto_elisions:
-            return "reuse"
+        cost_fn = (costmodel.words_fusedmm_cached if session is not None
+                   else costmodel.words_fusedmm)
 
         def words(el):
-            cost = costmodel.words_fusedmm(
+            cost = cost_fn(
                 _COST_NAME[(self.alg.name, el)], p=self.p, c=self.c,
                 n=self.n, r=self.r, nnz=self.nnz)
             return cost.words
@@ -629,18 +642,21 @@ class DistProblem:
 
     # -- the shared-signature executors --------------------------------------
     def sddmm(self, X, Y) -> SparseResult:
-        """R = S * (X @ Y.T) sampled at nnz(S)."""
+        """R = S * (X @ Y.T) sampled at nnz(S); X (m, r), Y (n, r)."""
         return self.alg.sddmm(self, X, Y)
 
     def spmm(self, Y) -> np.ndarray:
-        """out = S @ Y, host-assembled (m, r)."""
+        """out = S @ Y, host-assembled (m, r); Y is (n, r)."""
         return self.alg.spmm(self, Y)
 
     def fusedmm(self, X, Y, elision: str = "auto",
                 session: Optional["Session"] = None):
         """out = (S * (X @ Y.T)) @ Y, host-assembled (m, r).
 
-        Returns (out, SparseResult of the intermediate R)."""
+        Returns (out, SparseResult of the intermediate R).  ``elision``
+        must be one of this family's registry-declared cells (or
+        "auto"); see the module-level :func:`fusedmm` for the full
+        matrix and docs/algorithms.md for the per-cell word counts."""
         el = self.resolve_elision(elision, session)
         return self.alg.fusedmm(self, X, Y, el, session)
 
@@ -734,15 +750,60 @@ def make_problem(rows, cols, vals, shape: Tuple[int, int], r: int, *,
 
 
 def sddmm(problem: DistProblem, X, Y) -> SparseResult:
+    """Distributed SDDMM: ``R = S * (X @ Y.T)`` sampled at nnz(S).
+
+    Shapes: ``X (m, r)``, ``Y (n, r)`` host arrays (any dtype castable
+    to float32); returns a :class:`SparseResult` holding the sampled
+    values in the family's home device layout, with ``values()`` /
+    ``to_coo()`` / ``to_dense()`` host views.  Every family honors the
+    same signature; no family-specific kwargs exist at this level (the
+    per-family knobs — ``overlap``, ``pre_gathered`` — live on the
+    ``repro.core.<family>`` executors).
+    """
     return problem.sddmm(X, Y)
 
 
 def spmm(problem: DistProblem, Y) -> np.ndarray:
+    """Distributed SpMM: ``out = S @ Y``, host-assembled ``(m, r)``.
+
+    ``Y`` is ``(n, r)``; the result is a numpy float32 array regardless
+    of the family's on-device layout (slab-stacked for s15, skewed
+    chunks for s25, ... — assembly is the registry entry's job).
+    """
     return problem.spmm(Y)
 
 
 def fusedmm(problem: DistProblem, X, Y, elision: str = "auto",
             session: Optional[Session] = None):
+    """Distributed FusedMM with *FusedMMA semantics* on every family:
+
+        ``out = (S * (X @ Y.T)) @ Y``
+
+    ``X (m, r)``, ``Y (n, r)`` -> ``(out (m, r) numpy, SparseResult R)``
+    where ``R`` is the sampled intermediate.  Families whose
+    replication-reuse executor is the FusedMMB form (d15/d25) run it on
+    the transpose pack with swapped operands transparently.
+
+    ``elision`` selects the communication-eliding strategy; each family
+    honors exactly the cells its registry entry declares
+    (docs/algorithms.md matrix):
+
+    =======  ==============================  =========================
+    family   elisions                        notes
+    =======  ==============================  =========================
+    d15      none, reuse, fused              fused = true local fusion
+    s15      none, reuse, fused              fused = one-structure-pass
+    d25      none, reuse, fused              fused = one-structure-pass
+    s25      none, reuse                     fused structurally
+                                             impossible
+    =======  ==============================  =========================
+
+    ``elision="auto"`` ranks the declared cells by the Table-III word
+    counts at the problem's (p, c, phi) — steady-state (cached) counts
+    when a ``session`` is passed (docs/choosing.md).  An undeclared
+    elision raises ``ValueError``.  ``session`` caches the stationary
+    operand's fiber replication across calls, bitwise-identically.
+    """
     return problem.fusedmm(X, Y, elision=elision, session=session)
 
 

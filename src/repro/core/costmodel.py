@@ -22,24 +22,42 @@ ALGORITHMS = (
     "d15_no_elision",        # 1.5D dense shift, unoptimized SDDMM;SpMM
     "d15_replication_reuse", # 1.5D dense shift + replication reuse
     "d15_local_fusion",      # 1.5D dense shift + local kernel fusion
+    "s15_no_elision",        # 1.5D sparse shift, unoptimized baseline
     "s15_replication_reuse", # 1.5D sparse shift + replication reuse
+    "s15_local_fusion",      # 1.5D sparse shift + one-structure-pass
     "d25_no_elision",        # 2.5D dense replicating, unoptimized
     "d25_replication_reuse", # 2.5D dense replicating + replication reuse
-    "s25_no_elision",        # 2.5D sparse replicating (no elision possible)
+    "d25_local_fusion",      # 2.5D dense replicating + one-structure-pass
+    "s25_no_elision",        # 2.5D sparse replicating, unoptimized
+    "s25_replication_reuse", # 2.5D sparse replicating + B-chunk reuse
 )
 
 # Table-III algorithm name -> (executor family, elision strategy).  The
 # families are the four implementations behind repro.core.api; elision is
 # the FusedMM strategy the family executor takes as its static argument.
+# The grid is full rank: every (family, elision) cell a registry entry
+# declares has exactly one word-count row here (docs/algorithms.md
+# derives the formulas; rows beyond the paper's Table III price the
+# one-structure-pass "fused" cells and s25's B-chunk "reuse").  The one
+# structurally impossible cell — s25 "fused" — has no row because no
+# executor can exist for it (see docs/algorithms.md).
 FAMILY_ELISION = {
     "d15_no_elision": ("d15", "none"),
     "d15_replication_reuse": ("d15", "reuse"),
     "d15_local_fusion": ("d15", "fused"),
+    "s15_no_elision": ("s15", "none"),
     "s15_replication_reuse": ("s15", "reuse"),
+    "s15_local_fusion": ("s15", "fused"),
     "d25_no_elision": ("d25", "none"),
     "d25_replication_reuse": ("d25", "reuse"),
+    "d25_local_fusion": ("d25", "fused"),
     "s25_no_elision": ("s25", "none"),
+    "s25_replication_reuse": ("s25", "reuse"),
 }
+
+# inverse of FAMILY_ELISION: (family, elision) -> Table-III row name.
+# Sound because the grid is full rank with exactly one row per cell.
+ELISION_COST_NAME = {fe: name for name, fe in FAMILY_ELISION.items()}
 
 FAMILIES = ("d15", "s15", "d25", "s25")
 
@@ -82,8 +100,19 @@ def words_fusedmm(algorithm: str, *, p: int, c: int, n: int, r: int,
     elif algorithm == "d15_local_fusion":
         words = n * r * (1.0 / c + 2.0 * (c - 1) / p)
         msgs = p / c + 2 * (c - 1)
+    elif algorithm == "s15_no_elision":
+        # two full COO propagation rounds (3 words/nnz each) and the
+        # dense column slices re-gathered between the kernel launches
+        words = n * r * (6.0 * phi / c + 2.0 * (c - 1) / p)
+        msgs = 2 * p / c + 2 * (c - 1)
     elif algorithm == "s15_replication_reuse":
         words = n * r * (6.0 * phi / c + (c - 1) / p)
+        msgs = 2 * p / c + (c - 1)
+    elif algorithm == "s15_local_fusion":
+        # one-structure-pass: the SpMM round replays the locally cached
+        # per-phase coordinate structure, so only the final values travel
+        # (1 word/nnz/phase instead of 3): 6*phi -> 4*phi
+        words = n * r * (4.0 * phi / c + (c - 1) / p)
         msgs = 2 * p / c + (c - 1)
     elif algorithm == "d25_no_elision":
         sq = math.sqrt(p / c)
@@ -95,14 +124,63 @@ def words_fusedmm(algorithm: str, *, p: int, c: int, n: int, r: int,
         words = n * r / math.sqrt(p * c) * (6 * phi + 2) \
             + n * r * (c - 1) / p
         msgs = 4 * sq + (c - 1)
+    elif algorithm == "d25_local_fusion":
+        # one-structure-pass on the Cannon grid: round 2 replays cached
+        # structure AND cached B chunks, shifting only the final values —
+        # 6*phi+2 -> 4*phi+1 on the shift term; AG in + RS out retained
+        sq = math.sqrt(p / c)
+        words = n * r / math.sqrt(p * c) * (4 * phi + 1) \
+            + 2 * n * r * (c - 1) / p
+        msgs = 4 * sq + 2 * (c - 1)
     elif algorithm == "s25_no_elision":
         sq = math.sqrt(p / c)
         words = n * r / math.sqrt(p) * 4.0 / math.sqrt(c) \
             + 3.0 * phi * n * r * (c - 1) / p
         msgs = 4 * sq + 3 * (c - 1)
+    elif algorithm == "s25_replication_reuse":
+        # the SpMM round replays the B r-chunks cached during the SDDMM
+        # round instead of re-shifting them: 4 -> 3 dense-chunk units
+        sq = math.sqrt(p / c)
+        words = n * r / math.sqrt(p * c) * 3.0 \
+            + 3.0 * phi * n * r * (c - 1) / p
+        msgs = 3 * sq + 3 * (c - 1)
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     return CommCost(algorithm, p, c, words, msgs, phi)
+
+
+# Fraction of a cell's replication term an api.Session elides in steady
+# state.  The Session caches the fiber all-gather of the *stationary*
+# (second, by convention) dense operand across calls.  Cells whose
+# gathered operand is the changing first one (d15/d25 "none"/"fused")
+# save nothing; the FusedMMB "reuse" cells gather exactly the stationary
+# operand (full saving); s15 gathers both operands through the Session,
+# so only the stationary half of its replication term is cacheable; s25
+# replicates nothing dense.  See docs/choosing.md for the derivation.
+SESSION_CACHEABLE = {
+    "d15_replication_reuse": 1.0,
+    "d25_replication_reuse": 1.0,
+    "s15_no_elision": 0.5,
+    "s15_replication_reuse": 0.5,
+    "s15_local_fusion": 0.5,
+}
+
+
+def words_fusedmm_cached(algorithm: str, *, p: int, c: int, n: int, r: int,
+                         nnz: int) -> CommCost:
+    """Steady-state per-call words with an :class:`repro.core.api.Session`
+    holding the stationary operand's replication (docs/choosing.md).
+
+    Subtracts the cacheable share of the cell's ``n*r*(c-1)/p``
+    replication term from :func:`words_fusedmm`; the shift words are
+    never cacheable (the traveling operand changes every call).
+    """
+    cost = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz)
+    frac = SESSION_CACHEABLE.get(algorithm, 0.0)
+    saved = frac * n * r * (c - 1) / p
+    return dataclasses.replace(cost, words=max(cost.words - saved, 0.0),
+                               messages=max(cost.messages - frac * (c - 1),
+                                            0.0))
 
 
 def optimal_c(algorithm: str, *, p: int, phi: float = 0.0) -> float:
@@ -113,14 +191,23 @@ def optimal_c(algorithm: str, *, p: int, phi: float = 0.0) -> float:
         return math.sqrt(2 * p)
     if algorithm == "d15_local_fusion":
         return math.sqrt(p / 2)
+    if algorithm == "s15_no_elision":
+        return math.sqrt(3 * p * phi)
     if algorithm == "s15_replication_reuse":
         return math.sqrt(6 * p * phi)
+    if algorithm == "s15_local_fusion":
+        return 2 * math.sqrt(p * phi)
     if algorithm == "d25_no_elision":
         return (p * (1 + 3 * phi) ** 2 / 4) ** (1 / 3)
     if algorithm == "d25_replication_reuse":
         return (p * (1 + 3 * phi) ** 2) ** (1 / 3)
+    if algorithm == "d25_local_fusion":
+        return (p * (1 + 4 * phi) ** 2 / 16) ** (1 / 3)
     if algorithm == "s25_no_elision":
-        return (p / (2 * phi / 3) ** 2) ** (1 / 3) if phi > 0 else float(p)
+        # argmin_c of 4/sqrt(pc) + 3*phi*c/p: c* = (4p/(9 phi^2))^(1/3)
+        return (p / (3 * phi / 2) ** 2) ** (1 / 3) if phi > 0 else float(p)
+    if algorithm == "s25_replication_reuse":
+        return (p / (2 * phi) ** 2) ** (1 / 3) if phi > 0 else float(p)
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 

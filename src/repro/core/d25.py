@@ -176,14 +176,14 @@ def replicated_spec(grid: Grid25) -> P:
 
 def resolve_elision(elision: str, transpose: bool) -> str:
     """Resolve the uniform ``"auto"`` default *for the pack in hand*:
-    reuse iff transpose-packed (FusedMMB), the plain Cannon FusedMMA
-    otherwise (no local fusion on the 2.5D grid — SDDMM values must
-    finish their full Cannon round before the SpMM can consume them).
-    The cross-orientation ranking lives in
-    ``repro.core.api.DistProblem.resolve_elision``."""
+    reuse iff transpose-packed (FusedMMB), the one-structure-pass
+    "fused" schedule otherwise — it beats the plain Cannon FusedMMA at
+    every (p, c, phi): same AG/RS, strictly fewer shift words
+    (Table III extension: 4*phi+1 vs 6*phi+2).  The cross-orientation
+    ranking lives in ``repro.core.api.DistProblem.resolve_elision``."""
     if elision != "auto":
         return elision
-    return "reuse" if transpose else "none"
+    return "reuse" if transpose else "fused"
 
 
 def _sq(args):
@@ -197,7 +197,10 @@ def _sddmm_round(grid, plan, T, s, B0, overlap=True):
     the roles of the dense args swap.  The coordinate and B shifts are
     issued double-buffered ahead of the kernel; the partial-dot buffer
     lags one kernel behind (it needs the dots before it can travel).
-    Returns (pack home w/ partial dots, B home).
+    Returns (pack home w/ partial dots, B home, structs, bchunks) where
+    ``structs``/``bchunks`` are the per-phase resident structure tuples
+    and B chunks — local references, free unless a caller consumes them
+    (the "fused" one-structure-pass schedule replays both in round 2).
     """
     G = grid.G
     tk = plan.tiling.kernel_kwargs()
@@ -205,12 +208,15 @@ def _sddmm_round(grid, plan, T, s, B0, overlap=True):
     partial = jnp.zeros_like(vl)
     ones = jnp.ones_like(vl)
     struct = (rl, cl, tb)
+    structs, bchunks = [], []
     B_cur = B0
     if overlap and G > 1:
         nxt = tuple(_shift_back(x, grid.col, G) for x in struct)
         B_nxt = _shift_back(B_cur, grid.row, G)
     for t in range(G):
         rl_c, cl_c, tb_c = struct
+        structs.append(struct)
+        bchunks.append(B_cur)
         coo = _coo(plan, rl_c, cl_c, ones, tb_c)
         if plan.transpose:
             dots = ops.sddmm(B_cur, T, coo, **tk).vals
@@ -226,7 +232,7 @@ def _sddmm_round(grid, plan, T, s, B0, overlap=True):
             struct = tuple(_shift_back(x, grid.col, G) for x in struct)
             B_cur = _shift_back(B_cur, grid.row, G)
     rl, cl, tb = struct
-    return (rl, cl, partial, tb), B_cur
+    return (rl, cl, partial, tb), B_cur, structs, bchunks
 
 
 @functools.partial(jax.jit, static_argnums=(0,),
@@ -239,8 +245,8 @@ def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, overlap: bool = True):
         s = _sq(s)
         B0 = B_loc[0, 0, 0]
         T = jax.lax.all_gather(A_loc, fib, tiled=True)
-        (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0,
-                                                overlap)
+        (rl, cl, partial, tb), _, _, _ = _sddmm_round(grid, plan, T, s, B0,
+                                                      overlap)
         return (s[2] * partial)[None, None, None]
 
     return _exec(grid, plan, body, A, B_sk, P(grid.row, grid.col, grid.fiber))
@@ -295,6 +301,17 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
     elision="reuse": FusedMMB — single AG(A), output travels home with the
                      propagated buffer (no reduce-scatter).  Requires a
                      transpose pack.  Returns (out stacked skewed, R_vals).
+    elision="fused": one-structure-pass FusedMMA — round 2 replays the
+                     per-phase structure AND B chunks cached locally
+                     during the SDDMM round (both schedules have period
+                     G), so only the final sample values travel: the
+                     shift term drops from 6*phi+2 to 4*phi+1 Table-III
+                     units.  True local-kernel fusion is impossible on
+                     this grid (per-phase dots cover only the resident
+                     r/G column slice — docs/algorithms.md), but the
+                     communication signature of local fusion is
+                     achieved.  Requires a normal pack; same returns and
+                     bitwise-identical outputs to "none".
 
     pre_gathered=True: A arrives already fiber-replicated (sharding
     ``replicated_spec(grid)``) and the all-gather is skipped — the
@@ -317,8 +334,8 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
             s = _sq(s)
             B0 = B_loc[0, 0, 0]
             T = gather(A_loc)
-            (rl, cl, partial, tb), B_home = _sddmm_round(grid, plan, T, s,
-                                                         B0, overlap)
+            (rl, cl, partial, tb), B_home, _, _ = _sddmm_round(
+                grid, plan, T, s, B0, overlap)
             r_vals = s[2] * partial
             T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
             cur = (rl, cl, r_vals, tb, B_home)
@@ -343,6 +360,42 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
                       P(grid.row, grid.col, grid.fiber)),
                      a_spec=a_spec)
 
+    if elision == "fused":
+        assert not plan.transpose
+
+        def body(s, A_loc, B_loc):
+            s = _sq(s)
+            B0 = B_loc[0, 0, 0]
+            T = gather(A_loc)
+            (rl, cl, partial, tb), _, structs, bchunks = _sddmm_round(
+                grid, plan, T, s, B0, overlap)
+            r_vals = s[2] * partial
+            # Round 2 replays the cached structure and B chunks; only the
+            # final values travel (same col-axis schedule as the pack
+            # advance in "none", so kernel operands are value-identical).
+            T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
+            vals_cur = r_vals
+            if overlap and G > 1:
+                vals_nxt = _shift_back(vals_cur, grid.col, G)
+            for t in range(G):
+                rl_c, cl_c, tb_c = structs[t]
+                T2 = T2 + ops.spmm(_coo(plan, rl_c, cl_c, vals_cur, tb_c),
+                                   bchunks[t], m=plan.meta.mS, **tk)
+                if overlap and G > 1:
+                    vals_cur = vals_nxt
+                    if t + 1 < G:
+                        vals_nxt = _shift_back(vals_nxt, grid.col, G)
+                else:
+                    vals_cur = _shift_back(vals_cur, grid.col, G)
+            out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
+                                       tiled=True)
+            return out, r_vals[None, None, None]
+
+        return _exec(grid, plan, body, A, B_sk,
+                     (P((grid.row, grid.fiber), grid.col),
+                      P(grid.row, grid.col, grid.fiber)),
+                     a_spec=a_spec)
+
     if elision == "reuse":
         assert plan.transpose
 
@@ -350,8 +403,8 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
             s = _sq(s)
             B0 = B_loc[0, 0, 0]
             T = gather(A_loc)                                # single AG
-            (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T, s, B0,
-                                                    overlap)
+            (rl, cl, partial, tb), _, _, _ = _sddmm_round(grid, plan, T, s,
+                                                          B0, overlap)
             r_vals = s[2] * partial
             out_cur = jnp.zeros((plan.meta.nS, plan.meta.rW), jnp.float32)
             # the output travels and accumulates, so its shift trails the

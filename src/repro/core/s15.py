@@ -142,10 +142,13 @@ def replicated_spec(grid: Grid15) -> P:
 def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
     """One propagation round accumulating partial sampled dots.
 
-    s = (rl, cl, vals, tb) local pack; returns pack home again with
-    partial dot products in the values slot (UNSCALED by original vals).
-    The coordinate shifts are double-buffered ahead of the kernel; the
-    partial buffer trails one kernel behind.
+    s = (rl, cl, vals, tb) local pack; returns the pack home again with
+    partial dot products in the values slot (UNSCALED by original vals),
+    plus the per-phase resident structures ``structs`` (local references,
+    no extra communication — dead code unless a caller consumes them, as
+    the "fused" one-structure-pass schedule does).  The coordinate shifts
+    are double-buffered ahead of the kernel; the partial buffer trails
+    one kernel behind.
     """
     u = jax.lax.axis_index(lay)
     tk = plan.tiling.kernel_kwargs()
@@ -154,6 +157,7 @@ def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
     ones = jnp.ones_like(partial)
 
     struct = (rl, cl, tb)
+    structs = []
     nxt = _shift_tuple(struct, lay, L) if L > 1 else None
     for t in range(L):
         blk = (u - t) % L                       # layer-row of resident block
@@ -161,6 +165,7 @@ def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
         a_slice = jax.lax.dynamic_slice(
             T_A, (off, 0), (plan.mS, plan.rc))
         rl_c, cl_c, tb_c = struct
+        structs.append(struct)
         dots = ops.sddmm(a_slice, T_B,
                          _coo(plan, rl_c, cl_c, ones, tb_c), **tk).vals
         partial = _shift(partial + dots, lay, L)
@@ -171,7 +176,7 @@ def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
         else:
             struct = _shift_tuple(struct, lay, L)
     rl, cl, tb = struct
-    return rl, cl, partial, tb
+    return (rl, cl, partial, tb), structs
 
 
 def _spmm_round(grid, plan, T_B, s, L, lay):
@@ -193,6 +198,33 @@ def _spmm_round(grid, plan, T_B, s, L, lay):
     return jnp.stack(slabs)  # (L, mS, rc) — slab t covers rows of block b_t
 
 
+def _spmm_round_cached(grid, plan, T_B, vals0, structs, L, lay):
+    """SpMM propagation round replaying locally cached structure.
+
+    The "fused" one-structure-pass elision: the SDDMM round already
+    marched every block's coordinates through this device (``structs``,
+    period-L schedule — round-2 phase t re-encounters round-1 phase t's
+    block), so only the final sample values travel: 1 word/nnz/phase
+    instead of the 3-word COO pack.  Kernel operands are value-identical
+    to :func:`_spmm_round`, hence bitwise-identical slabs.
+    """
+    tk = plan.tiling.kernel_kwargs()
+    vals_cur = vals0
+    vals_nxt = _shift(vals_cur, lay, L) if L > 1 else None
+    slabs = []
+    for t in range(L):
+        rl, cl, tb = structs[t]
+        slabs.append(ops.spmm(_coo(plan, rl, cl, vals_cur, tb), T_B,
+                              m=plan.mS, **tk))
+        if L > 1:
+            vals_cur = vals_nxt
+            if t + 1 < L:
+                vals_nxt = _shift(vals_nxt, lay, L)
+        else:
+            vals_cur = _shift(vals_cur, lay, L)
+    return jnp.stack(slabs)
+
+
 def _gather_cols(x, fib):
     """All-gather column slices along the fiber: (n, r/p) -> (n, rc/p)."""
     return jax.lax.all_gather(x, fib, axis=1, tiled=True)
@@ -207,7 +239,8 @@ def sddmm_s15(grid: Grid15, plan: PlanS15, A, B):
         s = tuple(x[0, 0] for x in s)
         T_A = _gather_cols(A_loc, fib)
         T_B = _gather_cols(B_loc, fib)
-        rl, cl, partial, tb = _sddmm_round(grid, plan, T_A, T_B, s, L, lay)
+        (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T_A, T_B, s,
+                                                L, lay)
         vals = s[2] * partial            # scale by original samples (home)
         return vals[None, None]
 
@@ -235,7 +268,17 @@ def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "auto",
                 pre_gathered: tuple = (False, False)):
     """FusedMMA = SpMMA(SDDMM(A,B,S), B) with sparse shifting.
 
-    elision="auto" : resolves to "reuse" (always cheapest here)
+    elision="auto" : resolves to "fused" (always cheapest here; see
+    docs/choosing.md)
+    elision="fused": one-structure-pass — the SpMM round replays the
+    per-phase coordinate structure cached locally during the SDDMM round
+    (the schedules coincide, period L), so only the final sample values
+    travel in round 2: the 6*phi/c shift term drops to 4*phi/c.  The
+    single fiber all-gather of "reuse" is retained.  True local-kernel
+    fusion is impossible here — each phase's gathered slices span only
+    r*c/p of the r columns, so per-phase dots are partial (docs/
+    algorithms.md) — but the *communication* signature of local fusion
+    (structure shipped once, not twice) is achieved.
     elision="reuse": the fiber all-gathers of the dense column slices are
     performed ONCE and serve both rounds (paper's replication reuse).
     elision="none": B is re-gathered between the rounds, emulating two
@@ -249,7 +292,7 @@ def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "auto",
     Returns (slabs (L,c,T,mS,rc/p), R_vals (L,c,nb,k)).
     """
     if elision == "auto":
-        elision = "reuse"
+        elision = "fused"
     lay, fib, L = grid.layer, grid.fiber, grid.L
     pre_a, pre_b = pre_gathered
 
@@ -257,8 +300,13 @@ def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "auto",
         s = tuple(x[0, 0] for x in s)
         T_A = A_loc if pre_a else _gather_cols(A_loc, fib)
         T_B = B_loc if pre_b else _gather_cols(B_loc, fib)
-        rl, cl, partial, tb = _sddmm_round(grid, plan, T_A, T_B, s, L, lay)
+        (rl, cl, partial, tb), structs = _sddmm_round(grid, plan, T_A, T_B,
+                                                      s, L, lay)
         r_vals = s[2] * partial
+        if elision == "fused":
+            slabs = _spmm_round_cached(grid, plan, T_B, r_vals, structs,
+                                       L, lay)
+            return slabs[None, None], r_vals[None, None]
         if elision == "none":
             # Unoptimized baseline: replicate B again for the SpMM, as two
             # independent kernel launches would.  NOTE: a naive duplicate

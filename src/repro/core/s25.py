@@ -18,9 +18,14 @@ layer-local accumulator; after the round the partials are summed across the
 fiber (reduce-scatter to the home value shards) and scaled by the original
 sample values.  SpMM: output chunks travel along the col axis (taking A's
 schedule) and accumulate R @ B contributions from every column block.
-FusedMM admits NO dense-replication elision here (nothing dense is
+FusedMM admits no dense-*replication* elision here (nothing dense is
 replicated) — the fiber traffic is values-only: AG + RS + AG, i.e. the
-paper's 3*phi*nr*(c-1)/p term.
+paper's 3*phi*nr*(c-1)/p term.  It does admit B-chunk *reuse*
+(elision="reuse"): the SpMM round replays the B r-chunks cached during
+the SDDMM round instead of shifting them a second time, cutting the
+dense-chunk trips from 4 to 3.  Local kernel fusion is structurally
+impossible (the cross-fiber partial-sum reduction separates the two
+halves); docs/algorithms.md carries the full argument.
 
 Comm/compute overlap (see DESIGN.md): the Cannon loops are Python-unrolled
 with double-buffered carries — the r-chunk shifts for the next phase are
@@ -184,6 +189,10 @@ def _sddmm_round(grid, plan, s, A0, B0):
 
     The A/B chunk shifts for phase t+1 are issued before the phase-t
     kernel; the partial accumulator stays local (fiber-reduced later).
+    Also returns ``bchunks``, the per-phase resident B chunks — local
+    references, free unless a caller consumes them (the "reuse"
+    B-chunk-replay schedule feeds them to the SpMM round, eliding B's
+    second trip around the grid).
     """
     G = grid.G
     tk = plan.tiling.kernel_kwargs()
@@ -191,10 +200,12 @@ def _sddmm_round(grid, plan, s, A0, B0):
     partial = jnp.zeros(rl.shape, jnp.float32)
     ones = jnp.ones(rl.shape, jnp.float32)
     A_cur, B_cur = A0, B0
+    bchunks = []
     if G > 1:
         A_nxt = _shift_back(A_cur, grid.col, G)
         B_nxt = _shift_back(B_cur, grid.row, G)
     for t in range(G):
+        bchunks.append(B_cur)
         dots = ops.sddmm(A_cur, B_cur, _coo(plan, rl, cl, ones, tb),
                          **tk).vals
         partial = partial + dots
@@ -206,7 +217,7 @@ def _sddmm_round(grid, plan, s, A0, B0):
         else:
             A_cur = _shift_back(A_cur, grid.col, G)
             B_cur = _shift_back(B_cur, grid.row, G)
-    return partial, A_cur, B_cur
+    return partial, A_cur, B_cur, bchunks
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -216,8 +227,8 @@ def sddmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
 
     def body(s, A_loc, B_loc):
         s = tuple(x[0, 0, 0] for x in s)
-        partial, _, _ = _sddmm_round(grid, plan, s,
-                                     A_loc[0, 0, 0], B_loc[0, 0, 0])
+        partial, _, _, _ = _sddmm_round(grid, plan, s,
+                                        A_loc[0, 0, 0], B_loc[0, 0, 0])
         # sum partials over the fiber, back to home value shards
         mine = jax.lax.psum_scatter(partial, fib, scatter_dimension=0,
                                     tiled=True)
@@ -247,6 +258,24 @@ def _spmm_round(grid, plan, s, B0):
     return out_cur
 
 
+def _spmm_round_cached(grid, plan, s, bchunks):
+    """SpMM round replaying the B r-chunks cached during the SDDMM round
+    (the "reuse" elision): B's second trip around the grid is elided and
+    only the traveling output shifts.  B's round-2 schedule coincides
+    with its round-1 schedule (period G), so the kernel operands are
+    value-identical to :func:`_spmm_round` — bitwise-identical output."""
+    G = grid.G
+    tk = plan.tiling.kernel_kwargs()
+    coo = _coo(plan, *s)
+    out_cur = jnp.zeros((plan.mS, plan.rc), jnp.float32)
+    contrib = ops.spmm(coo, bchunks[0], m=plan.mS, **tk)
+    for t in range(G):
+        out_cur = _shift_back(out_cur + contrib, grid.col, G)
+        if t + 1 < G:
+            contrib = ops.spmm(coo, bchunks[t + 1], m=plan.mS, **tk)
+    return out_cur
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def spmma_s25(grid: Grid25, plan: PlanS25, B_sk):
     """A = S @ B; output chunks end in skewed-home layout."""
@@ -263,36 +292,63 @@ def spmma_s25(grid: Grid25, plan: PlanS25, B_sk):
                  P(grid.row, grid.col, grid.fiber))
 
 
+def resolve_elision(elision: str) -> str:
+    """Resolve the uniform ``"auto"`` default: B-chunk "reuse" beats the
+    unoptimized round at every (p, c, phi) — same fiber value traffic,
+    one fewer dense-chunk trip (3 vs 4 Table-III units)."""
+    if elision != "auto":
+        return elision
+    return "reuse"
+
+
 @functools.partial(jax.jit, static_argnums=(0,),
                    static_argnames=("elision",))
 def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk,
                 elision: str = "auto"):
-    """FusedMMA, no dense-replication elision possible (paper §V-D).
+    """FusedMMA on the 2.5D sparse-replicating grid.
 
-    The ``elision`` argument exists for signature uniformity with the
-    other three families (repro.core.api registry); only "auto"/"none"
-    are accepted — nothing dense is replicated here, so there is nothing
-    to elide.  Fiber traffic is values-only: AG(vals) happens implicitly
-    by computing partials, RS reduces them home, AG re-broadcasts the
-    final values for the SpMM round — the 3*phi*nr*(c-1)/p term of
-    Table III.
+    elision="auto" : resolves to "reuse" (see resolve_elision)
+    elision="none" : A and B travel in the SDDMM round, out and B in the
+                     SpMM round — 4 dense-chunk trips.
+    elision="reuse": the SpMM round replays the B r-chunks cached
+                     locally during the SDDMM round (B's two schedules
+                     coincide, period G), eliding B's second trip: 3
+                     dense-chunk trips, bitwise-identical output.
+    elision="fused": structurally impossible — rejected.  Per-phase dots
+                     cover only the resident r/(Gc) chunk, and the
+                     partial sums must cross the fiber (RS + AG) before
+                     any SpMM can consume them; with S stationary there
+                     is no structure communication to elide either (the
+                     paper's "no elision possible", docs/algorithms.md).
+
+    Fiber traffic in every cell is values-only: AG(vals) happens
+    implicitly by computing partials, RS reduces them home, AG
+    re-broadcasts the final values for the SpMM round — the
+    3*phi*nr*(c-1)/p term of Table III.
     Returns (out chunks (G,G,c,mS,rc) skewed-home, R values fiber-sharded).
     """
-    if elision not in ("auto", "none"):
-        raise ValueError(f"s25 admits no elision, got {elision!r}")
+    elision = resolve_elision(elision)
+    if elision not in ("none", "reuse"):
+        raise ValueError(f"s25 supports ('none', 'reuse'), got "
+                         f"{elision!r} (local fusion is structurally "
+                         f"impossible here — see docs/algorithms.md)")
     G, fib = grid.G, grid.fiber
 
     def body(s, A_loc, B_loc):
         s = tuple(x[0, 0, 0] for x in s)
         rl, cl, vshard, tb = s
-        partial, A_home, B_home = _sddmm_round(grid, plan, s,
-                                               A_loc[0, 0, 0],
-                                               B_loc[0, 0, 0])
+        partial, A_home, B_home, bchunks = _sddmm_round(grid, plan, s,
+                                                        A_loc[0, 0, 0],
+                                                        B_loc[0, 0, 0])
         mine = jax.lax.psum_scatter(partial, fib, scatter_dimension=0,
                                     tiled=True)                  # RS
         r_mine = vshard * mine
         r_vals = jax.lax.all_gather(r_mine, fib, tiled=True)     # AG
-        out = _spmm_round(grid, plan, (rl, cl, r_vals, tb), B_home)
+        if elision == "reuse":
+            out = _spmm_round_cached(grid, plan, (rl, cl, r_vals, tb),
+                                     bchunks)
+        else:
+            out = _spmm_round(grid, plan, (rl, cl, r_vals, tb), B_home)
         return out[None, None, None], r_mine[None, None, None]
 
     return _exec(grid, plan, body, A_sk, B_sk,

@@ -63,13 +63,9 @@ def main(argv=None):
         return 0
     lowered = prob.lower_fusedmm(elision)
 
-    inv = {v: k for k, v in costmodel.FAMILY_ELISION.items()}
-    # s15's "none" baseline has no Table-III row of its own; price it by
-    # the family's closest formula (the measured-vs-paper band in
-    # check_comm_costs absorbs the difference)
-    cm_name = inv.get((prob.alg.name, elision)) or next(
-        name for name, (fam, _) in costmodel.FAMILY_ELISION.items()
-        if fam == prob.alg.name)
+    # the cost-model grid is full rank: every registry-declared
+    # (family, elision) cell has exactly one Table-III row
+    cm_name = costmodel.ELISION_COST_NAME[(prob.alg.name, elision)]
     paper_words = costmodel.words_fusedmm(cm_name, p=prob.p, c=prob.c,
                                           n=n, r=r, nnz=nnz).words
     meta = dict(arch=f"paper-fusedmm-{prob.alg.name}", shape=elision,

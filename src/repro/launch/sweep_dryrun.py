@@ -38,12 +38,46 @@ MICROBATCH = {
 }
 
 
+ELISIONS = ("none", "reuse", "fused")
+
+
 def fusedmm_cells():
-    """(algo, elision) cells from the unified registry — no per-family
-    branching; a new registered algorithm appears here automatically."""
+    """The FULL (algo, elision) grid with per-cell support status.
+
+    Sweeps every family x {none, reuse, fused} cell — not just the
+    registry-declared ones — so structurally impossible cells (s25
+    "fused") appear as explicit skip records in the summary instead of
+    being silently omitted; docs/algorithms.md's feasibility table is
+    regenerable from the sweep output.  No per-family branching: a new
+    registered algorithm appears here automatically.
+    """
     from repro.core import api
-    return [(name, el) for name in sorted(api.ALGORITHMS)
-            for el in api.ALGORITHMS[name].elisions]
+    return [(name, el, el in api.ALGORITHMS[name].elisions)
+            for name in sorted(api.ALGORITHMS) for el in ELISIONS]
+
+
+def _print_fusedmm_summary(summary_path):
+    """Render the sweep as an algo x elision status table (every cell
+    reported — ok / skipped / failed / unsupported, never omitted)."""
+    cells = {}
+    with open(summary_path) as f:
+        for line in f:
+            r = json.loads(line)
+            if "skipped" in r:
+                status = "skipped"
+            elif not r.get("ok"):
+                status = "FAILED"
+            else:
+                status = f"ok c={r.get('c')}"
+            cells[(r["algo"], r["elision"])] = status
+    algos = sorted({a for a, _ in cells})
+    width = max(12, *(len(v) + 2 for v in cells.values()))
+    print("\nFUSEDMM SWEEP SUMMARY (algo x elision)")
+    print(f"{'':6s}" + "".join(f"{el:>{width}s}" for el in ELISIONS))
+    for a in algos:
+        row = "".join(f"{cells.get((a, el), '-'):>{width}s}"
+                      for el in ELISIONS)
+        print(f"{a:6s}{row}")
 
 
 def run_fusedmm_sweep(args):
@@ -56,8 +90,22 @@ def run_fusedmm_sweep(args):
                 r = json.loads(line)
                 if r.get("ok"):     # failed/timed-out cells retry
                     done.add((r["algo"], r["elision"]))
-    for algo, elision in fusedmm_cells():
+
+    def emit(rec):
+        with open(summary_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        print(json.dumps(rec), flush=True)
+
+    for algo, elision, supported in fusedmm_cells():
         if (algo, elision) in done:
+            continue
+        if not supported:
+            # structurally impossible cell: an explicit skip record, no
+            # subprocess (there is no executor to lower)
+            emit(dict(algo=algo, elision=elision, ok=True, seconds=0.0,
+                      error="",
+                      skipped="unsupported elision (structurally "
+                              "impossible; see docs/algorithms.md)"))
             continue
         tag = f"fusedmm__{algo}__{elision}"
         out = os.path.join(args.outdir, tag + ".json")
@@ -88,9 +136,8 @@ def run_fusedmm_sweep(args):
                         r["collectives"]["total_wire_bytes"] / 1e9, 3)
             except Exception as e:     # pragma: no cover
                 rec["parse_error"] = str(e)
-        with open(summary_path, "a") as f:
-            f.write(json.dumps(rec) + "\n")
-        print(json.dumps(rec), flush=True)
+        emit(rec)
+    _print_fusedmm_summary(summary_path)
     print("FUSEDMM SWEEP COMPLETE")
     return 0
 

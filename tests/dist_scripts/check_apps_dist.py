@@ -42,8 +42,13 @@ np.testing.assert_array_equal(X_plain, X_sess)
 # with "reuse" the gathered operand is the stationary B: ONE cache entry
 # serves every CG matvec
 assert len(sess) == 1, len(sess)
-# session-aware auto resolution prefers the cacheable strategy
-assert dp.mask.resolve_elision("auto", sess) == "reuse"
+# session-aware auto resolution ranks by steady-state words: on this
+# grid (p=8, c=2) the fused cell's halved shift words (1/c) undercut
+# even the cache-elided reuse gather (2/c), so auto stays on "fused";
+# the flip to "reuse" happens at larger c — docs/choosing.md, asserted
+# at the cost-model level in tests/test_costmodel.py
+assert dp.mask.resolve_elision("auto", sess) == "fused"
+assert dp.mask.resolve_elision("auto") == "fused"
 print("als session bitwise ok (1 cached stationary operand, "
       "hit by every matvec)")
 

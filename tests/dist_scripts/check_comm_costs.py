@@ -68,15 +68,25 @@ for c in (2, 4):
     Bs = jax.device_put(jnp.asarray(B), g.sharding(None, ("layer", "fiber")))
     plans = s15.plan_s15(g, rows, cols, vals, m, n, r, row_tile=32, nz_block=32)
     nb, k = plans.rows_local.shape[-2:]
-    for el, n_ag in (("reuse", 2), ("none", 3)):
+    for el, n_ag in (("reuse", 2), ("none", 3), ("fused", 2)):
         low = s15.fusedmm_s15.lower(g, plans, As, Bs, elision=el)
-        # pack payload: SDDMM round L shifts (pack returns home, live),
-        # SpMM round L-1 (cycle-closing shift dead, DCE'd)
-        shift_words = (2 * L - 1) * (3 * nb * k + nb)
+        if el == "fused":
+            # one-structure-pass: round 1 ships the structure (L-1 live
+            # shifts — the cycle-closing home return is dead, round 2
+            # replays the local cache) and the traveling partials (L
+            # live); round 2 ships final values only, L-1 live shifts.
+            shift_words = (L - 1) * (2 * nb * k + nb) + L * nb * k \
+                + (L - 1) * nb * k
+        else:
+            # pack payload: SDDMM round L shifts (pack returns home,
+            # live), SpMM round L-1 (cycle-closing shift dead, DCE'd)
+            shift_words = (2 * L - 1) * (3 * nb * k + nb)
         impl = n_ag * (c - 1) * m * (r // p) + shift_words
-        paper = costmodel.words_fusedmm("s15_replication_reuse",
-                                        p=p, c=c, n=n, r=r, nnz=nnz).words
-        report(f"s15_{el} c={c}", wire_words(low), impl, paper)
+        alg = {"none": "s15_no_elision", "reuse": "s15_replication_reuse",
+               "fused": "s15_local_fusion"}[el]
+        paper = costmodel.words_fusedmm(alg, p=p, c=c, n=n, r=r,
+                                        nnz=nnz).words
+        report(f"{alg} c={c}", wire_words(low), impl, paper)
 
 # --- 2.5D on 2x2x2
 g25 = make_grid25(2)
@@ -87,7 +97,8 @@ pland = d25.plan_d25(g25, rows, cols, vals, m, n, r, row_tile=32, nz_block=32)
 plandt = d25.plan_d25(g25, rows, cols, vals, m, n, r, transpose=True, row_tile=32, nz_block=32)
 mA, rW, nS = m // (G * c), r // G, n // (G * c)
 for el, pl, alg, n_agrs in (("none", pland, "d25_no_elision", 2),
-                            ("reuse", plandt, "d25_replication_reuse", 1)):
+                            ("reuse", plandt, "d25_replication_reuse", 1),
+                            ("fused", pland, "d25_local_fusion", 2)):
     low = d25.fusedmm_d25.lower(g25, pl, Ash, B_sk, elision=el)
     nb, k = pl.rows_local.shape[-2:]
     pack_words = 3 * nb * k + nb
@@ -99,6 +110,12 @@ for el, pl, alg, n_agrs in (("none", pland, "d25_no_elision", 2),
         # feed round 2); round 2: value pack + B, G-1 live shifts.
         impl_shifts = G * (pack_words + nS * rW) \
             + (G - 1) * (pack_words + nS * rW)
+    elif el == "fused":
+        # one-structure-pass: round 1 coords G-1 live (home return dead,
+        # round 2 replays the cache), partials G, B chunks G-1 (home
+        # dead); round 2 final values only, G-1 live.
+        impl_shifts = (G - 1) * (2 * nb * k + nb) + G * nb * k \
+            + (G - 1) * nS * rW + (G - 1) * nb * k
     else:
         # round 1: pack G, B G-1 (B home unused); round 2: traveling
         # (nS, rW) output G, contrib structure G-1.
@@ -111,15 +128,22 @@ for el, pl, alg, n_agrs in (("none", pland, "d25_no_elision", 2),
 plans25 = s25.plan_s25(g25, rows, cols, vals, m, n, r, row_tile=32, nz_block=32)
 A_sk = s25.skew_dense(g25, A, along="row")
 B_sk2 = s25.skew_dense(g25, B, along="col")
-low = s25.fusedmm_s25.lower(g25, plans25, A_sk, B_sk2)
 nb, k = plans25.rows_local.shape[-2:]
 mS, nS2, rc = plans25.mS, plans25.nS, plans25.rc
-# dense r-chunk shifts: A G-1 (home copy dead), B G + G-1 across the two
-# rounds, traveling output G; values-only fiber traffic (RS + AG)
-impl = 2 * (c - 1) / c * nb * k \
-    + (2 * G - 1) * (mS * rc + nS2 * rc)
-paper = costmodel.words_fusedmm("s25_no_elision", p=p, c=c, n=n, r=r,
-                                nnz=nnz).words
-report("s25_no_elision", wire_words(low), impl, paper)
+for el, alg in (("none", "s25_no_elision"),
+                ("reuse", "s25_replication_reuse")):
+    low = s25.fusedmm_s25.lower(g25, plans25, A_sk, B_sk2, elision=el)
+    if el == "none":
+        # dense r-chunk shifts: A G-1 (home copy dead), B G + G-1 across
+        # the two rounds, traveling output G; values-only fiber traffic
+        # (RS + AG)
+        impl_shifts = (2 * G - 1) * (mS * rc + nS2 * rc)
+    else:
+        # B-chunk reuse: B travels only in round 1 (G-1 live, home copy
+        # dead — round 2 replays the cache); A G-1, output G.
+        impl_shifts = (2 * G - 1) * mS * rc + (G - 1) * nS2 * rc
+    impl = 2 * (c - 1) / c * nb * k + impl_shifts
+    paper = costmodel.words_fusedmm(alg, p=p, c=c, n=n, r=r, nnz=nnz).words
+    report(alg, wire_words(low), impl, paper)
 
 print("ALL COMM COSTS OK")

@@ -80,7 +80,7 @@ def run_d25(c, ndev, backend, m=256, n=256, r=64, nnz_row=5, seed=0):
     identical(d25.spmma_d25(grid, plan, B_sk, overlap=True),
               d25.spmma_d25(grid, plan, B_sk, overlap=False),
               f"d25 spmma G={grid.G},c={c} {backend}")
-    for elis, pl_ in (("none", plan), ("reuse", plant)):
+    for elis, pl_ in (("none", plan), ("reuse", plant), ("fused", plan)):
         identical(
             d25.fusedmm_d25(grid, pl_, Ash, B_sk, elision=elis,
                             overlap=True),

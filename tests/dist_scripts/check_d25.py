@@ -38,6 +38,12 @@ def run(c, ndev, m=256, n=256, r=64, nnz_row=5, seed=0):
     np.testing.assert_allclose(np.asarray(out), wantR @ B, rtol=2e-3, atol=2e-3)
     print(tag, "fusedmm none ok")
 
+    # one-structure-pass cell: bitwise-identical to the unfused sequence
+    outF, rvalsF = d25.fusedmm_d25(grid, plan, Ash, B_sk, elision="fused")
+    np.testing.assert_array_equal(np.asarray(outF), np.asarray(out))
+    np.testing.assert_array_equal(np.asarray(rvalsF), np.asarray(rvals))
+    print(tag, "fusedmm fused ok (bitwise == none)")
+
     outS, rvals = d25.fusedmm_d25(grid, plant, Ash, B_sk, elision="reuse")
     gotB = d25.unskew_out(grid, plant, outS)
     np.testing.assert_allclose(gotB, wantR.T @ A, rtol=2e-3, atol=2e-3)

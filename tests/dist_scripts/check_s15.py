@@ -34,12 +34,19 @@ def run(c, m=256, n=256, r=64, nnz_row=5, seed=0):
     np.testing.assert_allclose(gotA, Sd @ np.asarray(B), rtol=2e-4, atol=2e-4)
     print(f"c={c} spmma ok")
 
-    # FusedMM (reuse + none must agree with oracle)
-    for el in ("reuse", "none"):
+    # FusedMM (all three cells must agree with the oracle; the
+    # one-structure-pass "fused" cell is bitwise-identical to "reuse" —
+    # same kernel sequence, structure replayed instead of re-shifted)
+    got_by_el = {}
+    for el in ("reuse", "none", "fused"):
         slabs, rvals = s15.fusedmm_s15(grid, plan, Ash, Bsh, elision=el)
         gotF = s15.assemble_spmm_out(grid, plan, slabs)
         np.testing.assert_allclose(gotF, wantR @ np.asarray(B), rtol=2e-3, atol=2e-3)
+        got_by_el[el] = (np.asarray(slabs), np.asarray(rvals))
         print(f"c={c} fusedmm {el} ok")
+    np.testing.assert_array_equal(got_by_el["fused"][0], got_by_el["reuse"][0])
+    np.testing.assert_array_equal(got_by_el["fused"][1], got_by_el["reuse"][1])
+    print(f"c={c} fusedmm fused bitwise == reuse")
 
 for c in (1, 2, 4, 8):
     run(c)

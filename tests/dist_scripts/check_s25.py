@@ -40,11 +40,18 @@ def run(c, ndev, m=256, n=256, r=64, nnz_row=5, seed=0):
     np.testing.assert_allclose(gotA, Sd @ B, rtol=2e-4, atol=2e-4)
     print(tag, "spmma ok")
 
-    # FusedMM
+    # FusedMM ("auto" resolves to the B-chunk-reuse cell)
     outS, rmine = s25.fusedmm_s25(grid, plan, A_sk, B_sk)
     gotF = s25.unskew_out(grid, plan, outS)
     np.testing.assert_allclose(gotF, wantR @ B, rtol=2e-3, atol=2e-3)
     print(tag, "fusedmm ok")
+
+    # B-chunk reuse is bitwise-identical to the unfused "none" sequence
+    outN, rmineN = s25.fusedmm_s25(grid, plan, A_sk, B_sk, elision="none")
+    outR, rmineR = s25.fusedmm_s25(grid, plan, A_sk, B_sk, elision="reuse")
+    np.testing.assert_array_equal(np.asarray(outR), np.asarray(outN))
+    np.testing.assert_array_equal(np.asarray(rmineR), np.asarray(rmineN))
+    print(tag, "fusedmm reuse ok (bitwise == none)")
 
 run(c=2, ndev=8)   # 2x2x2
 run(c=1, ndev=4)   # 2x2x1

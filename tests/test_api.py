@@ -38,11 +38,32 @@ def _make(rows, cols, vals, shape, r, **kw):
                             **kw)
 
 
+# the full registry-declared (family, elision) grid: parametrizing the
+# parity tests over it makes a registry entry that claims an elision it
+# cannot execute fail fast, cell by cell
+ELISION_CELLS = sorted((name, el) for name in costmodel.FAMILIES
+                       for el in api.ALGORITHMS[name].elisions)
+
+
 def test_registry_has_all_four_families():
     assert set(api.ALGORITHMS) == set(costmodel.FAMILIES)
     for name, alg in api.ALGORITHMS.items():
         assert alg.name == name
         assert alg.elisions, name
+
+
+def test_registry_matrix_full_rank():
+    """Every family exposes reuse; every family but s25 exposes fused
+    (s25's fused cell is structurally impossible — docs/algorithms.md);
+    every declared cell has a Table-III cost row and auto candidates are
+    declared cells."""
+    cells = set(costmodel.FAMILY_ELISION.values())
+    for name, alg in api.ALGORITHMS.items():
+        assert "none" in alg.elisions and "reuse" in alg.elisions, name
+        assert ("fused" in alg.elisions) == (name != "s25"), name
+        for el in alg.elisions:
+            assert (name, el) in cells, (name, el)
+        assert set(alg.auto_elisions) <= set(alg.elisions), name
 
 
 def test_uniform_auto_elision_default():
@@ -93,26 +114,41 @@ def test_api_parity_vs_ref(name):
     np.testing.assert_allclose(prob.spmm(Y),
                                np.asarray(ref.spmm_dense(Sd, Y)),
                                rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name,el", ELISION_CELLS)
+def test_fusedmm_parity_per_cell(name, el):
+    """Every registry-declared (family, elision) cell executes and
+    matches the dense oracle — a declared-but-unimplemented cell fails
+    exactly here."""
+    rows, cols, vals, X, Y, Sd = _problem_data()
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm=name)
+    wantR = np.asarray(ref.sddmm_dense(jnp.asarray(X), jnp.asarray(Y),
+                                       jnp.asarray(Sd)))
     want_out, _ = ref.fusedmm_dense(X, Y, Sd)
-    for el in prob.alg.elisions:
-        out, R = prob.fusedmm(X, Y, elision=el)
-        np.testing.assert_allclose(out, want_out, rtol=2e-3, atol=2e-3)
-        np.testing.assert_allclose(R.to_dense(), wantR, rtol=2e-3,
-                                   atol=2e-3)
+    out, R = prob.fusedmm(X, Y, elision=el)
+    np.testing.assert_allclose(out, want_out, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(R.to_dense(), wantR, rtol=2e-3, atol=2e-3)
 
 
-@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
-def test_session_caching_bitwise(name):
-    """Cached replication == uncached, bit for bit, at every elision."""
+def test_undeclared_elision_rejected():
+    rows, cols, vals, X, Y, _ = _problem_data()
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="s25")
+    with pytest.raises(ValueError, match="supports"):
+        prob.fusedmm(X, Y, elision="fused")
+
+
+@pytest.mark.parametrize("name,el", ELISION_CELLS)
+def test_session_caching_bitwise(name, el):
+    """Cached replication == uncached, bit for bit, at every cell."""
     rows, cols, vals, X, Y, _ = _problem_data(seed=2)
     prob = _make(rows, cols, vals, (64, 64), 8, algorithm=name)
-    for el in prob.alg.elisions:
-        sess = api.Session()
-        base, _ = prob.fusedmm(X, Y, elision=el)
-        one, _ = prob.fusedmm(X, Y, elision=el, session=sess)
-        two, _ = prob.fusedmm(X, Y, elision=el, session=sess)
-        np.testing.assert_array_equal(base, one)
-        np.testing.assert_array_equal(base, two)
+    sess = api.Session()
+    base, _ = prob.fusedmm(X, Y, elision=el)
+    one, _ = prob.fusedmm(X, Y, elision=el, session=sess)
+    two, _ = prob.fusedmm(X, Y, elision=el, session=sess)
+    np.testing.assert_array_equal(base, one)
+    np.testing.assert_array_equal(base, two)
 
 
 def test_sparse_result_values_without_dense():
@@ -146,12 +182,18 @@ def test_session_lru_bound():
     np.testing.assert_array_equal(base, out)
 
 
-def test_session_prefers_cacheable_elision():
+def test_session_aware_elision_ranking():
+    """With a Session the steady-state (cached) word counts rank the
+    cells; on the degenerate single-device grid (c=1, no replication to
+    cache) "fused" wins everywhere it exists — fewest shift words."""
     rows, cols, vals, _, _, _ = _problem_data()
-    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="d15")
-    assert prob.resolve_elision("auto", api.Session()) == "reuse"
+    for name in ("d15", "s15", "d25"):
+        prob = _make(rows, cols, vals, (64, 64), 8, algorithm=name)
+        assert prob.resolve_elision("auto") == "fused", name
+        assert prob.resolve_elision("auto", api.Session()) == "fused", name
     s25p = _make(rows, cols, vals, (64, 64), 8, algorithm="s25")
-    assert s25p.resolve_elision("auto", api.Session()) == "none"
+    assert s25p.resolve_elision("auto") == "reuse"
+    assert s25p.resolve_elision("auto", api.Session()) == "reuse"
 
 
 def test_with_values_and_transposed():

@@ -94,6 +94,97 @@ def test_weak_scaling_setup1_projection():
     assert g2 == pytest.approx(2.0, rel=0.35)
 
 
+def test_full_elision_grid_has_cost_rows():
+    """Every Table-III row evaluates at a legal (p, c) and the grid
+    covers every (family, elision) pair the executors implement."""
+    for alg in cm.ALGORITHMS:
+        cost = cm.words_fusedmm(alg, p=16, c=4, n=1 << 12, r=64,
+                                nnz=1 << 14)
+        assert cost.words > 0 and cost.messages > 0, alg
+        assert cm.optimal_c(alg, p=256, phi=0.25) > 0, alg
+    fams = {fam for fam, _ in cm.FAMILY_ELISION.values()}
+    assert fams == set(cm.FAMILIES)
+    for fam in cm.FAMILIES:
+        els = {el for f, el in cm.FAMILY_ELISION.values() if f == fam}
+        assert "none" in els and "reuse" in els, fam
+        # s25 local fusion is structurally impossible (docs/algorithms.md)
+        assert ("fused" in els) == (fam != "s25"), fam
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.sampled_from([16, 64, 256]), phi=st.floats(0.005, 4.0))
+def test_property_new_cells_elide_communication(p, phi):
+    """The one-structure-pass / B-chunk-reuse cells beat their family's
+    unoptimized sequence at every common feasible c."""
+    n, r = 1 << 20, 128
+    nnz = int(phi * n * r)
+    for base_alg, better in (("s15_no_elision", "s15_replication_reuse"),
+                             ("s15_no_elision", "s15_local_fusion"),
+                             ("s15_replication_reuse", "s15_local_fusion"),
+                             ("d25_no_elision", "d25_local_fusion"),
+                             ("s25_no_elision", "s25_replication_reuse")):
+        for c in cm.feasible_cs(base_alg, p):
+            w0 = cm.words_fusedmm(base_alg, p=p, c=c, n=n, r=r, nnz=nnz)
+            w1 = cm.words_fusedmm(better, p=p, c=c, n=n, r=r, nnz=nnz)
+            assert w1.words <= w0.words + 1e-6, (base_alg, better, c)
+
+
+def test_optimal_c_2_5d_closed_forms_minimize_words():
+    """The 2.5D closed forms must equal the analytic argmin of their own
+    words row (regression: s25_no_elision once inverted the fraction)."""
+    p, phi = 256, 0.25
+    assert cm.optimal_c("s25_no_elision", p=p, phi=phi) == pytest.approx(
+        (4 * p / (9 * phi ** 2)) ** (1 / 3))
+    assert cm.optimal_c("s25_replication_reuse", p=p, phi=phi) == \
+        pytest.approx((p / (4 * phi ** 2)) ** (1 / 3))
+    assert cm.optimal_c("d25_local_fusion", p=p, phi=phi) == pytest.approx(
+        (p * (1 + 4 * phi) ** 2 / 16) ** (1 / 3))
+    # numeric sanity: on a dense feasible grid the words at the nearest
+    # feasible c to c* are no worse than at the farthest
+    n, r = 1 << 16, 128
+    nnz = int(phi * n * r)
+    for alg in ("s25_no_elision", "s25_replication_reuse",
+                "d25_local_fusion"):
+        cstar = cm.optimal_c(alg, p=p, phi=phi)
+        cs = cm.feasible_cs(alg, p)
+        near = min(cs, key=lambda c: abs(c - cstar))
+        far = max(cs, key=lambda c: abs(c - cstar))
+        w = {c: cm.words_fusedmm(alg, p=p, c=c, n=n, r=r, nnz=nnz).words
+             for c in (near, far)}
+        assert w[near] <= w[far], (alg, cstar, w)
+
+
+def test_choose_algorithm_prefers_fused_at_low_phi():
+    """Satellite: the completed grid lets algorithm="auto" land on a
+    fused cell in the sparse regime (s15 one-structure-pass) instead of
+    degenerating to the paper's reuse-only s15 row."""
+    kw = dict(m=1 << 16, n=1 << 16, r=128, p=64)
+    ch = cm.choose_algorithm(nnz=int(0.02 * kw["n"] * kw["r"]), **kw)
+    assert (ch.family, ch.elision) == ("s15", "fused"), ch
+    # and in the dense regime the d15 fused cell keeps its Table-III win
+    hi = cm.choose_algorithm(nnz=int(4.0 * kw["n"] * kw["r"]), **kw)
+    assert hi.family == "d15", hi
+
+
+def test_session_cached_words_flip_to_reuse():
+    """Inside a cached loop (api.Session steady state) d15 "reuse" drops
+    to its shift words alone and overtakes "fused" at large c, flipping
+    the auto choice — the documented rule of docs/choosing.md."""
+    kw = dict(p=16, c=4, n=1 << 16, r=128, nnz=1 << 20)
+    fused_u = cm.words_fusedmm("d15_local_fusion", **kw).words
+    reuse_u = cm.words_fusedmm("d15_replication_reuse", **kw).words
+    assert fused_u < reuse_u          # uncached: fused wins
+    fused_c = cm.words_fusedmm_cached("d15_local_fusion", **kw).words
+    reuse_c = cm.words_fusedmm_cached("d15_replication_reuse", **kw).words
+    assert reuse_c < fused_c          # Session steady state: reuse wins
+    assert fused_c == fused_u         # fused gathers the changing operand
+    # on s15 both operands replicate through the Session and "fused"
+    # keeps its 4phi-vs-6phi shift advantage: no flip
+    sf = cm.words_fusedmm_cached("s15_local_fusion", **kw).words
+    sr = cm.words_fusedmm_cached("s15_replication_reuse", **kw).words
+    assert sf < sr
+
+
 def test_message_counts():
     c1 = cm.words_fusedmm("d15_no_elision", p=64, c=4, n=1 << 16, r=64,
                           nnz=1 << 18)

@@ -72,6 +72,15 @@ def test_elastic_remesh_8_to_4():
 
 
 @pytest.mark.slow
+def test_elision_cells_match_unfused_sequence():
+    """Every registry elision cell vs the unfused sddmm;spmm sequence —
+    bitwise for the communication-replaying cells (s15/d25 "fused",
+    s25 "reuse", and every "none"), allclose for reassociating ones."""
+    out = run_script("check_elision_parity.py")
+    assert "ALL ELISION PARITY OK" in out
+
+
+@pytest.mark.slow
 def test_unified_api_cross_algorithm_parity():
     """Every registered algorithm through repro.core.api == kernels/ref,
     plus bitwise-identical Session replication caching."""

@@ -1,0 +1,70 @@
+"""Docs integrity: link checker is sound and the repo's docs are clean.
+
+The CI docs job runs scripts/check_docs.py standalone; these tests keep
+the same guarantees in the fast tier so a dead link fails locally too.
+"""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "scripts"))
+
+import check_docs  # noqa: E402
+
+
+def test_repo_docs_have_no_dead_links():
+    errors, checked, nfiles = check_docs.check(ROOT)
+    assert not errors, errors
+    assert nfiles >= 5          # 3 guides + README + DESIGN
+    assert checked > 10
+
+
+def test_checker_flags_dead_file_and_anchor(tmp_path):
+    d = tmp_path / "docs"
+    d.mkdir()
+    (d / "algorithms.md").write_text("# Real heading\n")
+    (d / "choosing.md").write_text(
+        "[a](missing.md)\n[b](algorithms.md#nope)\n"
+        "[ok](algorithms.md#real-heading)\n")
+    errors, checked, _ = check_docs.check(tmp_path)
+    assert checked == 3
+    assert len(errors) == 2
+    assert any("missing.md" in e for e in errors)
+    assert any("#nope" in e for e in errors)
+
+
+def test_checker_ignores_code_fences_and_http(tmp_path):
+    d = tmp_path / "docs"
+    d.mkdir()
+    (d / "g.md").write_text(
+        "[web](https://example.com)\n```python\n# [x](dead.md)\n```\n")
+    errors, checked, _ = check_docs.check(tmp_path)
+    assert not errors
+    assert checked == 1         # the fenced link is not a link
+
+
+def test_readme_quickstart_blocks_are_selfcontained():
+    """Every ```python block in README must exec in one shared namespace
+    (the CI docs job runs them; this asserts they at least compile and
+    reference only names defined by earlier blocks or imports)."""
+    import re
+    text = (ROOT / "README.md").read_text()
+    blocks = re.findall(r"```python\n(.*?)```", text, re.S)
+    assert len(blocks) >= 3
+    for b in blocks:
+        compile(b, "README.md", "exec")   # syntax-valid
+
+
+def test_docs_ci_job_exists():
+    ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
+    assert "check_docs.py" in ci
+    assert "README quickstart" in ci
+
+
+def test_check_docs_cli():
+    proc = subprocess.run([sys.executable,
+                           str(ROOT / "scripts" / "check_docs.py"),
+                           str(ROOT)], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 dead" in proc.stdout

@@ -71,3 +71,34 @@ def test_shapes_table_matches_assignment():
                                            batch=128)
     assert dr.SHAPES["long_500k"] == dict(kind="decode", seq=524288,
                                           batch=1)
+
+
+def test_fusedmm_sweep_grid_reports_every_cell(tmp_path, capsys):
+    """Satellite: the --fusedmm sweep covers the FULL algo x elision grid
+    and renders unsupported/skipped cells in its summary table instead of
+    omitting them — docs/algorithms.md's feasibility table regenerates
+    from this output."""
+    import json
+    from repro.core import api
+    from repro.launch import sweep_dryrun as sw
+
+    cells = sw.fusedmm_cells()
+    assert len(cells) == len(api.ALGORITHMS) * len(sw.ELISIONS)
+    by_cell = {(a, el): sup for a, el, sup in cells}
+    assert by_cell[("s25", "fused")] is False        # structurally impossible
+    assert by_cell[("s15", "fused")] is True
+    assert by_cell[("d25", "fused")] is True
+    assert by_cell[("s25", "reuse")] is True
+
+    summary = tmp_path / "summary_fusedmm.jsonl"
+    with open(summary, "w") as f:
+        for algo, el, sup in cells:
+            rec = dict(algo=algo, elision=el, ok=True, c=2)
+            if not sup:
+                rec["skipped"] = "unsupported elision"
+            f.write(json.dumps(rec) + "\n")
+    sw._print_fusedmm_summary(summary)
+    out = capsys.readouterr().out
+    assert "skipped" in out
+    for algo in api.ALGORITHMS:
+        assert algo in out
