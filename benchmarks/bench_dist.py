@@ -23,10 +23,8 @@ NNZ_ROW = 8
 
 
 def run(out, json_path=JSON_PATH):
-    rows, cols, vals = sparse.erdos_renyi(M, N, NNZ_ROW, seed=0)
-    rng = np.random.default_rng(1)
-    X = rng.standard_normal((M, R)).astype(np.float32)
-    Y = rng.standard_normal((N, R)).astype(np.float32)
+    rows, cols, vals, X, Y = sparse.random_problem(M, N, R, NNZ_ROW,
+                                                   seed=0)
     records = []
 
     for name in sorted(api.ALGORITHMS):
@@ -75,6 +73,52 @@ def run(out, json_path=JSON_PATH):
                             session_cached=False, c=prob.c, m=M, n=N,
                             r=R, nnz=prob.nnz, phi=prob.phi,
                             seconds=t_spmm))
+
+    # --- training-step rows: fwd-only vs fwd+bwd vs session-reused ---
+    # Per registry cell, the extended cost model's per-step words
+    # (words_fusedmm / words_trainstep) — the backward is the dual
+    # primitive on the same cell, so these are exact model sums, checked
+    # against measured HLO wire words by dist_scripts/check_grad_costs.
+    # One wall-timed jax.grad step per family (the auto-resolved cell)
+    # keeps the compile cost bounded.
+    import jax
+    import jax.numpy as jnp
+    from repro.core import grads
+
+    for name in sorted(api.ALGORITHMS):
+        prob = api.make_problem(rows, cols, vals, (M, N), R,
+                                algorithm=name)
+        cm_kw = dict(p=prob.p, c=prob.c, n=N, r=R, nnz=prob.nnz)
+        timed_el = prob.resolve_elision("auto")
+        for elision in prob.alg.elisions:
+            cm_name = costmodel.ELISION_COST_NAME[(name, elision)]
+            words_fwd = costmodel.words_fusedmm(cm_name, **cm_kw).words
+            words_step = costmodel.words_trainstep(cm_name, **cm_kw).words
+            words_step_sess = costmodel.words_trainstep(
+                cm_name, session=True, **cm_kw).words
+            rec = dict(name=name, elision=elision, kind="trainstep",
+                       c=prob.c, m=M, n=N, r=R, nnz=prob.nnz,
+                       phi=prob.phi, model_words_fwd=words_fwd,
+                       model_words_fwdbwd=words_step,
+                       model_words_fwdbwd_session=words_step_sess)
+            if elision == timed_el:
+                sess = api.Session()
+
+                def step(X, Y):
+                    g = jax.grad(lambda X, Y: jnp.sum(
+                        grads.fusedmm(prob, X, Y, elision=elision,
+                                      session=sess)))(X, Y)
+                    return g
+
+                Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+                step(Xj, Yj)                      # fill session + compile
+                rec["seconds"] = common.timeit(lambda: step(Xj, Yj),
+                                               iters=2)
+                out(common.csv_line(
+                    f"dist.{name}.{elision}.trainstep", rec["seconds"],
+                    f"c={prob.c};words_fwdbwd={words_step:.0f};"
+                    f"session={words_step_sess:.0f}"))
+            records.append(rec)
 
     path = common.emit_json(json_path, records,
                             meta=dict(bench="dist", m=M, n=N, r=R,

@@ -78,9 +78,8 @@ def build_s15(c, rows, cols, vals, m, n, r, A, B, row_tile=64,
 
 
 def er_problem(m, n, r, nnz_per_row, seed=0):
+    """Seeded (rows, cols, vals, A, B) bundle — one shared generator
+    (repro.core.sparse.random_problem) serves benchmarks, tests and
+    dist_scripts; identical streams to the historical local copy."""
     from repro.core import sparse
-    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_per_row, seed=seed)
-    rng = np.random.default_rng(seed + 1)
-    A = rng.standard_normal((m, r)).astype(np.float32)
-    B = rng.standard_normal((n, r)).astype(np.float32)
-    return rows, cols, vals, A, B
+    return sparse.random_problem(m, n, r, nnz_per_row, seed=seed)

@@ -18,6 +18,11 @@ Two paths share the math:
   fiber replication of the *stationary* factor matrix is paid once per
   solve instead of once per iteration (the paper's replication-reuse
   elision extended across iterations).
+
+`train_embedding_distributed` is the gradient-based sibling: SGD on the
+sampled loss through the differentiable `repro.core.grads` entrypoints,
+where each step's backward is the dual SpMM/SpMM-transpose pair on the
+same grid and the Session replays the forward's replication.
 """
 from __future__ import annotations
 
@@ -27,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, sparse
+from repro.core import api, grads, sparse
 from repro.kernels import ops
 
 
@@ -214,6 +219,79 @@ def run_als_distributed(m=1024, n=1024, nnz_per_row=8, r=32, rounds=3,
             print(f"ALS[{dp.mask.alg.name}] round {it}: "
                   f"loss {hist[-2]:.1f} -> {hist[-1]:.1f}")
     return A, B, hist
+
+
+# ---------------------------------------------------------------------------
+# Sampled-loss embedding training: SGD through the differentiable
+# distributed kernels (repro.core.grads) — the gradient-based sibling of
+# the ALS solver above, FusedMM forward AND backward every step
+# ---------------------------------------------------------------------------
+
+def sampled_loss(maskP: api.DistProblem, X, Y, targets, reg=0.0,
+                 session: api.Session | None = None):
+    """0.5 ||SDDMM(mask, X, Y) - targets||^2 on the observed entries.
+
+    The graph-embedding / matrix-completion objective: only the sampled
+    predictions ``<x_i, y_j>`` at nnz(mask) enter the loss, so both the
+    forward and (via the dual primitives) the backward communicate like
+    one SDDMM/SpMM pair — never a dense m x n matrix.
+    """
+    pred = grads.sddmm(maskP, X, Y, session=session)
+    out = 0.5 * jnp.sum((pred - jnp.asarray(targets)) ** 2)
+    if reg:
+        out = out + 0.5 * reg * (jnp.sum(X * X) + jnp.sum(Y * Y))
+    return out
+
+
+def train_embedding_distributed(m=256, n=256, nnz_per_row=6, r=16,
+                                steps=20, lr=0.05, seed=0,
+                                algorithm="auto", c=None, devices=None,
+                                reg=1e-4, rows=None, cols=None, vals=None,
+                                verbose=True):
+    """End-to-end distributed embedding training by SGD on the sampled
+    loss — every step one distributed SDDMM forward plus its dual
+    SpMM/SpMM-transpose backward on the same grid, with an
+    ``api.Session`` replaying the forward's replication in the backward.
+
+    Pass explicit ``(rows, cols, vals)`` — all three, plus the matching
+    ``m``/``n`` — to train on a real matrix (e.g. loaded via
+    :func:`repro.core.mtx.load_mtx`); by default a seeded Erdos-Renyi
+    ratings matrix is generated.  Returns ``(X, Y, hist)`` with a
+    decreasing loss history.
+    """
+    if rows is None:
+        if cols is not None or vals is not None:
+            raise ValueError("pass rows, cols and vals together")
+        rows, cols, vals = sparse.erdos_renyi(m, n, nnz_per_row, seed=seed)
+        vals = np.abs(vals) + 0.5
+    else:
+        if cols is None or vals is None:
+            raise ValueError("pass rows, cols and vals together")
+        if int(np.max(rows, initial=0)) >= m \
+                or int(np.max(cols, initial=0)) >= n:
+            raise ValueError(
+                f"coordinates exceed shape ({m}, {n}) — pass the "
+                "matrix's m/n alongside rows/cols/vals")
+    maskP = api.make_problem(rows, cols, np.ones_like(vals, np.float32),
+                             (m, n), r, algorithm=algorithm, c=c,
+                             devices=devices)
+    rng = np.random.default_rng(seed + 1)
+    X = jnp.asarray(rng.standard_normal((m, r)) * 0.1, jnp.float32)
+    Y = jnp.asarray(rng.standard_normal((n, r)) * 0.1, jnp.float32)
+    targets = jnp.asarray(vals, jnp.float32)
+    session = api.Session()
+    grad_fn = jax.value_and_grad(
+        lambda X, Y: sampled_loss(maskP, X, Y, targets, reg, session),
+        argnums=(0, 1))
+    hist = []
+    for it in range(steps):
+        val, (gx, gy) = grad_fn(X, Y)
+        X = X - lr * gx
+        Y = Y - lr * gy
+        hist.append(float(val))
+        if verbose:
+            print(f"embed[{maskP.alg.name}] step {it}: loss {val:.3f}")
+    return X, Y, hist
 
 
 def run_als(m=1024, n=1024, nnz_per_row=8, r=32, rounds=3, cg_iters=10,

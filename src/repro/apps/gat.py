@@ -26,6 +26,13 @@ complete — in the 1.5D sparse-shifting layout each processor's home
 block already holds full rows; host assembly generalizes this to all
 four families), softmaxed per row, and re-injected as the SpMM's sample
 values.
+
+The trainable path (`gat_layer_trainable` / `train_gat_distributed`)
+is the same pipeline through the differentiable `repro.core.grads`
+entrypoints: the score SDDMM's backward is the dual SpMM pair, the
+aggregation SpMM takes the softmaxed attention as a differentiable
+*values* input (its backward is the dual SDDMM on the adjacency
+pattern), and `jax.grad` flows end-to-end to the layer parameters.
 """
 from __future__ import annotations
 
@@ -35,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, sparse
+from repro.core import api, grads, sparse
 from repro.kernels import ops
 
 
@@ -180,7 +187,7 @@ def gat_layer_distributed(graphP: api.DistProblem, H, p: GATParams,
         A_star[:, 0], A_star[:, 1] = u, 1.0
         B_star[:, 0], B_star[:, 1] = 1.0, v
         e = scoreP.sddmm(A_star, B_star).values()      # completed rows
-        e = np.where(e >= 0, e, 0.2 * e)               # LeakyReLU
+        e = np.asarray(leaky_relu(e))
         attn = row_softmax_coo(graphP.rows, e, n)
         outs.append(aggP.with_values(attn).spmm(Wh))
     return activation(jnp.concatenate([jnp.asarray(o) for o in outs],
@@ -193,3 +200,91 @@ def gat_forward_distributed(graphP: api.DistProblem, H0, layers,
     for p in layers:
         H = gat_layer_distributed(graphP, H, p, n_heads=n_heads)
     return H
+
+
+# ---------------------------------------------------------------------------
+# Trainable path: the same pipeline through the differentiable
+# repro.core.grads entrypoints, so jax.grad flows end-to-end
+# ---------------------------------------------------------------------------
+
+def segment_softmax(rows, vals, n_rows):
+    """Differentiable row softmax over COO values (completed rows)."""
+    rows = jnp.asarray(rows)
+    rmax = jax.ops.segment_max(vals, rows, num_segments=n_rows)
+    rmax = jnp.where(jnp.isfinite(rmax), rmax, 0.0)
+    ex = jnp.exp(vals - rmax[rows])
+    rsum = jax.ops.segment_sum(ex, rows, num_segments=n_rows)
+    return ex / jnp.maximum(rsum[rows], 1e-30)
+
+
+def gat_layer_trainable(graphP: api.DistProblem, H, W, a1, a2,
+                        n_heads: int = 1, activation=jax.nn.elu,
+                        session: api.Session | None = None):
+    """Differentiable distributed GAT layer (jax.grad-able in W/a1/a2/H).
+
+    Mirrors :func:`gat_layer_distributed` kernel for kernel, but every
+    distributed call goes through :mod:`repro.core.grads`: the score
+    SDDMM's backward is the dual SpMM pair, and the aggregation SpMM
+    takes the softmaxed attention as a *differentiable values* input —
+    its backward is the dual SDDMM on the adjacency pattern (this is
+    where the gradient w.r.t. the attention scores flows).  The row
+    softmax between the kernels runs on completed rows in the home COO
+    order, exactly as the forward-only path does (paper Fig. 9: no
+    local fusion across the softmax barrier, in either pass).
+    """
+    H = jnp.asarray(H, jnp.float32)
+    n = graphP.m
+    d_out = W.shape[1] // n_heads
+    mult = graphP.alg.min_r_multiple(graphP.grid)
+    r_score = max(2, ((2 + mult - 1) // mult) * mult)
+    scoreP = graphP.with_r(r_score)
+    aggP = graphP if graphP.r == d_out else graphP.with_r(d_out)
+    outs = []
+    for h in range(n_heads):
+        Wh = H @ W[:, h * d_out:(h + 1) * d_out]
+        u = Wh @ a1[h * d_out:(h + 1) * d_out]
+        v = Wh @ a2[h * d_out:(h + 1) * d_out]
+        A_star = jnp.zeros((n, r_score)).at[:, 0].set(u).at[:, 1].set(1.0)
+        B_star = jnp.zeros((n, r_score)).at[:, 0].set(1.0).at[:, 1].set(v)
+        e = grads.sddmm(scoreP, A_star, B_star, session=session)
+        e = leaky_relu(e)
+        attn = segment_softmax(graphP.rows, e, n)
+        outs.append(grads.spmm(aggP, attn, Wh, session=session))
+    return activation(jnp.concatenate(outs, axis=1))
+
+
+def train_gat_distributed(graphP: api.DistProblem, H, target, *,
+                          d_out: int | None = None, steps: int = 20,
+                          lr: float = 0.05, n_heads: int = 1, seed: int = 0,
+                          session: api.Session | None = None,
+                          verbose: bool = True):
+    """Gradient-based training of one distributed GAT layer.
+
+    Minimizes the MSE between the layer output and ``target`` by SGD on
+    (W, a1, a2), every kernel of every step a distributed primitive on
+    ``graphP``'s grid.  Returns ((W, a1, a2), loss history); the history
+    must be decreasing for any sane (lr, steps).
+    """
+    H = jnp.asarray(H, jnp.float32)
+    target = jnp.asarray(target, jnp.float32)
+    session = session if session is not None else api.Session()
+    d_in = H.shape[1]
+    d_out = d_out if d_out is not None else target.shape[1]
+    p0 = init_gat_layer(jax.random.PRNGKey(seed), d_in, d_out)
+    params = (jnp.asarray(p0.W), jnp.asarray(p0.a1), jnp.asarray(p0.a2))
+
+    def loss_fn(params):
+        W, a1, a2 = params
+        out = gat_layer_trainable(graphP, H, W, a1, a2, n_heads=n_heads,
+                                  session=session)
+        return jnp.mean((out - target) ** 2)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+    hist = []
+    for it in range(steps):
+        val, gparams = grad_fn(params)
+        params = tuple(p - lr * g for p, g in zip(params, gparams))
+        hist.append(float(val))
+        if verbose:
+            print(f"gat[{graphP.alg.name}] step {it}: loss {val:.5f}")
+    return params, hist

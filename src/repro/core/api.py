@@ -45,6 +45,8 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import hashlib
+import weakref
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -56,7 +58,7 @@ from repro.core.grid import make_grid15, make_grid25
 
 __all__ = [
     "ALGORITHMS", "Algorithm", "DistProblem", "Session", "SparseResult",
-    "make_problem", "sddmm", "spmm", "fusedmm", "activate",
+    "make_problem", "sddmm", "spmm", "spmm_t", "fusedmm", "activate",
 ]
 
 
@@ -175,10 +177,35 @@ class Algorithm:
         raise NotImplementedError
 
     # -- execution (device in, host out) ------------------------------------
-    def sddmm(self, prob, X, Y) -> SparseResult:
+    def sddmm(self, prob, X, Y, session=None) -> SparseResult:
+        """R = S * (X Y^T) sampled at nnz(S).  ``session`` serves the
+        family's fiber replication of the dense operand(s) from the
+        across-call cache (d15/s15/d25; s25 replicates nothing)."""
         raise NotImplementedError
 
-    def spmm(self, prob, Y) -> np.ndarray:
+    def spmm(self, prob, Y, vals=None, session=None) -> np.ndarray:
+        """out = S(vals) @ Y.  ``vals`` (host COO order) substitutes the
+        sample values via the cached structure pack
+        (:meth:`DistProblem.injected_plan`); ``session`` serves the
+        dense gather where the family has one (s15 only — the other
+        families' SpMM replicates nothing inbound)."""
+        raise NotImplementedError
+
+    def spmm_t(self, prob, A, vals=None, session=None) -> np.ndarray:
+        """out = S(vals)^T @ A on the SAME grid — the dual of spmm.
+
+        d15/d25 run their native FusedMMB-style executor on S's
+        transpose pack; s15/s25 run spmm on the transposed problem.
+        Where the executor all-gathers A, the gather is Session-
+        replayable — the backward of a training step reuses the
+        forward's replication of A this way (repro.core.grads).
+        ``vals`` (problem host-COO order) overrides the pack's sample
+        values.
+        """
+        fn, args, kwargs, post = self._spmm_t_call(prob, A, vals, session)
+        return post(fn(*args, **kwargs))
+
+    def _spmm_t_call(self, prob, A, vals, session):
         raise NotImplementedError
 
     def fusedmm(self, prob, X, Y, elision: str,
@@ -187,11 +214,23 @@ class Algorithm:
                                                     session)
         return post(fn(*args, **kwargs))
 
-    def lower_fusedmm(self, prob, elision: str):
-        """Lower the family's jitted FusedMM for HLO/roofline analysis."""
+    def lower_fusedmm(self, prob, elision: str,
+                      session: Optional["Session"] = None):
+        """Lower the family's jitted FusedMM for HLO/roofline analysis.
+
+        Passing a ``session`` lowers the Session-replayed variant (the
+        pre-gathered program, no in-call fiber all-gather) — what a
+        training step's backward dual-FusedMM actually compiles to."""
         X = np.zeros((prob.m, prob.r), np.float32)
         Y = np.zeros((prob.n, prob.r), np.float32)
-        fn, args, kwargs, _ = self._fusedmm_call(prob, X, Y, elision, None)
+        fn, args, kwargs, _ = self._fusedmm_call(prob, X, Y, elision,
+                                                 session)
+        return fn.lower(*args, **kwargs)
+
+    def lower_spmm_t(self, prob, session: Optional["Session"] = None):
+        """Lower the jitted SpMM-transpose (the VJP's dual kernel)."""
+        A = np.zeros((prob.m, prob.r), np.float32)
+        fn, args, kwargs, _ = self._spmm_t_call(prob, A, None, session)
         return fn.lower(*args, **kwargs)
 
     def _fusedmm_call(self, prob, X, Y, elision, session):
@@ -240,19 +279,40 @@ class _D15(Algorithm):
         g = prob.grid
         return _put(arr, g.sharding(g.layer))
 
-    def sddmm(self, prob, X, Y):
+    def sddmm(self, prob, X, Y, session=None):
         plan = prob.plan("normal")
-        rv = d15.sddmm_d15(prob.grid, plan, self.shard_x(prob, X),
-                           self.shard_y(prob, Y))
+        if session is not None:
+            a, pre = session.replicate(prob, X, "x"), True
+        else:
+            a, pre = self.shard_x(prob, X), False
+        rv = d15.sddmm_d15(prob.grid, plan, a, self.shard_y(prob, Y),
+                           pre_gathered=pre)
         return SparseResult(prob, rv,
                             lambda: plan.meta.block_meta.to_triples(
                                 plan.rows_local, plan.cols, rv,
                                 plan.tile_base))
 
-    def spmm(self, prob, Y):
-        plan = prob.plan("normal")
+    def spmm(self, prob, Y, vals=None, session=None):
+        # B shifts and the output reduce-scatters: nothing inbound is
+        # replicated, so there is no gather for a session to serve
+        plan = prob.injected_plan("normal", vals)
         return np.asarray(d15.spmma_d15(prob.grid, plan,
                                         self.shard_y(prob, Y)))
+
+    def _spmm_t_call(self, prob, A, vals, session):
+        # native FusedMMB-half: spmmb on S's transpose pack — which is
+        # the TRANSPOSED problem's "transpose" orientation (this
+        # problem's own "transpose" plan packs (S^T)^T for the reuse
+        # cell).  The AG of A is Session-replayable (pre_gathered),
+        # unlike a transposed spmma whose output reduce-scatter could
+        # never be elided.
+        plan = prob.transposed().injected_plan("transpose", vals)
+        if session is not None:
+            a, pre = session.replicate(prob, A, "x"), True
+        else:
+            a, pre = self.shard_x(prob, A), False
+        return (d15.spmmb_d15, (prob.grid, plan, a),
+                dict(pre_gathered=pre), np.asarray)
 
     def _fusedmm_call(self, prob, X, Y, elision, session):
         grid = prob.grid
@@ -318,16 +378,39 @@ class _S15(Algorithm):
         return lambda: plan.meta.block_meta.to_triples(
             plan.rows_local, plan.cols, np.asarray(rv), plan.tile_base)
 
-    def sddmm(self, prob, X, Y):
+    def sddmm(self, prob, X, Y, session=None):
         plan = prob.plan("normal")
-        rv = s15.sddmm_s15(prob.grid, plan, self.shard_x(prob, X),
-                           self.shard_y(prob, Y))
+        if session is not None:
+            a = session.replicate(prob, X, "x")
+            b = session.replicate(prob, Y, "y")
+            pre = (True, True)
+        else:
+            a, b = self.shard_x(prob, X), self.shard_y(prob, Y)
+            pre = (False, False)
+        rv = s15.sddmm_s15(prob.grid, plan, a, b, pre_gathered=pre)
         return SparseResult(prob, rv, self._rvals_triples(prob, plan, rv))
 
-    def spmm(self, prob, Y):
-        plan = prob.plan("normal")
-        slabs = s15.spmma_s15(prob.grid, plan, self.shard_y(prob, Y))
+    def spmm(self, prob, Y, vals=None, session=None):
+        plan = prob.injected_plan("normal", vals)
+        if session is not None:
+            b, pre = session.replicate(prob, Y, "y"), True
+        else:
+            b, pre = self.shard_y(prob, Y), False
+        slabs = s15.spmma_s15(prob.grid, plan, b, pre_gathered=pre)
         return s15.assemble_spmm_out(prob.grid, plan, slabs)
+
+    def _spmm_t_call(self, prob, A, vals, session):
+        # S stays stationary-by-row, so the transpose runs on the S^T
+        # problem (same grid); the column-slab gather of A is Session-
+        # replayable — same layout the forward replicated A in.
+        tp = prob.transposed()
+        plan = tp.injected_plan("normal", vals)
+        if session is not None:
+            a, pre = session.replicate(tp, A, "x"), True
+        else:
+            a, pre = self.shard_x(tp, A), False
+        return (s15.spmma_s15, (tp.grid, plan, a), dict(pre_gathered=pre),
+                lambda slabs: s15.assemble_spmm_out(tp.grid, plan, slabs))
 
     def _fusedmm_call(self, prob, X, Y, elision, session):
         grid = prob.grid
@@ -384,20 +467,40 @@ class _D25(Algorithm):
         g = prob.grid
         return _put(arr, g.sharding(g.row, g.col))
 
-    def sddmm(self, prob, X, Y):
+    def sddmm(self, prob, X, Y, session=None):
         plan = prob.plan("normal")
-        rv = d25.sddmm_d25(prob.grid, plan, self.shard_x(prob, X),
-                           d25.skew_b(prob.grid, np.asarray(Y, np.float32)))
+        if session is not None:
+            a, pre = session.replicate(prob, X, "x"), True
+        else:
+            a, pre = self.shard_x(prob, X), False
+        rv = d25.sddmm_d25(prob.grid, plan, a,
+                           d25.skew_b(prob.grid, np.asarray(Y, np.float32)),
+                           pre_gathered=pre)
         return SparseResult(prob, rv,
                             lambda: plan.meta.block_meta.to_triples(
                                 plan.rows_local, plan.cols,
                                 np.asarray(rv), plan.tile_base))
 
-    def spmm(self, prob, Y):
-        plan = prob.plan("normal")
+    def spmm(self, prob, Y, vals=None, session=None):
+        # B Cannon-shifts and the output reduce-scatters: no inbound
+        # replication for a session to serve
+        plan = prob.injected_plan("normal", vals)
         out = d25.spmma_d25(prob.grid, plan,
                             d25.skew_b(prob.grid, np.asarray(Y, np.float32)))
         return np.asarray(out)
+
+    def _spmm_t_call(self, prob, A, vals, session):
+        # native FusedMMB-half on the Cannon grid (see _D15._spmm_t_call
+        # for why the transposed problem's "transpose" orientation is
+        # S's own transpose pack)
+        plan = prob.transposed().injected_plan("transpose", vals)
+        if session is not None:
+            a, pre = session.replicate(prob, A, "x"), True
+        else:
+            a, pre = self.shard_x(prob, A), False
+        return (d25.spmmb_d25, (prob.grid, plan, a),
+                dict(pre_gathered=pre),
+                lambda out: d25.unskew_out(prob.grid, plan, out))
 
     def _fusedmm_call(self, prob, X, Y, elision, session):
         grid = prob.grid
@@ -477,16 +580,26 @@ class _S25(Algorithm):
                 np.asarray(plan.tile_base)[:, :, 0])
         return triples
 
-    def sddmm(self, prob, X, Y):
+    def sddmm(self, prob, X, Y, session=None):
+        # nothing dense is replicated: session accepted and ignored
         plan = prob.plan("normal")
         rv = s25.sddmm_s25(prob.grid, plan, self.shard_x(prob, X),
                            self.shard_y(prob, Y))
         return SparseResult(prob, rv, self._rvals_triples(prob, plan, rv))
 
-    def spmm(self, prob, Y):
-        plan = prob.plan("normal")
+    def spmm(self, prob, Y, vals=None, session=None):
+        plan = prob.injected_plan("normal", vals)
         out = s25.spmma_s25(prob.grid, plan, self.shard_y(prob, Y))
         return s25.unskew_out(prob.grid, plan, out)
+
+    def _spmm_t_call(self, prob, A, vals, session):
+        # spmm on the transposed problem (structure re-replicated on the
+        # same grid); nothing dense is replicated, so there is no gather
+        # for a Session to replay — session is accepted and ignored.
+        tp = prob.transposed()
+        plan = tp.injected_plan("normal", vals)
+        return (s25.spmma_s25, (tp.grid, plan, self.shard_y(tp, A)), {},
+                lambda out: s25.unskew_out(tp.grid, plan, out))
 
     def _fusedmm_call(self, prob, X, Y, elision, session):
         grid = prob.grid
@@ -530,7 +643,10 @@ class DistProblem:
     nz_block: int = 32
     _plans: dict = dataclasses.field(default_factory=dict)
     _derived_r: dict = dataclasses.field(default_factory=dict)
+    _posmaps: dict = dataclasses.field(default_factory=dict)
     _coo_sort: Optional[tuple] = None
+    _ones: Optional["DistProblem"] = None
+    _transposed: Optional["DistProblem"] = None
 
     # -- metadata ------------------------------------------------------------
     @property
@@ -555,6 +671,58 @@ class DistProblem:
             self._plans[orient] = self.alg.make_plan(self, orient)
         return self._plans[orient]
 
+    def _posmap(self, orient: str):
+        """Pack-slot -> host-COO-position map for one orientation.
+
+        Built once per orientation by planning a position-coded copy of
+        the problem (entry i carries value i+1; padding slots stay 0) —
+        packing is deterministic in the coordinates, so the map is valid
+        for ANY value vector on this structure."""
+        if orient not in self._posmaps:
+            posvals = np.arange(1, self.nnz + 1, dtype=np.float32)
+            tmp = dataclasses.replace(
+                self, vals=posvals, _plans={}, _posmaps={},
+                _derived_r={}, _ones=None, _transposed=None)
+            pv = self.alg.make_plan(tmp, orient).vals
+
+            def to_idx(a):
+                return np.asarray(a).astype(np.int64)
+
+            self._posmaps[orient] = (tuple(to_idx(a) for a in pv)
+                                     if isinstance(pv, tuple) else
+                                     to_idx(pv))
+        return self._posmaps[orient]
+
+    def injected_plan(self, orient: str, vals=None):
+        """This orientation's plan with ``vals`` (host COO order)
+        substituted into the value slots — the s25 family's "attractive
+        property" (only values move between calls, the structure is
+        packed once) generalized to every family.  The hot path of the
+        backward pass: cotangent-valued sparse operands reuse the cached
+        structure pack instead of re-planning per training step.
+
+        Falls back to a full re-pack above 2^24 nonzeros, where float32
+        position coding would alias."""
+        if vals is None:
+            return self.plan(orient)
+        vals = np.asarray(vals, np.float32)
+        if self.nnz >= (1 << 24):
+            return self.with_values(vals).plan(orient)
+        base = self.plan(orient)
+        pos = self._posmap(orient)
+        lookup = np.concatenate([np.zeros(1, np.float32), vals])
+
+        def inject(pos_arr, old_dev):
+            return jax.device_put(jnp.asarray(lookup[pos_arr]),
+                                  old_dev.sharding)
+
+        if isinstance(base.vals, tuple):
+            new_vals = tuple(inject(p, o)
+                             for p, o in zip(pos, base.vals))
+        else:
+            new_vals = inject(pos, base.vals)
+        return dataclasses.replace(base, vals=new_vals)
+
     def coo_sort(self):
         """(sorted coordinate keys, argsort order) — cached; coordinates
         are immutable for a problem's lifetime."""
@@ -571,13 +739,28 @@ class DistProblem:
         Packing is deterministic in the coordinates, so the derived
         problem's blocks line up with this one's.  The derived problem
         re-packs on first use (values are baked into the device packs);
-        injecting new values into the cached structural plan — the s25
-        family's "attractive property" generalized — is a known future
-        optimization for value-churn-heavy callers like GAT."""
+        value-churn-heavy callers that keep ONE problem and vary values
+        per call (the backward passes, spmm with ``vals=``) should go
+        through :meth:`injected_plan` instead, which reuses this
+        problem's cached structure pack."""
         vals = np.asarray(vals, np.float32)
         assert vals.shape == self.rows.shape
         return dataclasses.replace(self, vals=vals, _plans={},
-                                   _derived_r={})
+                                   _derived_r={}, _posmaps=self._posmaps,
+                                   _ones=None, _transposed=None)
+
+    def ones(self) -> "DistProblem":
+        """The unit-valued problem on S's pattern (cached).
+
+        The sampling mask: ``ones().sddmm(X, Y)`` yields the raw dots
+        ``<x_i, y_j>`` at nnz(S) — what the backward of a values-
+        differentiable SpMM needs (repro.core.grads)."""
+        if self._ones is None:
+            if bool(np.all(self.vals == 1.0)):
+                self._ones = self
+            else:
+                self._ones = self.with_values(np.ones_like(self.vals))
+        return self._ones
 
     def with_r(self, r: int) -> "DistProblem":
         """Same sparse matrix, different dense-operand width.
@@ -593,18 +776,29 @@ class DistProblem:
                 raise ValueError(f"r={r} must be a multiple of {mult} "
                                  f"for {self.alg.name} on this grid")
             self._derived_r[r] = dataclasses.replace(
-                self, r=r, _plans={}, _derived_r={})
+                self, r=r, _plans={}, _derived_r={}, _posmaps={},
+                _ones=None, _transposed=None)
         return self._derived_r[r]
 
     def transposed(self) -> "DistProblem":
-        """The S^T problem on the same grid (for SpMMB-style updates)."""
-        if not self.alg.feasible(m=self.n, n=self.m, r=self.r,
-                                 p=self.p, c=self.c):
-            raise ValueError(f"{self.alg.name} infeasible for the "
-                             f"transposed shape ({self.n}, {self.m})")
-        return dataclasses.replace(self, rows=self.cols, cols=self.rows,
-                                   m=self.n, n=self.m, _plans={},
-                                   _derived_r={}, _coo_sort=None)
+        """The S^T problem on the same grid (for SpMMB-style updates).
+
+        Cached: the backward pass hits this every training step, and the
+        structure never changes — combined with :meth:`injected_plan`,
+        the transpose pack is planned exactly once per problem."""
+        if self._transposed is None:
+            if not self.alg.feasible(m=self.n, n=self.m, r=self.r,
+                                     p=self.p, c=self.c):
+                raise ValueError(f"{self.alg.name} infeasible for the "
+                                 f"transposed shape ({self.n}, {self.m})")
+            tp = dataclasses.replace(self, rows=self.cols,
+                                     cols=self.rows, m=self.n, n=self.m,
+                                     _plans={}, _derived_r={},
+                                     _posmaps={}, _coo_sort=None,
+                                     _ones=None, _transposed=None)
+            tp._transposed = self
+            self._transposed = tp
+        return self._transposed
 
     # -- elision resolution --------------------------------------------------
     def resolve_elision(self, elision: str = "auto",
@@ -641,13 +835,39 @@ class DistProblem:
         return min(self.alg.auto_elisions, key=words)
 
     # -- the shared-signature executors --------------------------------------
-    def sddmm(self, X, Y) -> SparseResult:
-        """R = S * (X @ Y.T) sampled at nnz(S); X (m, r), Y (n, r)."""
-        return self.alg.sddmm(self, X, Y)
+    def sddmm(self, X, Y, session: Optional["Session"] = None
+              ) -> SparseResult:
+        """R = S * (X @ Y.T) sampled at nnz(S); X (m, r), Y (n, r).
 
-    def spmm(self, Y) -> np.ndarray:
-        """out = S @ Y, host-assembled (m, r); Y is (n, r)."""
-        return self.alg.spmm(self, Y)
+        ``session`` serves the dense operands' fiber replication from
+        the across-call cache (bitwise-identical; d15/d25 gather X,
+        s15 gathers both, s25 nothing)."""
+        return self.alg.sddmm(self, X, Y, session=session)
+
+    def spmm(self, Y, vals=None,
+             session: Optional["Session"] = None) -> np.ndarray:
+        """out = S(vals) @ Y, host-assembled (m, r); Y is (n, r).
+
+        ``vals`` (host COO order, None -> own values) substitutes the
+        sample values through the cached structure pack — O(nnz) value
+        injection, no re-planning (:meth:`injected_plan`).  ``session``
+        serves s15's column-slab gather of Y; the other families' SpMM
+        replicates nothing inbound."""
+        return self.alg.spmm(self, Y, vals=vals, session=session)
+
+    def spmm_t(self, A, vals=None, session: Optional["Session"] = None
+               ) -> np.ndarray:
+        """out = S(vals)^T @ A, host-assembled (n, r); A is (m, r).
+
+        ``vals`` (this problem's host-COO order, None -> own values)
+        overrides the sample values — the backward of a training step
+        runs this with the forward's sampled intermediate as the sparse
+        operand (repro.core.grads).  ``session`` replays a cached fiber
+        replication of A where the family gathers one (d15/d25/s15)."""
+        if vals is not None:
+            vals = np.asarray(vals, np.float32)
+        return self.alg.spmm_t(self, np.asarray(A, np.float32),
+                               vals=vals, session=session)
 
     def fusedmm(self, X, Y, elision: str = "auto",
                 session: Optional["Session"] = None):
@@ -660,8 +880,15 @@ class DistProblem:
         el = self.resolve_elision(elision, session)
         return self.alg.fusedmm(self, X, Y, el, session)
 
-    def lower_fusedmm(self, elision: str = "auto"):
-        return self.alg.lower_fusedmm(self, self.resolve_elision(elision))
+    def lower_fusedmm(self, elision: str = "auto",
+                      session: Optional["Session"] = None):
+        return self.alg.lower_fusedmm(self, self.resolve_elision(elision),
+                                      session=session)
+
+    def lower_spmm_t(self, session: Optional["Session"] = None):
+        """Lower the dual SpMM-transpose program (the VJP's Ybar kernel);
+        with a ``session``, the pre-gathered (replay) variant."""
+        return self.alg.lower_spmm_t(self, session=session)
 
 
 # ---------------------------------------------------------------------------
@@ -671,49 +898,89 @@ class DistProblem:
 class Session:
     """Caches fiber-replicated dense operands across executor calls.
 
-    Keyed by operand identity (a strong reference pins the id), so the
-    stationary factor of an iterative solver hits the cache on every
-    iteration while the iterate itself simply misses and is replicated
-    fresh — never stale.  Cached and uncached calls are bitwise-identical
-    (the kernels consume the same values either way).
+    Keyed by operand CONTENT (grid, family, slot, shape, dtype, byte
+    digest), so the stationary factor of an iterative solver hits the
+    cache on every iteration while the iterate itself misses and is
+    replicated fresh — never stale, and in-place mutation of a cached
+    numpy operand (``B *= 0.9``) re-replicates automatically.  Content
+    keying is what lets a training step's BACKWARD replay the gathers its
+    forward performed: the cotangent path hands the executors *new array
+    objects* carrying the same stationary operand values (they round-trip
+    through jax tracing in ``repro.core.grads``), and identity-based
+    keying would miss every one of them.  Cached and uncached calls are
+    bitwise-identical (the kernels consume the same values either way).
 
     The cache is LRU-bounded: families that gather *both* operands (s15)
     replicate the changing iterate through the session too, and without
-    eviction every iterate — host array plus device copy — would stay
-    pinned for the session's lifetime.  The stationary operand is hit on
-    every call and therefore never ages out.
-
-    In-place mutation of a cached numpy operand (``B *= 0.9``) is
-    detected by a content fingerprint (shape/dtype/sum) checked on every
-    hit — a mismatch transparently re-replicates.  jax arrays are
-    immutable, so identity alone is sound for them."""
+    eviction every iterate's device copy would stay pinned for the
+    session's lifetime.  The stationary operand is hit on every call and
+    therefore never ages out."""
 
     def __init__(self, max_entries: int = 16):
         self._cache = collections.OrderedDict()
+        self._id_memo = collections.OrderedDict()
         self._max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
 
     @staticmethod
-    def _fingerprint(arr):
+    def _key(problem: "DistProblem", arr, slot: str):
+        a = np.asarray(arr)
+        digest = hashlib.blake2b(a.tobytes(), digest_size=16).hexdigest()
+        return (id(problem.grid), problem.alg.name, slot, a.shape,
+                str(a.dtype), digest)
+
+    @staticmethod
+    def _cheap_fp(arr):
+        # mutation check for numpy operands on the id fast path; jax
+        # arrays are immutable, so identity alone is sound for them
         if isinstance(arr, np.ndarray):
             return (arr.shape, str(arr.dtype),
                     float(arr.sum(dtype=np.float64)))
-        return None          # jax arrays are immutable
+        return None
 
-    def replicate(self, problem: DistProblem, arr, slot: str):
-        key = (id(problem.grid), problem.alg.name, slot, id(arr))
-        fp = self._fingerprint(arr)
+    def _content_key(self, problem: "DistProblem", arr, slot: str):
+        """Content key with an identity fast path: the iterating caller
+        (ALS's CG loop) passes the SAME host array object every call,
+        so the full tobytes+digest — a device sync for jax operands —
+        is paid once, not per hit; the memo verifies numpy operands by
+        a cheap sum fingerprint so in-place mutation still re-keys.
+        The memo holds only WEAK references (no operand pinning) and
+        evicts LRU per entry; an id is validated by dereferencing the
+        weakref, so id recycling after gc cannot alias a dead entry."""
+        memo_k = (id(problem.grid), problem.alg.name, slot, id(arr))
+        memo = self._id_memo.get(memo_k)
+        fp = self._cheap_fp(arr)
+        if memo is not None and memo[0]() is arr and memo[2] == fp:
+            self._id_memo.move_to_end(memo_k)
+            return memo[1]
+        key = self._key(problem, arr, slot)
+        try:
+            ref = weakref.ref(arr)
+        except TypeError:
+            return key                     # un-weakref-able: no memo
+        self._id_memo[memo_k] = (ref, key, fp)
+        while len(self._id_memo) > 4 * self._max_entries:
+            self._id_memo.popitem(last=False)
+        return key
+
+    def replicate(self, problem: "DistProblem", arr, slot: str):
+        key = self._content_key(problem, arr, slot)
         hit = self._cache.get(key)
-        if hit is not None and hit[0] is arr and hit[2] == fp:
+        if hit is not None:
             self._cache.move_to_end(key)
-            return hit[1]
+            self.hits += 1
+            return hit
         rep = problem.alg.replicate(problem, arr, slot)
-        self._cache[key] = (arr, rep, fp)
+        self._cache[key] = rep
+        self.misses += 1
         while len(self._cache) > self._max_entries:
             self._cache.popitem(last=False)
         return rep
 
     def clear(self):
         self._cache.clear()
+        self._id_memo.clear()
 
     def __len__(self):
         return len(self._cache)
@@ -749,28 +1016,48 @@ def make_problem(rows, cols, vals, shape: Tuple[int, int], r: int, *,
                        row_tile=row_tile, nz_block=nz_block)
 
 
-def sddmm(problem: DistProblem, X, Y) -> SparseResult:
+def sddmm(problem: DistProblem, X, Y,
+          session: Optional[Session] = None) -> SparseResult:
     """Distributed SDDMM: ``R = S * (X @ Y.T)`` sampled at nnz(S).
 
     Shapes: ``X (m, r)``, ``Y (n, r)`` host arrays (any dtype castable
     to float32); returns a :class:`SparseResult` holding the sampled
     values in the family's home device layout, with ``values()`` /
     ``to_coo()`` / ``to_dense()`` host views.  Every family honors the
-    same signature; no family-specific kwargs exist at this level (the
-    per-family knobs — ``overlap``, ``pre_gathered`` — live on the
-    ``repro.core.<family>`` executors).
+    same signature.  ``session`` serves the operands' fiber replication
+    from the across-call cache, bitwise-identically — a training step's
+    backward then replays the forward's gathers (repro.core.grads).
     """
-    return problem.sddmm(X, Y)
+    return problem.sddmm(X, Y, session=session)
 
 
-def spmm(problem: DistProblem, Y) -> np.ndarray:
-    """Distributed SpMM: ``out = S @ Y``, host-assembled ``(m, r)``.
+def spmm(problem: DistProblem, Y, vals=None,
+         session: Optional[Session] = None) -> np.ndarray:
+    """Distributed SpMM: ``out = S(vals) @ Y``, host-assembled ``(m, r)``.
 
     ``Y`` is ``(n, r)``; the result is a numpy float32 array regardless
     of the family's on-device layout (slab-stacked for s15, skewed
     chunks for s25, ... — assembly is the registry entry's job).
+    ``vals`` (host COO order) substitutes the sample values via O(nnz)
+    injection into the cached structure pack; ``session`` serves s15's
+    gather of Y (the other families' SpMM replicates nothing inbound).
     """
-    return problem.spmm(Y)
+    return problem.spmm(Y, vals=vals, session=session)
+
+
+def spmm_t(problem: DistProblem, A, vals=None,
+           session: Optional[Session] = None) -> np.ndarray:
+    """Distributed SpMM-transpose: ``out = S(vals)^T @ A``, ``(n, r)``.
+
+    The dual of :func:`spmm` on the same grid — d15/d25 run their native
+    FusedMMB-style executor on the transpose pack (AG of ``A``
+    Session-replayable), s15/s25 run spmm on the transposed problem.
+    ``vals`` overrides the sample values in the problem's host COO
+    order; this is how every backward pass applies a cotangent-valued
+    sparse matrix without re-building a DistProblem by hand
+    (:mod:`repro.core.grads`).
+    """
+    return problem.spmm_t(A, vals=vals, session=session)
 
 
 def fusedmm(problem: DistProblem, X, Y, elision: str = "auto",

@@ -183,6 +183,93 @@ def words_fusedmm_cached(algorithm: str, *, p: int, c: int, n: int, r: int,
                                             0.0))
 
 
+def words_spmm(family: str, *, p: int, c: int, n: int, r: int,
+               nnz: int) -> CommCost:
+    """Words per processor for ONE distributed SpMM (or SpMM^T) round.
+
+    Table III embeds two kernel rounds in every FusedMM row; these are
+    the single-round costs, needed to price the backward pass — each
+    transpose-SpMM of a VJP is one such round on the same grid.  By the
+    paper's SpMM<->SDDMM duality the transpose orientation ships the
+    same words (the traveling/replicated roles are symmetric).
+    """
+    _check(p, c)
+    phi = nnz / (n * r)
+    if family == "d15":
+        words = n * r * (1.0 / c + (c - 1) / p)
+        msgs = p / c + (c - 1)
+    elif family == "s15":
+        words = n * r * (3.0 * phi / c + (c - 1) / p)
+        msgs = p / c + (c - 1)
+    elif family == "d25":
+        sq = math.sqrt(p / c)
+        words = n * r * (3 * phi + 1) / math.sqrt(p * c) \
+            + n * r * (c - 1) / p
+        msgs = 2 * sq + (c - 1)
+    elif family == "s25":
+        sq = math.sqrt(p / c)
+        words = n * r * 2.0 / math.sqrt(p * c) \
+            + phi * n * r * (c - 1) / p
+        msgs = 2 * sq + (c - 1)
+    else:
+        raise ValueError(f"unknown family {family!r}")
+    return CommCost(f"{family}_spmm", p, c, words, msgs, phi)
+
+
+# Replication units (of n*r*(c-1)/p words) a Session elides from the
+# BACKWARD pass when the same Session that served the forward is threaded
+# through the VJP (repro.core.grads): the backward's dual FusedMM finds
+# the stationary operand's fiber replication already resident (gathered
+# by the forward), and the SpMM^T that gathers the forward's replicated
+# operand X replays it too.  d15/d25/s15 each elide two gathers (one in
+# the dual FusedMM, one in a transpose-SpMM); s25 replicates nothing
+# dense, so a Session elides nothing there.  Distinct from
+# SESSION_CACHEABLE, which models the *across-call* steady state used by
+# elision="auto" ranking — this is the *within-step* fwd->bwd replay.
+SESSION_BWD_ELIDED = {"d15": 2.0, "s15": 2.0, "d25": 2.0, "s25": 0.0}
+
+
+def words_fusedmm_bwd(algorithm: str, *, p: int, c: int, n: int, r: int,
+                      nnz: int, session: bool = False) -> CommCost:
+    """Words per processor for the BACKWARD of one FusedMM call.
+
+    The VJP (repro.core.grads) is built from dual primitives on the same
+    pack and cell: grad-wrt-X is the SAME FusedMM cell with the output
+    cotangent in X's slot (one Table-III row), and grad-wrt-Y is two
+    transpose-SpMMs (R^T g and Ghat^T X) — so
+
+        bwd = words_fusedmm(cell) + 2 * words_spmm(family)
+
+    and forward and backward provably ship the same words per primitive.
+    ``session=True`` credits the within-step replication replay
+    (SESSION_BWD_ELIDED): the forward's fiber gathers are reused by the
+    backward instead of re-communicated.
+    """
+    family, _ = FAMILY_ELISION[algorithm]
+    fm = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz)
+    sp = words_spmm(family, p=p, c=c, n=n, r=r, nnz=nnz)
+    words = fm.words + 2 * sp.words
+    msgs = fm.messages + 2 * sp.messages
+    if session:
+        units = SESSION_BWD_ELIDED[family]
+        words = max(words - units * n * r * (c - 1) / p, 0.0)
+        msgs = max(msgs - units * (c - 1), 0.0)
+    return CommCost(f"{algorithm}_bwd", p, c, words, msgs, fm.phi)
+
+
+def words_trainstep(algorithm: str, *, p: int, c: int, n: int, r: int,
+                    nnz: int, session: bool = False) -> CommCost:
+    """Words per processor for one training step: forward FusedMM plus
+    its dual-primitive backward (words_fusedmm_bwd).  The forward always
+    pays its full replication (it fills the Session); only the backward
+    is credited the replay."""
+    fwd = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz)
+    bwd = words_fusedmm_bwd(algorithm, p=p, c=c, n=n, r=r, nnz=nnz,
+                            session=session)
+    return CommCost(f"{algorithm}_trainstep", p, c, fwd.words + bwd.words,
+                    fwd.messages + bwd.messages, fwd.phi)
+
+
 def optimal_c(algorithm: str, *, p: int, phi: float = 0.0) -> float:
     """Closed-form optimal replication factor (Table IV, continuous)."""
     if algorithm == "d15_no_elision":
@@ -209,6 +296,54 @@ def optimal_c(algorithm: str, *, p: int, phi: float = 0.0) -> float:
     if algorithm == "s25_replication_reuse":
         return (p / (2 * phi) ** 2) ** (1 / 3) if phi > 0 else float(p)
     raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+# Training-step coefficient table: per-processor trainstep words / (n r)
+#   1.5D cells:  A/c          + B (c-1)/p
+#   2.5D cells:  A/sqrt(p c)  + B (c-1)/p
+# with A = a0 + a_phi * phi and B = b0 + b_phi * phi.  Derived by summing
+# words_fusedmm + words_fusedmm_bwd (= 2x fusedmm + 2x spmm) per cell;
+# kept closed-form so optimal_c_trainstep stays analytic like Table IV.
+_TRAINSTEP_COEFS = {
+    "d15_no_elision":        (6.0, 0.0, 6.0, 0.0),
+    "d15_replication_reuse": (6.0, 0.0, 4.0, 0.0),
+    "d15_local_fusion":      (4.0, 0.0, 6.0, 0.0),
+    "s15_no_elision":        (0.0, 18.0, 6.0, 0.0),
+    "s15_replication_reuse": (0.0, 18.0, 4.0, 0.0),
+    "s15_local_fusion":      (0.0, 14.0, 4.0, 0.0),
+    "d25_no_elision":        (6.0, 18.0, 6.0, 0.0),
+    "d25_replication_reuse": (6.0, 18.0, 4.0, 0.0),
+    "d25_local_fusion":      (4.0, 14.0, 6.0, 0.0),
+    "s25_no_elision":        (12.0, 0.0, 0.0, 8.0),
+    "s25_replication_reuse": (10.0, 0.0, 0.0, 8.0),
+}
+
+
+def optimal_c_trainstep(algorithm: str, *, p: int, phi: float = 0.0,
+                        session: bool = False) -> float:
+    """Closed-form optimal replication factor for a TRAINING STEP.
+
+    The backward pass doubles the dense traffic (the dual FusedMM plus
+    two transpose-SpMMs re-ship the dense operands), which shifts the
+    optimum away from Table IV's forward-only c*: e.g. d15 "reuse" drops
+    from sqrt(2p) to sqrt(1.5p) — the extra backward shift words punish
+    large c harder than the (session-elidable) replication does.
+    ``session=True`` removes the backward's replayed gathers
+    (SESSION_BWD_ELIDED), pushing c* back up.
+    """
+    if algorithm not in _TRAINSTEP_COEFS:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    a0, a_phi, b0, b_phi = _TRAINSTEP_COEFS[algorithm]
+    family, _ = FAMILY_ELISION[algorithm]
+    a = a0 + a_phi * phi
+    b = b0 + b_phi * phi
+    if session:
+        b = b - SESSION_BWD_ELIDED[family]
+    if b <= 0 or a <= 0:
+        return float(p)
+    if family in ("d15", "s15"):
+        return math.sqrt(a * p / b)
+    return (a * a * p / (4 * b * b)) ** (1 / 3)
 
 
 def feasible_cs(algorithm: str, p: int, r: int = 0):

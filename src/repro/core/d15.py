@@ -227,18 +227,25 @@ def _sddmm_phases(plan, T, B0, s, L, lay, overlap, swap=False):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("overlap",))
-def sddmm_d15(grid: Grid15, plan: PlanD15, A, B, overlap: bool = True):
-    """R = S * (A @ B.T); returns per-phase vals, T x (L, c, nb_t, k)."""
+                   static_argnames=("overlap", "pre_gathered"))
+def sddmm_d15(grid: Grid15, plan: PlanD15, A, B, overlap: bool = True,
+              pre_gathered: bool = False):
+    """R = S * (A @ B.T); returns per-phase vals, T x (L, c, nb_t, k).
+
+    pre_gathered=True: A arrives already fiber-replicated (sharding
+    ``replicated_spec(grid)``) and the all-gather is skipped — the
+    across-call replication reuse of ``repro.core.api.Session``."""
     lay, fib, L = grid.layer, grid.fiber, grid.L
 
     def body(s, A_loc, B_loc):
-        T = jax.lax.all_gather(A_loc, fib, tiled=True)     # (c m/p, r)
+        T = A_loc if pre_gathered \
+            else jax.lax.all_gather(A_loc, fib, tiled=True)  # (c m/p, r)
         r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap)
         return tuple(v[None, None] for v in r_vals)
 
     return _exec(grid, plan, body, A, B,
-                 tuple(P(lay, fib) for _ in range(L)))
+                 tuple(P(lay, fib) for _ in range(L)),
+                 a_spec=replicated_spec(grid) if pre_gathered else None)
 
 
 @functools.partial(jax.jit, static_argnums=(0,),
@@ -267,21 +274,28 @@ def spmma_d15(grid: Grid15, plan: PlanD15, B, overlap: bool = True):
 
 
 @functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("overlap",))
-def spmmb_d15(grid: Grid15, plan: PlanD15, A, overlap: bool = True):
+                   static_argnames=("overlap", "pre_gathered"))
+def spmmb_d15(grid: Grid15, plan: PlanD15, A, overlap: bool = True,
+              pre_gathered: bool = False):
     """B = S.T @ A: A replicated-in; the shifting B buffer accumulates.
 
     The traveling buffer is an accumulator, so its shift depends on the
     local kernel; overlap instead precomputes the *next* phase's local
     contribution (stationary S^T against the gathered T) while the shift
     is in flight — only the cheap add serializes with communication.
+
+    pre_gathered=True: A arrives already fiber-replicated (sharding
+    ``replicated_spec(grid)``) and the all-gather is skipped — this is
+    how a training step's backward transpose-SpMM replays the forward's
+    replication of A through an ``api.Session`` (repro.core.grads).
     """
     assert plan.transpose, "spmmb_d15 needs a transpose-packed plan"
     lay, fib, L = grid.layer, grid.fiber, grid.L
     tk = plan.tiling.kernel_kwargs()
 
     def body(s, A_loc, B0):
-        T = jax.lax.all_gather(A_loc, fib, tiled=True)
+        T = A_loc if pre_gathered \
+            else jax.lax.all_gather(A_loc, fib, tiled=True)
         B_cur = B0
         if overlap:
             contrib = ops.spmm(_coo(plan, _s(s, 0)), T, m=plan.nB, **tk)
@@ -299,7 +313,8 @@ def spmmb_d15(grid: Grid15, plan: PlanD15, A, overlap: bool = True):
 
     zeros = jnp.zeros((plan.n, plan.r), jnp.float32)
     zeros = jax.device_put(zeros, grid.sharding((lay, fib)))
-    return _exec(grid, plan, body, A, zeros, P((lay, fib)))
+    return _exec(grid, plan, body, A, zeros, P((lay, fib)),
+                 a_spec=replicated_spec(grid) if pre_gathered else None)
 
 
 # ---------------------------------------------------------------------------

@@ -236,20 +236,28 @@ def _sddmm_round(grid, plan, T, s, B0, overlap=True):
 
 
 @functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("overlap",))
-def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, overlap: bool = True):
-    """R = S * (A @ B.T); values return to skewed-home layout."""
+                   static_argnames=("overlap", "pre_gathered"))
+def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, overlap: bool = True,
+              pre_gathered: bool = False):
+    """R = S * (A @ B.T); values return to skewed-home layout.
+
+    pre_gathered=True: A arrives already fiber-replicated (sharding
+    ``replicated_spec(grid)``) and the all-gather is skipped — the
+    across-call replication reuse of ``repro.core.api.Session``."""
     fib = grid.fiber
 
     def body(s, A_loc, B_loc):
         s = _sq(s)
         B0 = B_loc[0, 0, 0]
-        T = jax.lax.all_gather(A_loc, fib, tiled=True)
+        T = A_loc if pre_gathered \
+            else jax.lax.all_gather(A_loc, fib, tiled=True)
         (rl, cl, partial, tb), _, _, _ = _sddmm_round(grid, plan, T, s, B0,
                                                       overlap)
         return (s[2] * partial)[None, None, None]
 
-    return _exec(grid, plan, body, A, B_sk, P(grid.row, grid.col, grid.fiber))
+    return _exec(grid, plan, body, A, B_sk,
+                 P(grid.row, grid.col, grid.fiber),
+                 a_spec=replicated_spec(grid) if pre_gathered else None)
 
 
 @functools.partial(jax.jit, static_argnums=(0,),
@@ -280,6 +288,60 @@ def spmma_d25(grid: Grid25, plan: PlanD25, B_sk, overlap: bool = True):
     dummy = jnp.zeros((grid.G * grid.c, grid.G), jnp.float32)
     return _exec(grid, plan, body, dummy, B_sk,
                  P((grid.row, grid.fiber), grid.col))
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("overlap", "pre_gathered"))
+def spmmb_d25(grid: Grid25, plan: PlanD25, A, overlap: bool = True,
+              pre_gathered: bool = False):
+    """B = S.T @ A on the Cannon grid (transpose pack): AG(A) in, the
+    output travels home with the propagated buffer — the FusedMMB second
+    round standalone, needed by the backward transpose-SpMMs of a
+    training step (repro.core.grads).
+
+    The traveling output accumulates, so its shift trails the kernel;
+    overlap precomputes the next contribution from the double-buffered
+    traveling structure while the output chunk is in flight (the same
+    schedule as fusedmm_d25's "reuse" SpMM round).  pre_gathered=True:
+    A arrives already fiber-replicated (``replicated_spec(grid)``) and
+    the all-gather is skipped — the Session replay path.
+
+    Returns output chunks stacked (G, G, c, nS, rW) in skewed-home
+    layout; reassemble with :func:`unskew_out`.
+    """
+    assert plan.transpose, "spmmb_d25 needs a transpose-packed plan"
+    G, fib = grid.G, grid.fiber
+    tk = plan.tiling.kernel_kwargs()
+
+    def body(s, A_loc, _B):
+        s = _sq(s)
+        T = A_loc if pre_gathered \
+            else jax.lax.all_gather(A_loc, fib, tiled=True)
+        out_cur = jnp.zeros((plan.meta.nS, plan.meta.rW), jnp.float32)
+        struct = s
+        contrib = ops.spmm(_coo(plan, *struct), T, m=plan.meta.nS, **tk)
+        if overlap and G > 1:
+            nxt = tuple(_shift_back(x, grid.col, G) for x in struct)
+        for t in range(G):
+            out_cur = _shift_back(out_cur + contrib, grid.row, G)
+            if t + 1 < G:
+                if overlap:
+                    contrib = ops.spmm(_coo(plan, *nxt), T,
+                                       m=plan.meta.nS, **tk)
+                    if t + 2 < G:
+                        nxt = tuple(_shift_back(x, grid.col, G)
+                                    for x in nxt)
+                else:
+                    struct = tuple(_shift_back(x, grid.col, G)
+                                   for x in struct)
+                    contrib = ops.spmm(_coo(plan, *struct), T,
+                                       m=plan.meta.nS, **tk)
+        return out_cur[None, None, None]
+
+    dummy = jnp.zeros((grid.G, grid.G, grid.c, 1, 1), jnp.float32)
+    return _exec(grid, plan, body, A, dummy,
+                 P(grid.row, grid.col, grid.fiber),
+                 a_spec=replicated_spec(grid) if pre_gathered else None)
 
 
 def _advance(grid, cur, G):

@@ -1,0 +1,273 @@
+"""Distributed autodiff: dual-primitive VJPs for the api entrypoints.
+
+The paper's central structural result — every 1.5D/2.5D SpMM algorithm
+converts to an SDDMM algorithm with identical communication cost and
+identical input/output layouts (Table III) — is exactly the statement
+that the BACKWARD of each distributed primitive is the other primitive
+on the same ``DistProblem`` pack.  This module turns that into
+``jax.custom_vjp`` rules for the public ``api.sddmm`` / ``api.spmm`` /
+``api.fusedmm`` entrypoints, so ``jax.grad`` flows end-to-end through
+the distributed kernels and every future training workload (GAT layers,
+sampled-loss embeddings, ALS) sits on one differentiable layer.
+
+The duals, for ``R = S * (X Y^T)`` and ``out = R Y`` (FusedMMA):
+
+====================  =====================================================
+primal                backward (cotangent g on the output)
+====================  =====================================================
+``sddmm(X, Y)``       ``Xbar = SpMM(S(g*s), Y)``, ``Ybar = SpMM^T(S(g*s), X)``
+``spmm(v, Y)``        ``vbar = SDDMM_ones(g, Y)``, ``Ybar = SpMM^T(S(v), g)``
+``fusedmm(X, Y)``     ``Xbar, Ghat = FusedMM(S, g, Y)`` — the SAME cell —
+                      ``Ybar = SpMM^T(S(r), g) + SpMM^T(S(ghat), X)``
+====================  =====================================================
+
+where ``s`` are S's sample values, ``r`` the forward's sampled
+intermediate and ``Ghat = S * (g Y^T)``.  Every backward call runs on
+the SAME grid, family and elision cell as its forward, so forward and
+backward provably ship the same words per primitive
+(``costmodel.words_fusedmm_bwd``; measured against the compiled HLO in
+``tests/dist_scripts/check_grad_costs.py``).
+
+**Session replay.**  Threading the forward's ``api.Session`` through the
+VJP replays the fiber replication the forward already gathered: the
+Session is content-keyed, so the stationary operand ``Y`` arriving in
+the backward as a *new array object* (it round-trips through jax
+tracing) still hits the cache, and the transpose-SpMM that needs the
+forward's replicated ``X`` replays that gather too.  No dense factor is
+all-gathered twice in one training step — the training-step analogue of
+the paper's replication-reuse elision
+(``costmodel.SESSION_BWD_ELIDED``, docs/choosing.md).
+
+**Mechanics.**  The distributed executors are host-orchestrated (numpy
+packs in, host-assembled numpy out), so the primals and the VJP rules
+run them through ``jax.pure_callback`` — traceable from ``jax.grad`` /
+``jit`` while the actual communication schedules execute exactly as in
+the eager api.  Gradients are only defined with respect to the dense
+operands (and ``spmm``'s sample values); the sparsity STRUCTURE is not
+differentiable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+
+__all__ = ["sddmm", "spmm", "fusedmm"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class _Ctx:
+    """Non-differentiable closure of a VJP: the problem, the resolved
+    elision cell (forward and backward must run the SAME cell), and the
+    Session whose forward-gathered replication the backward replays."""
+    problem: api.DistProblem
+    elision: str = "none"
+    session: Optional[api.Session] = None
+
+
+def _callback(fn, shapes, *args):
+    out_types = tuple(jax.ShapeDtypeStruct(s, np.float32) for s in shapes)
+    return jax.pure_callback(fn, out_types, *args)
+
+
+def _f32(*arrs):
+    return tuple(np.asarray(a, np.float32) for a in arrs)
+
+
+# ---------------------------------------------------------------------------
+# SDDMM: R_vals = S * (X Y^T) sampled at nnz(S)  ->  (nnz,)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sddmm(ctx: _Ctx, X, Y):
+    def host(X, Y):
+        X, Y = _f32(X, Y)
+        return (ctx.problem.sddmm(X, Y, session=ctx.session).values(),)
+    (vals,) = _callback(host, ((ctx.problem.nnz,),), X, Y)
+    return vals
+
+
+def _sddmm_fwd(ctx, X, Y):
+    return _sddmm(ctx, X, Y), (X, Y)
+
+
+def _sddmm_bwd(ctx, res, g):
+    X, Y = res
+    prob = ctx.problem
+    m, n, r, nnz = prob.m, prob.n, prob.r, prob.nnz
+
+    def host(X, Y, g):
+        X, Y, g = _f32(X, Y, g)
+        gs = g * prob.vals                  # cotangent through the sampling
+        # the duals: grad-wrt-X is SpMM, grad-wrt-Y is SpMM-transpose,
+        # both with the cotangent-valued sparse matrix on S's pattern
+        # (value injection into the cached structure pack, no re-plan).
+        # With a session, Y's and X's forward gathers are replayed.
+        xbar = prob.spmm(Y, vals=gs, session=ctx.session)
+        ybar = prob.spmm_t(X, vals=gs, session=ctx.session)
+        return xbar, ybar
+
+    return _callback(host, ((m, r), (n, r)), X, Y, g)
+
+
+_sddmm.defvjp(_sddmm_fwd, _sddmm_bwd)
+
+
+def sddmm(problem: api.DistProblem, X, Y, *,
+          session: Optional[api.Session] = None):
+    """Differentiable distributed SDDMM: values of ``S * (X @ Y.T)`` at
+    nnz(S), in the problem's host COO order — the ``jax.custom_vjp``
+    form of :func:`repro.core.api.sddmm`.
+
+    ``X (m, r)``, ``Y (n, r)`` -> ``(nnz,)`` jnp array, differentiable
+    in both operands; each backward is the dual distributed primitive
+    (SpMM / SpMM-transpose) on the same pack, with the cotangent values
+    injected into the cached structure plan (no re-packing per step).
+    A ``session`` is threaded through BOTH passes: the forward fills it
+    with the operands' fiber replication and the backward's dual
+    SpMM/SpMM^T replay those gathers within the same step.
+    """
+    ctx = _Ctx(problem, session=session)
+    return _sddmm(ctx, jnp.asarray(X), jnp.asarray(Y))
+
+
+# ---------------------------------------------------------------------------
+# SpMM: out = S(vals) @ Y  ->  (m, r); differentiable in vals AND Y
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spmm(ctx: _Ctx, vals, Y):
+    def host(vals, Y):
+        vals, Y = _f32(vals, Y)
+        return (ctx.problem.spmm(Y, vals=vals, session=ctx.session),)
+    (out,) = _callback(host, ((ctx.problem.m, ctx.problem.r),), vals, Y)
+    return out
+
+
+def _spmm_fwd(ctx, vals, Y):
+    return _spmm(ctx, vals, Y), (vals, Y)
+
+
+def _spmm_bwd(ctx, res, g):
+    vals, Y = res
+    prob = ctx.problem
+    n, r, nnz = prob.n, prob.r, prob.nnz
+
+    def host(vals, Y, g):
+        vals, Y, g = _f32(vals, Y, g)
+        # grad-wrt-vals is the dual SDDMM: g_i . y_j sampled on S's
+        # pattern (unit sample values so the dots arrive unscaled);
+        # with a session, Y's forward gather is replayed here
+        vbar = prob.ones().sddmm(g, Y, session=ctx.session).values()
+        # grad-wrt-Y is the dual SpMM-transpose with the primal values
+        ybar = prob.spmm_t(g, vals=vals)
+        return vbar, ybar
+
+    return _callback(host, ((nnz,), (n, r)), vals, Y, g)
+
+
+_spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+def spmm(problem: api.DistProblem, vals, Y, *,
+         session: Optional[api.Session] = None):
+    """Differentiable distributed SpMM: ``out = S(vals) @ Y`` with the
+    sample values as a first-class differentiable input — the
+    ``jax.custom_vjp`` form of :func:`repro.core.api.spmm`.
+
+    ``vals (nnz,)`` in the problem's host COO order (pass
+    ``problem.vals`` for the baked values), ``Y (n, r)`` ->
+    ``(m, r)`` jnp array.  Differentiable in both: grad-wrt-vals is the
+    dual SDDMM on S's pattern, grad-wrt-Y the dual SpMM-transpose; the
+    changing values are injected into the cached structure plan (no
+    re-packing per step).  Making ``vals`` differentiable is what lets
+    a GAT layer train through its softmaxed attention values
+    (repro.apps.gat).  A ``session`` is threaded through both passes
+    (the forward's gather of Y replays in the backward's dual SDDMM on
+    the families that replicate it).
+    """
+    ctx = _Ctx(problem, session=session)
+    return _spmm(ctx, jnp.asarray(vals), jnp.asarray(Y))
+
+
+# ---------------------------------------------------------------------------
+# FusedMM: out = (S * (X Y^T)) @ Y  ->  (m, r)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fusedmm(ctx: _Ctx, X, Y):
+    def host(X, Y):
+        X, Y = _f32(X, Y)
+        out, _ = ctx.problem.fusedmm(X, Y, elision=ctx.elision,
+                                     session=ctx.session)
+        return (out,)
+    (out,) = _callback(host, ((ctx.problem.m, ctx.problem.r),), X, Y)
+    return out
+
+
+def _fusedmm_fwd(ctx, X, Y):
+    prob = ctx.problem
+
+    def host(X, Y):
+        X, Y = _f32(X, Y)
+        out, R = prob.fusedmm(X, Y, elision=ctx.elision,
+                              session=ctx.session)
+        return out, R.values()
+
+    out, r_vals = _callback(host, ((prob.m, prob.r), (prob.nnz,)), X, Y)
+    return out, (X, Y, r_vals)
+
+
+def _fusedmm_bwd(ctx, res, g):
+    X, Y, r_vals = res
+    prob = ctx.problem
+    m, n, r = prob.m, prob.n, prob.r
+
+    def host(X, Y, r_vals, g):
+        X, Y, r_vals, g = _f32(X, Y, r_vals, g)
+        # grad-wrt-X IS FusedMM on the same cell with g in X's slot:
+        #   Ghat = S * (g Y^T)   (the dual's sampled intermediate)
+        #   Xbar = Ghat @ Y      (the dual's output)
+        # With a Session the stationary Y's fiber gather is replayed
+        # from the forward (content-keyed hit) instead of re-shipped.
+        xbar, Ghat = prob.fusedmm(g, Y, elision=ctx.elision,
+                                  session=ctx.session)
+        ghat_vals = Ghat.values()
+        # grad-wrt-Y: two transpose-SpMMs on the same grid — R^T g
+        # (cotangent through the SpMM half) + Ghat^T X (through the
+        # SDDMM half); the second replays the forward's gather of X.
+        ybar = prob.spmm_t(g, vals=r_vals) \
+            + prob.spmm_t(X, vals=ghat_vals, session=ctx.session)
+        return xbar, ybar
+
+    return _callback(host, ((m, r), (n, r)), X, Y, r_vals, g)
+
+
+_fusedmm.defvjp(_fusedmm_fwd, _fusedmm_bwd)
+
+
+def fusedmm(problem: api.DistProblem, X, Y, *, elision: str = "auto",
+            session: Optional[api.Session] = None):
+    """Differentiable distributed FusedMM:
+    ``out = (S * (X @ Y.T)) @ Y`` — the ``jax.custom_vjp`` form of
+    :func:`repro.core.api.fusedmm` (output only; the sampled
+    intermediate is kept as a backward residual).
+
+    ``X (m, r)``, ``Y (n, r)`` -> ``(m, r)`` jnp array.  The backward
+    is built from dual primitives on the SAME pack and elision cell:
+    grad-wrt-X is this very FusedMM cell with the cotangent in X's
+    slot, grad-wrt-Y two transpose-SpMMs, so forward and backward ship
+    the same words per Table III (``costmodel.words_fusedmm_bwd``).
+    ``elision`` is resolved once here and pinned for both passes.
+    Thread the forward's ``session`` to replay its fiber replication in
+    the backward (no dense factor gathered twice per training step).
+    """
+    el = problem.resolve_elision(elision, session)
+    ctx = _Ctx(problem, elision=el, session=session)
+    return _fusedmm(ctx, jnp.asarray(X), jnp.asarray(Y))

@@ -230,36 +230,54 @@ def _gather_cols(x, fib):
     return jax.lax.all_gather(x, fib, axis=1, tiled=True)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def sddmm_s15(grid: Grid15, plan: PlanS15, A, B):
-    """R = S * (A @ B.T); R values return to home-block layout."""
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("pre_gathered",))
+def sddmm_s15(grid: Grid15, plan: PlanS15, A, B,
+              pre_gathered: tuple = (False, False)):
+    """R = S * (A @ B.T); R values return to home-block layout.
+
+    pre_gathered=(a, b): the corresponding dense operand arrives already
+    fiber-replicated (sharding ``replicated_spec(grid)``) and its
+    all-gather is skipped — the ``repro.core.api.Session`` reuse path."""
     lay, fib, L = grid.layer, grid.fiber, grid.L
+    pre_a, pre_b = pre_gathered
 
     def body(s, A_loc, B_loc):
         s = tuple(x[0, 0] for x in s)
-        T_A = _gather_cols(A_loc, fib)
-        T_B = _gather_cols(B_loc, fib)
+        T_A = A_loc if pre_a else _gather_cols(A_loc, fib)
+        T_B = B_loc if pre_b else _gather_cols(B_loc, fib)
         (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T_A, T_B, s,
                                                 L, lay)
         vals = s[2] * partial            # scale by original samples (home)
         return vals[None, None]
 
-    return _exec(grid, plan, body, A, B, P(lay, fib))
+    rspec = replicated_spec(grid)
+    return _exec(grid, plan, body, A, B, P(lay, fib),
+                 a_spec=rspec if pre_a else None,
+                 b_spec=rspec if pre_b else None)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def spmma_s15(grid: Grid15, plan: PlanS15, B):
-    """A = S @ B; output slabs stacked by phase: (L, c, T, mS, rc/p)."""
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("pre_gathered",))
+def spmma_s15(grid: Grid15, plan: PlanS15, B, pre_gathered: bool = False):
+    """A = S @ B; output slabs stacked by phase: (L, c, T, mS, rc/p).
+
+    pre_gathered=True: B's column slices arrive already fiber-replicated
+    (sharding ``replicated_spec(grid)``) and the all-gather is skipped —
+    the backward transpose-SpMM of a training step replays the forward's
+    gather through an ``api.Session`` this way (repro.core.grads).
+    """
     lay, fib, L = grid.layer, grid.fiber, grid.L
 
     def body(s, _A, B_loc):
         s = tuple(x[0, 0] for x in s)
-        T_B = _gather_cols(B_loc, fib)
+        T_B = B_loc if pre_gathered else _gather_cols(B_loc, fib)
         slabs = _spmm_round(grid, plan, T_B, s, L, lay)
         return slabs[None, None]
 
     dummy = jnp.zeros((1, grid.p), jnp.float32)
-    return _exec(grid, plan, body, dummy, B, P(lay, fib))
+    return _exec(grid, plan, body, dummy, B, P(lay, fib),
+                 b_spec=replicated_spec(grid) if pre_gathered else None)
 
 
 @functools.partial(jax.jit, static_argnums=(0,),

@@ -33,6 +33,14 @@ issued before the local kernel consumes the current chunks.  In the SpMM
 round the traveling output accumulates kernel results, so its own shift
 trails the kernel; the next contribution is instead precomputed from the
 double-buffered incoming B chunk while the output chunk is in flight.
+
+Transpose / backward plumbing: s25 needs no FusedMMB-style executor —
+SpMM^T runs spmma_s25 on the TRANSPOSED problem (S^T structure
+replicated on the same grid; registry `_S25._spmm_t_call`), and because
+nothing dense is replicated here, a training step's Session replay
+elides nothing: the backward ships identical words with or without one
+(costmodel.SESSION_BWD_ELIDED["s25"] == 0, asserted bitwise by
+tests/dist_scripts/check_grad_costs.py).
 """
 from __future__ import annotations
 

@@ -214,6 +214,25 @@ def erdos_renyi(m: int, n: int, nnz_per_row: int, seed: int = 0,
     return rows, cols, vals
 
 
+def random_problem(m: int, n: int, r: int, nnz_per_row: int, *,
+                   seed: int = 0, scale: float = 1.0):
+    """One seeded (rows, cols, vals, X, Y) problem bundle.
+
+    The Erdos-Renyi sparse matrix plus matching dense operands
+    ``X (m, r)`` / ``Y (n, r)`` in float32 — the setup every benchmark,
+    test and dist_script needs.  Deterministic in ``seed`` alone (the
+    dense operands draw from ``seed + 1``, preserving the historical
+    streams of ``benchmarks/common.er_problem``), so two call sites with
+    the same arguments see the same problem.  ``scale`` shrinks the
+    dense entries for iterative-solver initializations.
+    """
+    rows, cols, vals = erdos_renyi(m, n, nnz_per_row, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    X = (rng.standard_normal((m, r)) * scale).astype(np.float32)
+    Y = (rng.standard_normal((n, r)) * scale).astype(np.float32)
+    return rows, cols, vals, X, Y
+
+
 def rmat(scale: int, edge_factor: int = 16, seed: int = 0,
          a: float = 0.57, b: float = 0.19, c: float = 0.19,
          dtype=np.float32):

@@ -38,14 +38,21 @@ def main(argv=None):
     ap.add_argument("--nnz-row", type=int, default=32)
     ap.add_argument("--row-tile", type=int, default=256)
     ap.add_argument("--nz-block", type=int, default=256)
+    ap.add_argument("--mtx", default=None,
+                    help="Matrix Market file to dry-run instead of the "
+                         "Erdos-Renyi generator (repro.core.mtx)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
     mesh = make_production_mesh()          # 16 x 16 = 256 chips
     devices = np.asarray(mesh.devices).reshape(-1)
-    m = n = args.m
     r = args.r
-    rows, cols, vals = sparse.erdos_renyi(m, n, args.nnz_row, seed=0)
+    if args.mtx:
+        from repro.core.mtx import load_mtx
+        rows, cols, vals, (m, n) = load_mtx(args.mtx)
+    else:
+        m = n = args.m
+        rows, cols, vals = sparse.erdos_renyi(m, n, args.nnz_row, seed=0)
     nnz = len(vals)
 
     from repro.launch.dryrun import analyse, emit_result

@@ -16,11 +16,8 @@ from repro.core.grid import make_grid15, make_grid25
 from repro.roofline.hlo_parse import collective_summary
 
 m = n = 512; r = 64; nnz_row = 4
-rows, cols, vals = sparse.erdos_renyi(m, n, nnz_row, seed=0)
+rows, cols, vals, A, B = sparse.random_problem(m, n, r, nnz_row, seed=0)
 nnz = len(vals)
-rng = np.random.default_rng(1)
-A = np.asarray(rng.standard_normal((m, r)), np.float32)
-B = np.asarray(rng.standard_normal((n, r)), np.float32)
 W = 4  # bytes per word
 
 

@@ -15,10 +15,9 @@ assert len(jax.devices()) == 8
 def run(c, m=256, n=320, r=64, nnz_row=5, seed=0):
     grid = make_grid15(c)
     p = grid.p
-    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_row, seed=seed)
-    rng = np.random.default_rng(seed + 1)
-    A = jnp.asarray(rng.standard_normal((m, r)), jnp.float32)
-    B = jnp.asarray(rng.standard_normal((n, r)), jnp.float32)
+    rows, cols, vals, A, B = sparse.random_problem(m, n, r, nnz_row,
+                                                   seed=seed)
+    A, B = jnp.asarray(A), jnp.asarray(B)
     Sd = np.zeros((m, n), np.float32); Sd[rows, cols] = vals
     Ash = jax.device_put(A, grid.sharding(("layer", "fiber")))
     Bsh = jax.device_put(B, grid.sharding(("layer", "fiber")))

@@ -30,10 +30,9 @@ def identical(a, b, what):
 def run(c, backend, m=256, n=320, r=64, nnz_row=5, seed=0):
     ops.set_default_backend(backend)
     grid = make_grid15(c)
-    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_row, seed=seed)
-    rng = np.random.default_rng(seed + 1)
-    A = jnp.asarray(rng.standard_normal((m, r)), jnp.float32)
-    B = jnp.asarray(rng.standard_normal((n, r)), jnp.float32)
+    rows, cols, vals, A, B = sparse.random_problem(m, n, r, nnz_row,
+                                                   seed=seed)
+    A, B = jnp.asarray(A), jnp.asarray(B)
     Ash = jax.device_put(A, grid.sharding(("layer", "fiber")))
     Bsh = jax.device_put(B, grid.sharding(("layer", "fiber")))
     plan = d15.plan_d15(grid, rows, cols, vals, m, n, r,
@@ -62,10 +61,8 @@ def run(c, backend, m=256, n=320, r=64, nnz_row=5, seed=0):
 def run_d25(c, ndev, backend, m=256, n=256, r=64, nnz_row=5, seed=0):
     ops.set_default_backend(backend)
     grid = make_grid25(c, devices=jax.devices()[:ndev])
-    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_row, seed=seed)
-    rng = np.random.default_rng(seed + 1)
-    A = np.asarray(rng.standard_normal((m, r)), np.float32)
-    B = np.asarray(rng.standard_normal((n, r)), np.float32)
+    rows, cols, vals, A, B = sparse.random_problem(m, n, r, nnz_row,
+                                                   seed=seed)
     Ash = jax.device_put(jnp.asarray(A),
                          grid.sharding(("row", "fiber"), "col"))
     B_sk = d25.skew_b(grid, B)

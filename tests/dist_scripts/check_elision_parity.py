@@ -26,10 +26,7 @@ assert len(jax.devices()) == 8
 m = n = 256
 r = 64
 nnz_row = 5
-rows, cols, vals = sparse.erdos_renyi(m, n, nnz_row, seed=0)
-rng = np.random.default_rng(1)
-X = rng.standard_normal((m, r)).astype(np.float32)
-Y = rng.standard_normal((n, r)).astype(np.float32)
+rows, cols, vals, X, Y = sparse.random_problem(m, n, r, nnz_row, seed=0)
 
 # cells that run the exact unfused kernel sequence (communication elided,
 # arithmetic untouched) -> bitwise; the rest reassociate -> allclose

@@ -1,0 +1,183 @@
+"""Verify the BACKWARD pass ships the words the extended model says.
+
+For every registry (family, elision) cell on 8 devices, lowers the three
+programs the dual-primitive VJP of grads.fusedmm actually invokes — the
+dual FusedMM (same cell) and the two transpose-SpMMs — parses the
+partitioned HLO, and checks the measured per-device wire words against
+(a) an implementation-exact expectation (must match within 10%, i.e.
+x1.00) and (b) the paper-level ``costmodel.words_fusedmm_bwd`` row
+(constant-factor band, like check_comm_costs.py's forward check).
+
+Also asserts the Session-replayed backward — the forward's fiber
+replication replayed by the backward within one training step — ships
+STRICTLY fewer words than the naive backward on every family that
+replicates a dense operand (d15/s15/d25), and identical words on s25
+(nothing dense is replicated there; the model says so too).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+import numpy as np
+import jax
+
+from repro.core import api, costmodel, sparse
+from repro.roofline.hlo_parse import collective_summary
+
+assert len(jax.devices()) == 8
+
+m = n = 256
+r = 64
+rows, cols, vals, X, Y = sparse.random_problem(m, n, r, 4, seed=0)
+nnz = len(vals)
+p = 8
+W = 4  # bytes per word
+
+
+def wire_words(lowered):
+    txt = lowered.compile().as_text()
+    return collective_summary(txt)["total_wire_bytes"] / W
+
+
+def nbk(plan):
+    return plan.rows_local.shape[-2], plan.rows_local.shape[-1]
+
+
+def report(name, measured, expect_impl, paper_words):
+    ratio_i = measured / expect_impl if expect_impl else float("inf")
+    ratio_p = measured / paper_words if paper_words else float("inf")
+    print(f"{name:40s} measured={measured:10.0f} impl={expect_impl:10.0f} "
+          f"(x{ratio_i:5.2f})  paper={paper_words:10.0f} (x{ratio_p:5.2f})")
+    assert 0.9 <= ratio_i <= 1.1, f"{name}: impl-model mismatch x{ratio_i}"
+    assert 0.2 <= ratio_p <= 5.0, f"{name}: paper-model too far x{ratio_p}"
+
+
+def d15_components(prob, c):
+    L = p // c
+    mA, nB = m // p, n // p
+    plan_n = prob.plan("normal")
+    agrs = {"none": 2, "reuse": 1, "fused": 2}
+    shifts = {"none": 2 * L - 1, "reuse": 2 * L - 1, "fused": L - 1}
+
+    def fusedmm(el, sess):
+        ag = agrs[el] - (1 if sess else 0)   # the AG is replayed; an RS
+        return ag * (c - 1) * mA * r + shifts[el] * nB * r  # never is
+
+    def spmmt(sess):
+        ag = 0 if sess else 1
+        return ag * (c - 1) * mA * r + L * nB * r
+
+    return fusedmm, spmmt
+
+
+def s15_components(prob, c):
+    L = p // c
+    nb, k = nbk(prob.plan("normal"))
+    nbt, kt = nbk(prob.transposed().plan("normal"))
+    gather = (c - 1) * m * (r // p)
+    ags = {"none": 3, "reuse": 2, "fused": 2}
+
+    def fusedmm(el, sess):
+        # with a Session BOTH column-slab gathers are served from it;
+        # "none"'s honest mid-call re-gather stays on the wire
+        ag = (1 if el == "none" else 0) if sess else ags[el]
+        if el == "fused":
+            shift = (L - 1) * (2 * nb * k + nb) + L * nb * k \
+                + (L - 1) * nb * k
+        else:
+            shift = (2 * L - 1) * (3 * nb * k + nb)
+        return ag * gather + shift
+
+    def spmmt(sess):
+        ag = 0 if sess else 1
+        return ag * gather + (L - 1) * (3 * nbt * kt + nbt)
+
+    return fusedmm, spmmt
+
+
+def d25_components(prob, c):
+    G = prob.grid.G
+    mA, rW, nS = m // (G * c), r // G, n // (G * c)
+    nb, k = nbk(prob.plan("normal"))
+    nbr, kr = nbk(prob.plan("transpose"))        # (S^T)'s transpose pack
+    nbt, kt = nbk(prob.transposed().plan("transpose"))   # S's own
+    agrs = {"none": 2, "reuse": 1, "fused": 2}
+
+    def fusedmm(el, sess):
+        ag = agrs[el] - (1 if sess else 0)
+        pw = 3 * nb * k + nb
+        if el == "none":
+            shift = G * (pw + nS * rW) + (G - 1) * (pw + nS * rW)
+        elif el == "fused":
+            shift = (G - 1) * (2 * nb * k + nb) + G * nb * k \
+                + (G - 1) * nS * rW + (G - 1) * nb * k
+        else:
+            pwr = 3 * nbr * kr + nbr
+            shift = G * pwr + (G - 1) * nS * rW + G * nS * rW \
+                + (G - 1) * pwr
+        return ag * (c - 1) * mA * rW + shift
+
+    def spmmt(sess):
+        ag = 0 if sess else 1
+        pwt = 3 * nbt * kt + nbt
+        return ag * (c - 1) * mA * rW + G * nS * rW + (G - 1) * pwt
+
+    return fusedmm, spmmt
+
+
+def s25_components(prob, c):
+    G = prob.grid.G
+    mS, nS, rc = m // G, n // G, r // (G * c)
+    nb, k = nbk(prob.plan("normal"))
+    nbt, kt = nbk(prob.transposed().plan("normal"))
+
+    def fusedmm(el, sess):
+        fiber = 2 * (c - 1) / c * nb * k          # RS + AG, values only
+        if el == "reuse":
+            shift = (2 * G - 1) * mS * rc + (G - 1) * nS * rc
+        else:
+            shift = (2 * G - 1) * (mS * rc + nS * rc)
+        return fiber + shift                       # sess changes nothing
+
+    def spmmt(sess):
+        fiber = (c - 1) / c * nbt * kt             # values AG
+        return fiber + (G - 1) * (m // G) * rc + G * (n // G) * rc
+
+    return fusedmm, spmmt
+
+
+COMPONENTS = {"d15": d15_components, "s15": s15_components,
+              "d25": d25_components, "s25": s25_components}
+CASES = [("d15", 2), ("d15", 4), ("s15", 2), ("d25", 2), ("s25", 2)]
+
+for name, c in CASES:
+    prob = api.make_problem(rows, cols, vals, (m, n), r, algorithm=name,
+                            c=c, row_tile=32, nz_block=32)
+    fusedmm_model, spmmt_model = COMPONENTS[name](prob, c)
+    sess = api.Session()
+    w_spmmt = wire_words(prob.lower_spmm_t())
+    w_spmmt_sess = wire_words(prob.lower_spmm_t(session=sess))
+    for el in prob.alg.elisions:
+        cm_name = costmodel.ELISION_COST_NAME[(name, el)]
+        kw = dict(p=p, c=c, n=n, r=r, nnz=nnz)
+        w_fm = wire_words(prob.lower_fusedmm(el))
+        w_fm_sess = wire_words(prob.lower_fusedmm(el, session=sess))
+        # the VJP's backward = dual FusedMM + 2 transpose-SpMMs; with a
+        # Session the dual FusedMM and the Ghat^T X SpMM replay gathers
+        measured = w_fm + 2 * w_spmmt
+        measured_sess = w_fm_sess + w_spmmt + w_spmmt_sess
+        impl = fusedmm_model(el, False) + 2 * spmmt_model(False)
+        impl_sess = fusedmm_model(el, True) + spmmt_model(False) \
+            + spmmt_model(True)
+        paper = costmodel.words_fusedmm_bwd(cm_name, **kw).words
+        paper_sess = costmodel.words_fusedmm_bwd(cm_name, session=True,
+                                                 **kw).words
+        report(f"{cm_name}_bwd c={c}", measured, impl, paper)
+        report(f"{cm_name}_bwd+session c={c}", measured_sess, impl_sess,
+               paper_sess)
+        if name == "s25":
+            assert measured_sess == measured, (name, el)
+        else:
+            assert measured_sess < measured, (name, el)
+        # and the model agrees about the direction of the saving
+        assert (paper_sess < paper) == (name != "s25")
+
+print("ALL GRAD COSTS OK")

@@ -12,10 +12,8 @@ assert len(jax.devices()) == 8
 
 def run(c, ndev, m=256, n=256, r=64, nnz_row=5, seed=0):
     grid = make_grid25(c, devices=jax.devices()[:ndev])
-    rows, cols, vals = sparse.erdos_renyi(m, n, nnz_row, seed=seed)
-    rng = np.random.default_rng(seed + 1)
-    A = np.asarray(rng.standard_normal((m, r)), np.float32)
-    B = np.asarray(rng.standard_normal((n, r)), np.float32)
+    rows, cols, vals, A, B = sparse.random_problem(m, n, r, nnz_row,
+                                                   seed=seed)
     Sd = np.zeros((m, n), np.float32); Sd[rows, cols] = vals
     A_sk = s25.skew_dense(grid, A, along="row")
     B_sk = s25.skew_dense(grid, B, along="col")

@@ -18,10 +18,7 @@ from repro.kernels import ops, ref
 
 
 def _problem_data(m=64, n=64, r=8, k=4, seed=0):
-    rows, cols, vals = sparse.erdos_renyi(m, n, k, seed=seed)
-    rng = np.random.default_rng(seed + 1)
-    X = rng.standard_normal((m, r)).astype(np.float32)
-    Y = rng.standard_normal((n, r)).astype(np.float32)
+    rows, cols, vals, X, Y = sparse.random_problem(m, n, r, k, seed=seed)
     Sd = np.zeros((m, n), np.float32)
     Sd[rows, cols] = vals
     return rows, cols, vals, X, Y, Sd
@@ -194,6 +191,88 @@ def test_session_aware_elision_ranking():
     s25p = _make(rows, cols, vals, (64, 64), 8, algorithm="s25")
     assert s25p.resolve_elision("auto") == "reuse"
     assert s25p.resolve_elision("auto", api.Session()) == "reuse"
+
+
+@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
+def test_spmm_t_parity_and_vals_injection(name):
+    """spmm_t == S^T @ A on every family, with cotangent-style value
+    injection and a Session-replayed (bitwise-identical) path."""
+    rows, cols, vals, X, Y, Sd = _problem_data(seed=7)
+    prob = _make(rows, cols, vals, Sd.shape, 8, algorithm=name)
+    g = np.random.default_rng(11).standard_normal((64, 8)).astype(
+        np.float32)
+    np.testing.assert_allclose(prob.spmm_t(g), Sd.T @ g, rtol=2e-4,
+                               atol=2e-4)
+    v2 = (np.arange(len(vals)) * 0.01).astype(np.float32)
+    S2 = np.zeros(Sd.shape, np.float32)
+    S2[rows, cols] = v2
+    base = prob.spmm_t(g, vals=v2)
+    np.testing.assert_allclose(base, S2.T @ g, rtol=2e-4, atol=2e-4)
+    sess = api.Session()
+    np.testing.assert_array_equal(base, prob.spmm_t(g, vals=v2,
+                                                    session=sess))
+    np.testing.assert_array_equal(base, prob.spmm_t(g, vals=v2,
+                                                    session=sess))
+
+
+@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
+def test_injected_values_bitwise_vs_repack(name):
+    """spmm with ``vals=`` injects values into the cached structure pack
+    and must be BITWISE identical to a full re-pack via with_values —
+    the backward pass's hot path rides on this."""
+    rows, cols, vals, X, Y, Sd = _problem_data(seed=9)
+    prob = _make(rows, cols, vals, Sd.shape, 8, algorithm=name)
+    v2 = np.random.default_rng(13).standard_normal(len(vals)).astype(
+        np.float32)
+    want = prob.with_values(v2).spmm(Y)
+    got = prob.spmm(Y, vals=v2)
+    np.testing.assert_array_equal(want, got)
+    # structure planned once: injection must not add plan cache entries
+    n_plans = len(prob._plans)
+    prob.spmm(Y, vals=v2 * 2.0)
+    assert len(prob._plans) == n_plans
+    # transposed() is cached, and round-trips to the original
+    assert prob.transposed() is prob.transposed()
+    assert prob.transposed().transposed() is prob
+
+
+@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
+def test_sddmm_spmm_session_bitwise(name):
+    """The session paths of the single-kernel entrypoints are
+    bitwise-identical to the plain paths."""
+    rows, cols, vals, X, Y, Sd = _problem_data(seed=10)
+    prob = _make(rows, cols, vals, Sd.shape, 8, algorithm=name)
+    sess = api.Session()
+    base = prob.sddmm(X, Y).values()
+    np.testing.assert_array_equal(base,
+                                  prob.sddmm(X, Y, session=sess).values())
+    np.testing.assert_array_equal(base,
+                                  prob.sddmm(X, Y, session=sess).values())
+    base_s = prob.spmm(Y)
+    np.testing.assert_array_equal(base_s, prob.spmm(Y, session=sess))
+
+
+def test_session_content_keyed_replay():
+    """The Session hits on CONTENT, not identity: a copy of a cached
+    operand (what the backward pass hands the executors after a jax
+    round-trip) replays the replication instead of re-gathering."""
+    rows, cols, vals, X, Y, _ = _problem_data(seed=8)
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="d15")
+    sess = api.Session()
+    prob.fusedmm(X, Y, elision="reuse", session=sess)
+    misses = sess.misses
+    out2, _ = prob.fusedmm(X.copy(), Y.copy(), elision="reuse",
+                           session=sess)
+    assert sess.misses == misses and sess.hits >= 1
+    base, _ = prob.fusedmm(X, Y, elision="reuse")
+    np.testing.assert_array_equal(base, out2)
+    # mutation changes the content digest -> transparent re-replication
+    Ymut = Y.copy()
+    prob.fusedmm(X, Ymut, elision="reuse", session=sess)
+    Ymut *= 0.5
+    out_mut, _ = prob.fusedmm(X, Ymut, elision="reuse", session=sess)
+    want, _ = prob.fusedmm(X, Ymut, elision="reuse")
+    np.testing.assert_array_equal(want, out_mut)
 
 
 def test_with_values_and_transposed():

@@ -185,6 +185,116 @@ def test_session_cached_words_flip_to_reuse():
     assert sf < sr
 
 
+def test_words_spmm_is_half_the_unfused_fusedmm():
+    """FusedMM "none" is exactly two kernel rounds, so each family's
+    single-SpMM row must be half its no-elision FusedMM row (that is the
+    decomposition words_fusedmm_bwd builds on).  The one exception is
+    s25, whose 3 fiber value trips split 2 (SDDMM: partial RS + home
+    scatter) / 1 (SpMM: values AG) rather than 1.5/1.5 — the SpMM row
+    carries exactly one phi trip."""
+    kw = dict(p=16, c=4, n=1 << 14, r=64, nnz=1 << 16)
+    for fam in ("d15", "s15", "d25"):
+        sp = cm.words_spmm(fam, **kw).words
+        fm = cm.words_fusedmm(f"{fam}_no_elision", **kw).words
+        assert sp == pytest.approx(fm / 2, rel=1e-6), fam
+    import math as _m
+    p, c, n, r, nnz = (kw[k] for k in ("p", "c", "n", "r", "nnz"))
+    want = n * r * 2 / _m.sqrt(p * c) \
+        + (nnz / (n * r)) * n * r * (c - 1) / p
+    assert cm.words_spmm("s25", **kw).words == pytest.approx(want)
+
+
+def test_words_fusedmm_bwd_composition_and_session():
+    """bwd = dual FusedMM (same cell) + two transpose-SpMMs; a threaded
+    Session elides SESSION_BWD_ELIDED replication units, strictly
+    lowering the backward everywhere a dense operand is replicated."""
+    kw = dict(p=16, c=4, n=1 << 14, r=64, nnz=1 << 16)
+    for alg in cm.ALGORITHMS:
+        fam, _ = cm.FAMILY_ELISION[alg]
+        bwd = cm.words_fusedmm_bwd(alg, **kw)
+        want = cm.words_fusedmm(alg, **kw).words \
+            + 2 * cm.words_spmm(fam, **kw).words
+        assert bwd.words == pytest.approx(want, rel=1e-6), alg
+        cached = cm.words_fusedmm_bwd(alg, session=True, **kw)
+        saved = cm.SESSION_BWD_ELIDED[fam] * kw["n"] * kw["r"] \
+            * (kw["c"] - 1) / kw["p"]
+        assert cached.words == pytest.approx(want - saved, rel=1e-6), alg
+        if fam == "s25":
+            assert cached.words == bwd.words      # nothing replicated
+        else:
+            assert cached.words < bwd.words, alg
+
+
+def test_words_trainstep_fwd_plus_bwd():
+    kw = dict(p=16, c=4, n=1 << 14, r=64, nnz=1 << 16)
+    for alg in cm.ALGORITHMS:
+        step = cm.words_trainstep(alg, **kw)
+        want = cm.words_fusedmm(alg, **kw).words \
+            + cm.words_fusedmm_bwd(alg, **kw).words
+        assert step.words == pytest.approx(want, rel=1e-6), alg
+        # the forward always pays its gather (it fills the Session) —
+        # only the backward is credited
+        sess = cm.words_trainstep(alg, session=True, **kw)
+        bwd_saving = cm.words_fusedmm_bwd(alg, **kw).words \
+            - cm.words_fusedmm_bwd(alg, session=True, **kw).words
+        assert sess.words == pytest.approx(want - bwd_saving, rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.sampled_from([16, 64, 256]), phi=st.floats(0.01, 4.0))
+def test_property_optimal_c_trainstep_minimizes_trainstep_words(p, phi):
+    """The closed-form training-step c* must (approximately) minimize the
+    summed fwd+bwd words — the doubled dense traffic shifts it away from
+    Table IV's forward-only optimum."""
+    n, r = 1 << 18, 128
+    nnz = int(phi * n * r)
+    for alg in ("d15_no_elision", "d15_replication_reuse",
+                "d15_local_fusion", "s15_local_fusion",
+                "d25_replication_reuse", "s25_replication_reuse"):
+        cstar = cm.optimal_c_trainstep(alg, p=p, phi=phi)
+        cs = cm.feasible_cs(alg, p)
+        words = {c: cm.words_trainstep(alg, p=p, c=c, n=n, r=r,
+                                       nnz=nnz).words for c in cs}
+        best = min(words, key=words.get)
+        if 1.0 <= cstar <= p:
+            assert best / cstar < 4.0 and cstar / best < 4.0, (alg, cstar)
+
+
+def test_trainstep_coef_table_matches_word_counts_exactly():
+    """_TRAINSTEP_COEFS must reproduce words_trainstep EXACTLY at every
+    cell — a drifted coefficient (e.g. after a future words_fusedmm
+    change) fails here, not inside the wide property-test band."""
+    n, r = 1 << 14, 64
+    for alg, (a0, a_phi, b0, b_phi) in cm._TRAINSTEP_COEFS.items():
+        fam, _ = cm.FAMILY_ELISION[alg]
+        for p, c in ((16, 4), (64, 4), (16, 2)):
+            for nnz in (1 << 14, 1 << 18):
+                phi = nnz / (n * r)
+                a = a0 + a_phi * phi
+                b = b0 + b_phi * phi
+                lead = a / c if fam in ("d15", "s15") \
+                    else a / math.sqrt(p * c)
+                want = n * r * (lead + b * (c - 1) / p)
+                got = cm.words_trainstep(alg, p=p, c=c, n=n, r=r,
+                                         nnz=nnz).words
+                assert got == pytest.approx(want, rel=1e-9), (alg, p, c)
+
+
+def test_optimal_c_trainstep_shifts_from_forward_only():
+    """The documented example: d15 "reuse" moves from sqrt(2p) (fwd-only)
+    to sqrt(1.5p) for a training step, and a Session pushes it back up."""
+    p = 256
+    fwd = cm.optimal_c("d15_replication_reuse", p=p)
+    step = cm.optimal_c_trainstep("d15_replication_reuse", p=p)
+    assert fwd == pytest.approx(math.sqrt(2 * p))
+    assert step == pytest.approx(math.sqrt(1.5 * p))
+    assert step < fwd
+    sess = cm.optimal_c_trainstep("d15_replication_reuse", p=p,
+                                  session=True)
+    assert sess > step
+    assert sess == pytest.approx(math.sqrt(3 * p))
+
+
 def test_message_counts():
     c1 = cm.words_fusedmm("d15_no_elision", p=64, c=4, n=1 << 16, r=64,
                           nnz=1 << 18)

@@ -1,0 +1,181 @@
+"""Distributed autodiff: gradient parity vs jax.grad on the dense
+reference, for every registry (family, elision) cell (single device).
+
+The 8-device versions (plus measured backward wire words vs the
+extended cost model) live in tests/dist_scripts/check_grads.py and
+check_grad_costs.py (slow tier); here every cell degenerates onto a
+1-device grid, which exercises the full custom_vjp -> pure_callback ->
+executor -> dual-primitive path cheaply on every PR.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, costmodel, grads, sparse
+
+
+def _dev1():
+    return jax.devices()[:1]
+
+
+def _data(m=64, n=64, r=8, k=4, seed=0):
+    rows, cols, vals, X, Y = sparse.random_problem(m, n, r, k, seed=seed)
+    Sd = np.zeros((m, n), np.float32)
+    Sd[rows, cols] = vals
+    return rows, cols, vals, X, Y, Sd
+
+
+def _make(rows, cols, vals, shape, r, **kw):
+    return api.make_problem(rows, cols, vals, shape, r, devices=_dev1(),
+                            **kw)
+
+
+ELISION_CELLS = sorted((name, el) for name in costmodel.FAMILIES
+                       for el in api.ALGORITHMS[name].elisions)
+
+
+@pytest.mark.parametrize("name,el", ELISION_CELLS)
+def test_fusedmm_grad_matches_dense(name, el):
+    """jax.grad through the distributed FusedMM == jax.grad of the dense
+    formula, per registry cell — the backward (the SAME cell + two
+    transpose-SpMMs) must be a faithful VJP."""
+    rows, cols, vals, X, Y, Sd = _data()
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm=name)
+    W = np.random.default_rng(9).standard_normal(
+        (Sd.shape[0], X.shape[1])).astype(np.float32)
+    Sdj, Wj = jnp.asarray(Sd), jnp.asarray(W)
+
+    def dist_loss(X, Y):
+        return jnp.sum(grads.fusedmm(prob, X, Y, elision=el) * Wj)
+
+    def dense_loss(X, Y):
+        return jnp.sum(((Sdj * (X @ Y.T)) @ Y) * Wj)
+
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    np.testing.assert_allclose(dist_loss(Xj, Yj), dense_loss(Xj, Yj),
+                               rtol=2e-3, atol=2e-3)
+    gx, gy = jax.grad(dist_loss, argnums=(0, 1))(Xj, Yj)
+    wx, wy = jax.grad(dense_loss, argnums=(0, 1))(Xj, Yj)
+    np.testing.assert_allclose(gx, wx, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(gy, wy, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
+def test_sddmm_grad_matches_dense(name):
+    rows, cols, vals, X, Y, Sd = _data(seed=1)
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm=name)
+    w = np.random.default_rng(3).standard_normal(len(vals)).astype(
+        np.float32)
+    Sdj, wj = jnp.asarray(Sd), jnp.asarray(w)
+
+    def dist_loss(X, Y):
+        return jnp.sum(grads.sddmm(prob, X, Y) * wj)
+
+    def dense_loss(X, Y):
+        return jnp.sum((Sdj * (X @ Y.T))[rows, cols] * wj)
+
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    gx, gy = jax.grad(dist_loss, argnums=(0, 1))(Xj, Yj)
+    wx, wy = jax.grad(dense_loss, argnums=(0, 1))(Xj, Yj)
+    np.testing.assert_allclose(gx, wx, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(gy, wy, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", sorted(costmodel.FAMILIES))
+def test_spmm_vals_grad_matches_dense(name):
+    """The sample values are a first-class differentiable input — the
+    vals-grad is the dual SDDMM (what GAT's attention training needs)."""
+    rows, cols, vals, X, Y, Sd = _data(seed=2)
+    m, n = Sd.shape
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm=name)
+    W = np.random.default_rng(4).standard_normal(
+        (m, X.shape[1])).astype(np.float32)
+    Wj = jnp.asarray(W)
+
+    def dist_loss(v, Y):
+        return jnp.sum(grads.spmm(prob, v, Y) * Wj)
+
+    def dense_loss(v, Y):
+        S2 = jnp.zeros((m, n)).at[rows, cols].set(v)
+        return jnp.sum((S2 @ Y) * Wj)
+
+    vj, Yj = jnp.asarray(vals), jnp.asarray(Y)
+    gv, gy = jax.grad(dist_loss, argnums=(0, 1))(vj, Yj)
+    wv, wy = jax.grad(dense_loss, argnums=(0, 1))(vj, Yj)
+    np.testing.assert_allclose(gv, wv, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(gy, wy, rtol=2e-3, atol=2e-3)
+
+
+def test_grads_work_under_jit():
+    """The callback-backed VJPs must compose with jit (training loops
+    jit their step functions)."""
+    rows, cols, vals, X, Y, Sd = _data(seed=3)
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm="d15")
+
+    @jax.jit
+    def step(X, Y):
+        return jax.grad(
+            lambda X, Y: jnp.sum(grads.fusedmm(prob, X, Y)))(X, Y)
+
+    eager = jax.grad(
+        lambda X, Y: jnp.sum(grads.fusedmm(prob, X, Y)))(
+            jnp.asarray(X), jnp.asarray(Y))
+    jitted = step(jnp.asarray(X), jnp.asarray(Y))
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+
+
+def test_session_replay_bitwise_and_hits():
+    """Threading the forward's Session through the backward changes
+    nothing numerically, and the stationary operand's replication is
+    REPLAYED (content-keyed hits), not re-gathered."""
+    rows, cols, vals, X, Y, Sd = _data(seed=4)
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm="d15")
+
+    def loss(X, Y, session=None):
+        return jnp.sum(grads.fusedmm(prob, X, Y, elision="reuse",
+                                     session=session))
+
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    plain = jax.grad(loss, argnums=(0, 1))(Xj, Yj)
+    sess = api.Session()
+    cached = jax.grad(lambda X, Y: loss(X, Y, sess),
+                      argnums=(0, 1))(Xj, Yj)
+    np.testing.assert_array_equal(np.asarray(plain[0]),
+                                  np.asarray(cached[0]))
+    np.testing.assert_array_equal(np.asarray(plain[1]),
+                                  np.asarray(cached[1]))
+    # step 1: fwd fills Y, bwd's dual FusedMM replays it
+    assert sess.hits >= 1, (sess.hits, sess.misses)
+    h1 = sess.hits
+    # step 2, same stationary Y, fresh X: Y replays in fwd AND bwd
+    jax.grad(lambda X, Y: loss(X, Y, sess), argnums=(0, 1))(
+        Xj * 0.5, Yj)
+    assert sess.hits >= h1 + 2, (sess.hits, h1)
+
+
+def test_gat_layer_trains():
+    from repro.apps import gat
+    n, d = 64, 8
+    gp = gat.make_dist_graph(n, 4, d, seed=3, devices=_dev1())
+    rng = np.random.default_rng(3)
+    H = rng.standard_normal((n, d)).astype(np.float32)
+    p = gat.init_gat_layer(jax.random.PRNGKey(0), d, d)
+    # the trainable layer IS the distributed layer, differentiably
+    want = np.asarray(gat.gat_layer_distributed(gp, H, p))
+    got = np.asarray(gat.gat_layer_trainable(
+        gp, jnp.asarray(H), jnp.asarray(p.W), jnp.asarray(p.a1),
+        jnp.asarray(p.a2)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+    target = rng.standard_normal((n, d)).astype(np.float32) * 0.1
+    _, hist = gat.train_gat_distributed(gp, H, target, steps=6, lr=0.05,
+                                        verbose=False)
+    assert hist[-1] < hist[0], hist
+
+
+def test_embedding_sgd_converges():
+    from repro.apps import als
+    _, _, hist = als.train_embedding_distributed(
+        m=96, n=96, nnz_per_row=5, r=8, steps=12, lr=0.08,
+        devices=_dev1(), verbose=False)
+    assert hist[-1] < 0.5 * hist[0], hist
