@@ -84,6 +84,7 @@ def run(out, json_path=JSON_PATH):
     import jax
     import jax.numpy as jnp
     from repro.core import grads
+    from repro.distributed.elastic import StepMonitor
 
     for name in sorted(api.ALGORITHMS):
         prob = api.make_problem(rows, cols, vals, (M, N), R,
@@ -112,12 +113,20 @@ def run(out, json_path=JSON_PATH):
 
                 Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
                 step(Xj, Yj)                      # fill session + compile
-                rec["seconds"] = common.timeit(lambda: step(Xj, Yj),
-                                               iters=2)
+                # timed steps run under the straggler monitor so the
+                # bench records which steps blew past the rolling median
+                # (the production cordon signal, docs/robustness.md)
+                mon = StepMonitor(straggler_factor=3.0)
+                steps = iter(range(1 << 20))
+                rec["seconds"] = common.timeit(
+                    lambda: mon.timed(next(steps), step, Xj, Yj),
+                    iters=2)
+                rec["straggler_steps"] = list(mon.flagged)
                 out(common.csv_line(
                     f"dist.{name}.{elision}.trainstep", rec["seconds"],
                     f"c={prob.c};words_fwdbwd={words_step:.0f};"
-                    f"session={words_step_sess:.0f}"))
+                    f"session={words_step_sess:.0f};"
+                    f"stragglers={len(mon.flagged)}"))
             records.append(rec)
 
     path = common.emit_json(json_path, records,

@@ -33,7 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api, grads, sparse
+from repro.distributed import elastic, faults
 from repro.kernels import ops
+from repro.training import checkpoint
 
 
 @dataclasses.dataclass
@@ -247,7 +249,8 @@ def train_embedding_distributed(m=256, n=256, nnz_per_row=6, r=16,
                                 steps=20, lr=0.05, seed=0,
                                 algorithm="auto", c=None, devices=None,
                                 reg=1e-4, rows=None, cols=None, vals=None,
-                                verbose=True):
+                                monitor=None, ckpt_dir=None, ckpt_every=5,
+                                max_retries=2, verbose=True):
     """End-to-end distributed embedding training by SGD on the sampled
     loss — every step one distributed SDDMM forward plus its dual
     SpMM/SpMM-transpose backward on the same grid, with an
@@ -258,6 +261,18 @@ def train_embedding_distributed(m=256, n=256, nnz_per_row=6, r=16,
     :func:`repro.core.mtx.load_mtx`); by default a seeded Erdos-Renyi
     ratings matrix is generated.  Returns ``(X, Y, hist)`` with a
     decreasing loss history.
+
+    Robustness wiring (docs/robustness.md): every step runs under
+    ``elastic.run_step_resilient`` — a ``TransientFault`` invalidates the
+    Session's replication for this grid and retries; a ``DeviceLost``
+    re-plans onto a degraded mesh via :func:`api.degrade` before
+    retrying.  ``monitor`` (a :class:`elastic.StepMonitor`) times each
+    step for straggler flagging.  With ``ckpt_dir`` the factors are
+    checkpointed every ``ckpt_every`` steps alongside the problem's
+    :meth:`api.DistProblem.meta_dict`, and training resumes from the
+    latest committed step — rebuilding the packs via
+    :func:`api.problem_from_meta` (same mesh -> pinned family/c; changed
+    device count -> cost-model re-dispatch).
     """
     if rows is None:
         if cols is not None or vals is not None:
@@ -280,17 +295,61 @@ def train_embedding_distributed(m=256, n=256, nnz_per_row=6, r=16,
     Y = jnp.asarray(rng.standard_normal((n, r)) * 0.1, jnp.float32)
     targets = jnp.asarray(vals, jnp.float32)
     session = api.Session()
-    grad_fn = jax.value_and_grad(
-        lambda X, Y: sampled_loss(maskP, X, Y, targets, reg, session),
-        argnums=(0, 1))
+
+    def make_grad(prob):
+        return jax.value_and_grad(
+            lambda X, Y: sampled_loss(prob, X, Y, targets, reg, session),
+            argnums=(0, 1))
+
+    grad_fn = make_grad(maskP)
+
+    start = 0
+    if ckpt_dir is not None:
+        last = checkpoint.latest_step(ckpt_dir)
+        if last is not None:
+            meta = checkpoint.load_manifest(ckpt_dir, last).get("meta")
+            if meta is not None:
+                maskP = api.problem_from_meta(
+                    meta, rows, cols, np.ones_like(vals, np.float32),
+                    devices=devices)
+                grad_fn = make_grad(maskP)
+            tree = checkpoint.restore(ckpt_dir, last, {"X": X, "Y": Y})
+            X, Y = jnp.asarray(tree["X"]), jnp.asarray(tree["Y"])
+            start = last
+            if verbose:
+                print(f"embed: resumed step {last} on "
+                      f"{maskP.alg.name} p={maskP.p}")
+
+    def on_failure(attempt, e):
+        nonlocal maskP, grad_fn
+        e = faults.unwrap(e)   # typed fault may be XLA-laundered
+        session.invalidate(maskP)
+        if isinstance(e, faults.DeviceLost):
+            maskP = api.degrade(maskP, e.rank)
+            grad_fn = make_grad(maskP)
+            if verbose:
+                print(f"embed: lost rank {e.rank} -> re-planned onto "
+                      f"{maskP.alg.name} p={maskP.p}")
+
     hist = []
-    for it in range(steps):
-        val, (gx, gy) = grad_fn(X, Y)
+    for it in range(start, steps):
+        def step(X, Y):
+            if monitor is not None:
+                return monitor.timed(it, grad_fn, X, Y)
+            return grad_fn(X, Y)
+
+        val, (gx, gy) = elastic.run_step_resilient(
+            step, None, None, X, Y,
+            max_retries=max_retries, on_failure=on_failure)
         X = X - lr * gx
         Y = Y - lr * gy
         hist.append(float(val))
         if verbose:
             print(f"embed[{maskP.alg.name}] step {it}: loss {val:.3f}")
+        if ckpt_dir is not None and (it + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_dir, it + 1,
+                            {"X": np.asarray(X), "Y": np.asarray(Y)},
+                            meta=maskP.meta_dict())
     return X, Y, hist
 
 

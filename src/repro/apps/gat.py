@@ -43,7 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api, grads, sparse
+from repro.distributed import elastic, faults
 from repro.kernels import ops
+from repro.training import checkpoint
 
 
 def leaky_relu(x, slope=0.2):
@@ -257,6 +259,8 @@ def train_gat_distributed(graphP: api.DistProblem, H, target, *,
                           d_out: int | None = None, steps: int = 20,
                           lr: float = 0.05, n_heads: int = 1, seed: int = 0,
                           session: api.Session | None = None,
+                          monitor=None, ckpt_dir: str | None = None,
+                          ckpt_every: int = 5, max_retries: int = 2,
                           verbose: bool = True):
     """Gradient-based training of one distributed GAT layer.
 
@@ -264,6 +268,16 @@ def train_gat_distributed(graphP: api.DistProblem, H, target, *,
     (W, a1, a2), every kernel of every step a distributed primitive on
     ``graphP``'s grid.  Returns ((W, a1, a2), loss history); the history
     must be decreasing for any sane (lr, steps).
+
+    Robustness wiring mirrors ``train_embedding_distributed``
+    (docs/robustness.md): steps run under ``run_step_resilient`` with
+    the typed retryable set — ``TransientFault`` invalidates the
+    Session's replication for this grid and retries; ``DeviceLost``
+    re-plans ``graphP`` onto a degraded mesh.  ``monitor`` times steps
+    for straggler flagging; ``ckpt_dir`` checkpoints (W, a1, a2) plus
+    the problem's :meth:`api.DistProblem.meta_dict` every ``ckpt_every``
+    steps and resumes from the latest committed step, rebuilding packs
+    via :func:`api.problem_from_meta` on whatever mesh is available.
     """
     H = jnp.asarray(H, jnp.float32)
     target = jnp.asarray(target, jnp.float32)
@@ -273,18 +287,68 @@ def train_gat_distributed(graphP: api.DistProblem, H, target, *,
     p0 = init_gat_layer(jax.random.PRNGKey(seed), d_in, d_out)
     params = (jnp.asarray(p0.W), jnp.asarray(p0.a1), jnp.asarray(p0.a2))
 
-    def loss_fn(params):
-        W, a1, a2 = params
-        out = gat_layer_trainable(graphP, H, W, a1, a2, n_heads=n_heads,
-                                  session=session)
-        return jnp.mean((out - target) ** 2)
+    def make_grad(prob):
+        def loss_fn(params):
+            W, a1, a2 = params
+            out = gat_layer_trainable(prob, H, W, a1, a2, n_heads=n_heads,
+                                      session=session)
+            return jnp.mean((out - target) ** 2)
+        return jax.value_and_grad(loss_fn)
 
-    grad_fn = jax.value_and_grad(loss_fn)
+    grad_fn = make_grad(graphP)
+
+    start = 0
+    if ckpt_dir is not None:
+        last = checkpoint.latest_step(ckpt_dir)
+        if last is not None:
+            meta = checkpoint.load_manifest(ckpt_dir, last).get("meta")
+            if meta is not None:
+                # resume onto the mesh of the problem the caller handed
+                # us — not the process's full device set
+                devs = list(np.asarray(
+                    graphP.grid.mesh.devices).reshape(-1))
+                graphP = api.problem_from_meta(
+                    meta, graphP.rows, graphP.cols, graphP.vals,
+                    devices=devs)
+                grad_fn = make_grad(graphP)
+            tree = checkpoint.restore(
+                ckpt_dir, last, {"W": params[0], "a1": params[1],
+                                 "a2": params[2]})
+            params = tuple(jnp.asarray(tree[k]) for k in ("W", "a1", "a2"))
+            start = last
+            if verbose:
+                print(f"gat: resumed step {last} on "
+                      f"{graphP.alg.name} p={graphP.p}")
+
+    def on_failure(attempt, e):
+        nonlocal graphP, grad_fn
+        e = faults.unwrap(e)   # typed fault may be XLA-laundered
+        session.invalidate(graphP)
+        if isinstance(e, faults.DeviceLost):
+            graphP = api.degrade(graphP, e.rank)
+            grad_fn = make_grad(graphP)
+            if verbose:
+                print(f"gat: lost rank {e.rank} -> re-planned onto "
+                      f"{graphP.alg.name} p={graphP.p}")
+
     hist = []
-    for it in range(steps):
-        val, gparams = grad_fn(params)
+    for it in range(start, steps):
+        def step(params):
+            if monitor is not None:
+                return monitor.timed(it, grad_fn, params)
+            return grad_fn(params)
+
+        val, gparams = elastic.run_step_resilient(
+            step, None, None, params,
+            max_retries=max_retries, on_failure=on_failure)
         params = tuple(p - lr * g for p, g in zip(params, gparams))
         hist.append(float(val))
         if verbose:
             print(f"gat[{graphP.alg.name}] step {it}: loss {val:.5f}")
+        if ckpt_dir is not None and (it + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_dir, it + 1,
+                            {"W": np.asarray(params[0]),
+                             "a1": np.asarray(params[1]),
+                             "a2": np.asarray(params[2])},
+                            meta=graphP.meta_dict())
     return params, hist

@@ -46,8 +46,9 @@ import collections
 import contextlib
 import dataclasses
 import hashlib
+import time
 import weakref
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +56,13 @@ import numpy as np
 
 from repro.core import costmodel, d15, d25, s15, s25
 from repro.core.grid import make_grid15, make_grid25
+from repro.distributed import faults
 
 __all__ = [
     "ALGORITHMS", "Algorithm", "DistProblem", "Session", "SparseResult",
     "make_problem", "sddmm", "spmm", "spmm_t", "fusedmm", "activate",
+    "ElasticProblem", "RetryPolicy", "FaultRecoveryError",
+    "RETRYABLE_ERRORS", "problem_from_meta", "degrade",
 ]
 
 
@@ -162,6 +166,12 @@ class Algorithm:
         """Smallest multiple the dense operand width r must obey."""
         return 1
 
+    def schedule_events(self, prob, op: str, elision: str = "none"):
+        """This family's ordered (point, phase) fault boundaries for one
+        ``op`` round — the coordinates ``repro.distributed.faults``
+        scripts failures at (each family module exports its own)."""
+        return self._sched_mod.schedule_events(prob.grid, op, elision)
+
     # -- layouts -------------------------------------------------------------
     def shard_x(self, prob, X):
         """Place an (m, r) operand in this family's X input layout."""
@@ -257,6 +267,7 @@ class _D15(Algorithm):
     name = "d15"
     elisions = ("none", "reuse", "fused")
     auto_elisions = ("none", "reuse", "fused")
+    _sched_mod = d15
 
     def make_grid(self, c, devices):
         return make_grid15(c, devices=devices)
@@ -351,6 +362,7 @@ class _S15(Algorithm):
     name = "s15"
     elisions = ("none", "reuse", "fused")
     auto_elisions = ("fused", "reuse", "none")
+    _sched_mod = s15
 
     def make_grid(self, c, devices):
         return make_grid15(c, devices=devices)
@@ -442,6 +454,7 @@ class _D25(Algorithm):
     name = "d25"
     elisions = ("none", "reuse", "fused")
     auto_elisions = ("fused", "reuse", "none")
+    _sched_mod = d25
 
     def make_grid(self, c, devices):
         return make_grid25(c, devices=devices)
@@ -543,6 +556,7 @@ class _S25(Algorithm):
     # halves, and the stationary S ships no structure to elide.
     elisions = ("none", "reuse")
     auto_elisions = ("reuse", "none")
+    _sched_mod = s25
 
     def make_grid(self, c, devices):
         return make_grid25(c, devices=devices)
@@ -800,6 +814,45 @@ class DistProblem:
             self._transposed = tp
         return self._transposed
 
+    # -- elastic recovery ----------------------------------------------------
+    def replan(self, *, devices=None, algorithm: str = "auto",
+               c: int | None = None) -> "DistProblem":
+        """Re-plan this problem from its host COO onto a (possibly
+        different) device set — the elastic-recovery path after device
+        loss.  ``algorithm="auto"`` re-runs the Table-III cost-model
+        dispatch on the new mesh (family, elision candidates and
+        ``optimal_c`` may all change with p); a family name pins it.
+        ``devices=None`` re-plans on this problem's own mesh (not the
+        process's full device set).  Packs, posmaps and derived problems
+        are rebuilt lazily on first use, exactly as for a fresh
+        problem."""
+        if devices is None:
+            devices = list(np.asarray(self.grid.mesh.devices).reshape(-1))
+        return make_problem(self.rows, self.cols, self.vals,
+                            (self.m, self.n), self.r, algorithm=algorithm,
+                            c=c, devices=devices, row_tile=self.row_tile,
+                            nz_block=self.nz_block)
+
+    def coo_digest(self) -> str:
+        """Content digest of the host COO (structure + values) — ties a
+        checkpoint's pack metadata to the matrix it was planned for."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.ascontiguousarray(self.rows.astype(np.int64)))
+        h.update(np.ascontiguousarray(self.cols.astype(np.int64)))
+        h.update(np.ascontiguousarray(self.vals.astype(np.float32)))
+        h.update(np.int64([self.m, self.n, self.r]).tobytes())
+        return h.hexdigest()
+
+    def meta_dict(self) -> dict:
+        """JSON-able Session/pack metadata for distributed checkpoints:
+        enough to rebuild an equivalent problem (same mesh -> identical
+        family/c/packs; degraded mesh -> cost-model re-dispatch) via
+        :func:`problem_from_meta`."""
+        return dict(family=self.alg.name, p=self.p, c=self.c, m=self.m,
+                    n=self.n, r=self.r, nnz=self.nnz,
+                    row_tile=self.row_tile, nz_block=self.nz_block,
+                    coo_digest=self.coo_digest())
+
     # -- elision resolution --------------------------------------------------
     def resolve_elision(self, elision: str = "auto",
                         session: Optional["Session"] = None) -> str:
@@ -842,6 +895,7 @@ class DistProblem:
         ``session`` serves the dense operands' fiber replication from
         the across-call cache (bitwise-identical; d15/d25 gather X,
         s15 gathers both, s25 nothing)."""
+        faults.guard("sddmm", self)
         return self.alg.sddmm(self, X, Y, session=session)
 
     def spmm(self, Y, vals=None,
@@ -853,6 +907,7 @@ class DistProblem:
         injection, no re-planning (:meth:`injected_plan`).  ``session``
         serves s15's column-slab gather of Y; the other families' SpMM
         replicates nothing inbound."""
+        faults.guard("spmm", self)
         return self.alg.spmm(self, Y, vals=vals, session=session)
 
     def spmm_t(self, A, vals=None, session: Optional["Session"] = None
@@ -864,6 +919,7 @@ class DistProblem:
         runs this with the forward's sampled intermediate as the sparse
         operand (repro.core.grads).  ``session`` replays a cached fiber
         replication of A where the family gathers one (d15/d25/s15)."""
+        faults.guard("spmm_t", self)
         if vals is not None:
             vals = np.asarray(vals, np.float32)
         return self.alg.spmm_t(self, np.asarray(A, np.float32),
@@ -878,6 +934,7 @@ class DistProblem:
         "auto"); see the module-level :func:`fusedmm` for the full
         matrix and docs/algorithms.md for the per-cell word counts."""
         el = self.resolve_elision(elision, session)
+        faults.guard("fusedmm", self, elision=el)
         return self.alg.fusedmm(self, X, Y, el, session)
 
     def lower_fusedmm(self, elision: str = "auto",
@@ -977,6 +1034,22 @@ class Session:
         while len(self._cache) > self._max_entries:
             self._cache.popitem(last=False)
         return rep
+
+    def invalidate(self, problem: "DistProblem") -> int:
+        """Drop every cached replication bound to ``problem``'s grid.
+
+        The recovery path after an executor fault: a failed collective
+        leaves no trustworthy device state, and after a re-mesh the old
+        grid's entries could never be consumed again anyway (keys lead
+        with the grid identity).  Returns the number of evicted entries.
+        """
+        gid = id(problem.grid)
+        doomed = [k for k in self._cache if k[0] == gid]
+        for k in doomed:
+            del self._cache[k]
+        for k in [k for k in self._id_memo if k[0] == gid]:
+            del self._id_memo[k]
+        return len(doomed)
 
     def clear(self):
         self._cache.clear()
@@ -1092,6 +1165,216 @@ def fusedmm(problem: DistProblem, X, Y, elision: str = "auto",
     operand's fiber replication across calls, bitwise-identically.
     """
     return problem.fusedmm(X, Y, elision=elision, session=session)
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery: typed retry, backoff, degrade-and-re-plan
+# ---------------------------------------------------------------------------
+
+def _runtime_error_types():
+    # the classes a real multi-host jax job raises on device failure;
+    # import-guarded so the api layer never hard-depends on jaxlib layout
+    out = []
+    try:
+        from jax.errors import JaxRuntimeError
+        out.append(JaxRuntimeError)
+    except ImportError:
+        pass
+    try:
+        from jaxlib.xla_extension import XlaRuntimeError
+        if XlaRuntimeError not in out:
+            out.append(XlaRuntimeError)
+    except ImportError:
+        pass
+    return tuple(out)
+
+
+#: Errors worth retrying: scripted faults from the injection harness and
+#: the runtime's own device-failure surface.  Caller bugs (TypeError,
+#: ValueError, ...) are NOT in this set and propagate immediately.
+RETRYABLE_ERRORS: tuple = (faults.TransientFault,) + _runtime_error_types()
+
+
+class FaultRecoveryError(RuntimeError):
+    """Recovery budget exhausted: carries the per-attempt fault history
+    so post-mortems see every coordinate that fired."""
+
+    def __init__(self, msg: str, history: Optional[list] = None):
+        super().__init__(msg)
+        self.history = history or []
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Typed retry/backoff policy for the elastic executors.
+
+    Exponential backoff with *deterministic, seedable* jitter: the delay
+    sequence is a pure function of ``seed``, so a recovery trace replays
+    exactly (and tests inject ``sleep`` to run instantly).  The first
+    retry fires after ~``base_delay``; each subsequent delay multiplies
+    by ``factor`` and is capped at ``max_delay``; jitter stretches each
+    delay by up to ``jitter`` fractionally (decorrelates retry storms
+    across ranks without sacrificing replayability — seed by rank)."""
+    max_retries: int = 3
+    base_delay: float = 0.0          # seconds; 0 disables sleeping
+    factor: float = 2.0
+    max_delay: float = 2.0
+    jitter: float = 0.25
+    seed: int = 0
+    sleep: Callable[[float], None] = time.sleep
+
+    def delays(self):
+        """The policy's full backoff schedule (len == max_retries)."""
+        rng = np.random.default_rng(self.seed)
+        d = self.base_delay
+        for _ in range(self.max_retries):
+            yield min(d, self.max_delay) * (1.0 + self.jitter
+                                            * float(rng.uniform()))
+            d = d * self.factor if d else 0.0
+
+
+def problem_from_meta(meta: dict, rows, cols, vals, *,
+                      devices=None) -> DistProblem:
+    """Rebuild a checkpointed problem from its :meth:`DistProblem.meta_dict`.
+
+    The host COO is supplied by the caller (checkpoints store metadata,
+    not the matrix) and verified against the saved content digest — a
+    mismatched matrix raises ``ValueError`` rather than silently
+    producing wrong packs.  On a mesh with the checkpoint's device count
+    the saved (family, c) is pinned, so the rebuilt packs are identical;
+    on a different (degraded) mesh the cost model re-dispatches
+    ``algorithm="auto"``."""
+    devices = list(devices) if devices is not None else list(jax.devices())
+    prob = make_problem(rows, cols, vals, (meta["m"], meta["n"]),
+                        meta["r"],
+                        algorithm=(meta["family"]
+                                   if len(devices) == meta["p"] else "auto"),
+                        c=meta["c"] if len(devices) == meta["p"] else None,
+                        devices=devices, row_tile=meta["row_tile"],
+                        nz_block=meta["nz_block"])
+    digest = prob.coo_digest()
+    if digest != meta["coo_digest"]:
+        raise ValueError(
+            f"checkpointed problem metadata does not match the supplied "
+            f"COO (digest {digest} != saved {meta['coo_digest']}) — "
+            f"wrong matrix for this checkpoint")
+    return prob
+
+
+def degrade(problem: DistProblem, lost_rank: Optional[int] = None, *,
+            devices=None, algorithm: str = "auto") -> DistProblem:
+    """Re-plan ``problem`` onto a degraded mesh after device loss.
+
+    Drops ``lost_rank`` (flat schedule-order index) from the problem's
+    device list — or takes an explicit surviving ``devices`` — then
+    picks the **largest device count the cost model can dispatch**: the
+    planners' divisibility constraints rarely admit p-1 (64x64 blocks
+    don't split 7 ways), so the mesh shrinks to the nearest feasible
+    size, exactly like a pod losing a slice.  Raises ``ValueError`` with
+    the constraint trail if no device count <= the survivors works."""
+    if devices is None:
+        devs = list(np.asarray(problem.grid.mesh.devices).reshape(-1))
+        if lost_rank is not None:
+            if not 0 <= lost_rank < len(devs):
+                raise ValueError(f"lost_rank {lost_rank} outside the "
+                                 f"mesh's {len(devs)} devices")
+            devs = devs[:lost_rank] + devs[lost_rank + 1:]
+    else:
+        devs = list(devices)
+    errors = []
+    for p_new in range(len(devs), 0, -1):
+        try:
+            return problem.replan(devices=devs[:p_new],
+                                  algorithm=algorithm)
+        except ValueError as e:
+            errors.append(f"p={p_new}: {e}")
+    raise ValueError("no feasible degraded mesh for "
+                     f"({problem.m}x{problem.n}, r={problem.r}) on "
+                     f"{len(devs)} surviving devices:\n  "
+                     + "\n  ".join(errors))
+
+
+class ElasticProblem:
+    """Fault-tolerant facade over a :class:`DistProblem`.
+
+    Mirrors the four executor entrypoints; every call runs under the
+    typed retry loop:
+
+    * :class:`repro.distributed.faults.TransientFault` / runtime
+      ``XlaRuntimeError`` -> invalidate the Session entries bound to the
+      problem's grid (a failed collective leaves no trustworthy
+      replication state), back off per :class:`RetryPolicy`, retry the
+      round on the same mesh;
+    * :class:`repro.distributed.faults.DeviceLost` -> additionally drop
+      the lost rank and re-plan the problem from host COO onto the
+      largest feasible degraded mesh (:func:`degrade` — cost-model
+      re-dispatched), then retry there;
+    * anything else (caller bugs) propagates immediately — retrying a
+      ``TypeError`` can never succeed.
+
+    Results are host-assembled in problem COO order, so a recovered call
+    is **bitwise-identical** to a fault-free one on the same mesh, and
+    value-identical after a re-mesh wherever the accumulations are exact
+    (docs/robustness.md spells out the guarantee).  ``recoveries``
+    records every handled fault; :class:`FaultRecoveryError` (with that
+    history) is raised when ``policy.max_retries`` is exhausted.
+    """
+
+    def __init__(self, problem: DistProblem,
+                 session: Optional[Session] = None,
+                 policy: Optional[RetryPolicy] = None):
+        self.problem = problem
+        self.session = session
+        self.policy = policy or RetryPolicy()
+        self.recoveries: List[dict] = []
+
+    def _run(self, label: str, fn):
+        attempt = 0
+        delays = self.policy.delays()
+        while True:
+            try:
+                return fn(self.problem)
+            except RETRYABLE_ERRORS as e:
+                e = faults.unwrap(e)   # typed fault may be XLA-laundered
+                attempt += 1
+                rec = dict(op=label, attempt=attempt, error=repr(e),
+                           family=self.problem.alg.name,
+                           p=self.problem.p,
+                           coord=getattr(e, "coord", None))
+                self.recoveries.append(rec)
+                if self.session is not None:
+                    rec["evicted"] = self.session.invalidate(self.problem)
+                if attempt > self.policy.max_retries:
+                    raise FaultRecoveryError(
+                        f"{label} failed after {attempt} attempts "
+                        f"(budget {self.policy.max_retries}): {e}",
+                        history=list(self.recoveries)) from e
+                if isinstance(e, faults.DeviceLost):
+                    self.problem = degrade(self.problem, e.rank)
+                    rec["remeshed_to_p"] = self.problem.p
+                    rec["family_after"] = self.problem.alg.name
+                delay = next(delays, self.policy.max_delay)
+                if delay:
+                    self.policy.sleep(delay)
+
+    # -- the shared-signature executors, resiliently -------------------------
+    def sddmm(self, X, Y) -> SparseResult:
+        return self._run("sddmm",
+                         lambda p: p.sddmm(X, Y, session=self.session))
+
+    def spmm(self, Y, vals=None) -> np.ndarray:
+        return self._run("spmm", lambda p: p.spmm(Y, vals=vals,
+                                                  session=self.session))
+
+    def spmm_t(self, A, vals=None) -> np.ndarray:
+        return self._run("spmm_t",
+                         lambda p: p.spmm_t(A, vals=vals,
+                                            session=self.session))
+
+    def fusedmm(self, X, Y, elision: str = "auto"):
+        return self._run("fusedmm",
+                         lambda p: p.fusedmm(X, Y, elision=elision,
+                                             session=self.session))
 
 
 # ---------------------------------------------------------------------------

@@ -182,6 +182,38 @@ def replicated_spec(grid: Grid15) -> P:
     return P(grid.layer)
 
 
+def _phase_shift(n_phases: int, start: int = 0):
+    out = []
+    for t in range(start, start + n_phases):
+        out += [("phase", t), ("shift", t)]
+    return out
+
+
+def schedule_events(grid: Grid15, op: str, elision: str = "none"):
+    """Ordered (point, phase) fault boundaries of one executor round.
+
+    Mirrors this family's wire schedule (repro.distributed.faults): an
+    optional fiber all-gather, L phase/shift pairs per structure pass
+    (two passes for the unfused/reuse FusedMM cells), and a terminal
+    reduce-scatter where the output is replicated-out.
+    """
+    L = grid.L
+    if op == "sddmm":
+        return [("gather", 0)] + _phase_shift(L)
+    if op == "spmm":
+        return _phase_shift(L) + [("reduce", L - 1)]
+    if op == "spmm_t":                       # spmmb: AG in, B accumulates
+        return [("gather", 0)] + _phase_shift(L)
+    if op == "fusedmm":
+        if elision == "reuse":               # FusedMMB: single AG, 2 passes
+            return [("gather", 0)] + _phase_shift(2 * L)
+        if elision == "fused":               # one structure pass
+            return [("gather", 0)] + _phase_shift(L) + [("reduce", L - 1)]
+        return ([("gather", 0)] + _phase_shift(2 * L)
+                + [("reduce", 2 * L - 1)])
+    raise ValueError(f"unknown op {op!r}")
+
+
 def resolve_elision(elision: str, transpose: bool) -> str:
     """Resolve the uniform ``"auto"`` default *for the pack in hand*.
 

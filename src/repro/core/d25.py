@@ -174,6 +174,37 @@ def replicated_spec(grid: Grid25) -> P:
     return P(grid.row, grid.col)
 
 
+def schedule_events(grid: Grid25, op: str, elision: str = "none"):
+    """Ordered (point, phase) fault boundaries of one executor round.
+
+    Cannon schedule: an optional fiber all-gather of the replicated
+    operand, G phase/shift pairs per structure pass (two passes for the
+    unfused/reuse FusedMM cells), and a terminal fiber reduce-scatter
+    where the output is replicated-out (repro.distributed.faults).
+    """
+    G = grid.G
+
+    def passes(n, start=0):
+        out = []
+        for t in range(start, start + n * G):
+            out += [("phase", t), ("shift", t)]
+        return out
+
+    if op == "sddmm":
+        return [("gather", 0)] + passes(1)
+    if op == "spmm":
+        return passes(1) + [("reduce", G - 1)]
+    if op == "spmm_t":                       # spmmb on the S^T pack
+        return [("gather", 0)] + passes(1)
+    if op == "fusedmm":
+        if elision == "reuse":
+            return [("gather", 0)] + passes(2)
+        if elision == "fused":               # one structure pass
+            return [("gather", 0)] + passes(1) + [("reduce", G - 1)]
+        return [("gather", 0)] + passes(2) + [("reduce", 2 * G - 1)]
+    raise ValueError(f"unknown op {op!r}")
+
+
 def resolve_elision(elision: str, transpose: bool) -> str:
     """Resolve the uniform ``"auto"`` default *for the pack in hand*:
     reuse iff transpose-packed (FusedMMB), the one-structure-pass

@@ -139,6 +139,35 @@ def replicated_spec(grid: Grid15) -> P:
     return P(None, grid.layer)
 
 
+def schedule_events(grid: Grid15, op: str, elision: str = "none"):
+    """Ordered (point, phase) fault boundaries of one executor round.
+
+    s15 fiber-gathers dense *column slabs* (one gather event per dense
+    operand) and shifts the sparse structure through L phases; the
+    "fused" cell ships the structure once (one propagation round), the
+    other cells twice.  There is no terminal reduce — the output comes
+    home as phase-stacked slabs (repro.distributed.faults).
+    """
+    L = grid.L
+
+    def passes(n):
+        out = []
+        for t in range(n * L):
+            out += [("phase", t), ("shift", t)]
+        return out
+
+    if op == "sddmm":
+        return [("gather", 0), ("gather", 1)] + passes(1)
+    if op in ("spmm", "spmm_t"):     # spmm_t = spmm on the S^T problem
+        return [("gather", 0)] + passes(1)
+    if op == "fusedmm":
+        gathers = [("gather", 0), ("gather", 1)]
+        if elision == "none":        # B re-gathered between the rounds
+            gathers.append(("gather", 2))
+        return gathers + passes(1 if elision == "fused" else 2)
+    raise ValueError(f"unknown op {op!r}")
+
+
 def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
     """One propagation round accumulating partial sampled dots.
 

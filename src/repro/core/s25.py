@@ -309,6 +309,32 @@ def resolve_elision(elision: str) -> str:
     return "reuse"
 
 
+def schedule_events(grid: Grid25, op: str, elision: str = "none"):
+    """Ordered (point, phase) fault boundaries of one executor round.
+
+    s25 replicates the *structure*, never a dense operand — no gather
+    events.  Each round is G phase/shift pairs of traveling dense
+    chunks; the SDDMM half ends in the cross-fiber partial-sum
+    reduce-scatter (the very barrier that makes "fused" impossible
+    here), and FusedMM chains both halves (repro.distributed.faults).
+    """
+    G = grid.G
+
+    def passes(n, start=0):
+        out = []
+        for t in range(start, start + n * G):
+            out += [("phase", t), ("shift", t)]
+        return out
+
+    if op == "sddmm":
+        return passes(1) + [("reduce", G - 1)]
+    if op in ("spmm", "spmm_t"):     # spmm_t = spmm on the S^T problem
+        return passes(1)
+    if op == "fusedmm":              # SDDMM pass, RS barrier, SpMM pass
+        return passes(1) + [("reduce", G - 1)] + passes(1, start=G)
+    raise ValueError(f"unknown op {op!r}")
+
+
 @functools.partial(jax.jit, static_argnums=(0,),
                    static_argnames=("elision",))
 def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk,

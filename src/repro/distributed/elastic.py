@@ -4,19 +4,25 @@ Design for 1000+ nodes (CPU-simulated here, same control flow on TPU):
 
 * **Checkpoint/restart** — every step is restartable from the last
   committed checkpoint (atomic rename + _COMMITTED marker).  The launcher
-  wraps each step in ``run_step_resilient``: a transient failure triggers
-  restore-and-retry; repeated failures raise after ``max_retries``.
+  wraps each step in ``run_step_resilient``: a *retryable* failure
+  triggers restore-and-retry with exponential backoff; repeated failures
+  raise after ``max_retries``.  Only errors in :data:`RETRYABLE` are
+  retried — a retry loop that swallows every ``Exception`` turns caller
+  bugs (TypeError, shape mismatch) into silent infinite restores, so
+  non-transient errors propagate on the first attempt.
 
 * **Elastic re-mesh** — ``remesh``: given a new device count, recompute the
   mesh + shardings and device_put the restored pytrees.  Because all
   shardings derive from PartitionSpecs over named axes, a job can resume
   on a smaller/larger pod slice as long as divisibility holds (the
-  standard slice-resize flow).
+  standard slice-resize flow).  Whole-problem re-planning (degraded mesh,
+  re-dispatched algorithm family) lives in ``repro.core.api.degrade``.
 
 * **Straggler mitigation** — ``StepMonitor`` tracks a rolling median of
   step times; a step exceeding ``straggler_factor`` x median flags the
   step.  On real multi-host deployments the flagged host would be
-  cordoned and the job re-meshed; here the hook fires a callback (tested
+  cordoned and the job re-meshed; here the hook fires a callback and the
+  flagged step ids accumulate in ``monitor.flagged`` (tested
   deterministically with a fake clock).
 """
 from __future__ import annotations
@@ -29,6 +35,46 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.distributed.faults import TransientFault
+
+
+def _runtime_error_types():
+    """The runtime-side error types a production step can die with."""
+    types = []
+    try:
+        from jax.errors import JaxRuntimeError
+        types.append(JaxRuntimeError)
+    except ImportError:
+        pass
+    try:
+        from jaxlib.xla_extension import XlaRuntimeError
+        types.append(XlaRuntimeError)
+    except ImportError:
+        pass
+    return tuple(types)
+
+
+#: Errors worth a restore-and-retry: injected faults from the harness and
+#: runtime/collective failures from XLA.  Everything else is a caller bug.
+RETRYABLE = (TransientFault,) + _runtime_error_types()
+
+
+def backoff_delays(max_retries: int, *, base: float = 0.0,
+                   factor: float = 2.0, max_delay: float = 2.0,
+                   jitter: float = 0.25, seed: int = 0):
+    """Deterministic exponential-backoff schedule with seeded jitter.
+
+    Yields ``max_retries`` delays: ``min(base * factor**k, max_delay)``
+    scaled by ``1 + jitter * U[0,1)`` from ``np.random.default_rng(seed)``
+    — the same seed replays the same schedule, so retry timing is part of
+    the reproducible record, not noise.
+    """
+    rng = np.random.default_rng(seed)
+    d = base
+    for _ in range(max_retries):
+        yield min(d, max_delay) * (1.0 + jitter * float(rng.uniform()))
+        d = d * factor if d > 0 else base
+
 
 @dataclasses.dataclass
 class StepMonitor:
@@ -37,6 +83,8 @@ class StepMonitor:
     clock: Callable[[], float] = time.monotonic
     on_straggler: Optional[Callable[[int, float, float], None]] = None
     _times: list = dataclasses.field(default_factory=list)
+    #: step ids flagged as stragglers, in observation order
+    flagged: list = dataclasses.field(default_factory=list)
 
     def observe(self, step: int, seconds: float) -> bool:
         """Record a step time; returns True if flagged as straggler."""
@@ -45,6 +93,7 @@ class StepMonitor:
         if len(self._times) > self.window:
             self._times.pop(0)
         if med is not None and seconds > self.straggler_factor * med:
+            self.flagged.append(step)
             if self.on_straggler:
                 self.on_straggler(step, seconds, med)
             return True
@@ -67,22 +116,38 @@ def remesh(n_devices: int, model_parallel: int):
 
 
 def run_step_resilient(step_fn, save_fn, restore_fn, *args,
-                       max_retries: int = 2, on_failure=None):
+                       max_retries: int = 2, on_failure=None,
+                       retryable=RETRYABLE, backoff=None,
+                       sleep=time.sleep):
     """Execute one training step with restore-and-retry semantics.
 
-    step_fn raising (preempted host, failed collective) triggers
-    restore_fn() -> fresh (params, opt_state) and a retry.  This is the
-    per-step fault boundary the 1000-node deployment relies on; at that
-    scale step_fn failures come from the runtime as XlaRuntimeError.
+    step_fn dying with a *retryable* error (injected ``TransientFault``,
+    runtime ``XlaRuntimeError`` from a preempted host or failed
+    collective) triggers ``restore_fn() -> fresh args`` and a retry after
+    an exponential-backoff delay.  Non-retryable errors — TypeErrors,
+    shape mismatches, any caller bug — propagate immediately: retrying
+    them can only loop forever on the same deterministic failure.
+
+    ``backoff`` is an iterable of delays (default: ``backoff_delays``
+    with zero base delay, i.e. no sleeping in tests); ``sleep`` is
+    injectable for deterministic tests.  ``restore_fn`` may return None
+    to retry with the original args.
     """
+    delays = iter(backoff if backoff is not None
+                  else backoff_delays(max_retries))
     attempt = 0
     while True:
         try:
             return step_fn(*args)
-        except Exception as e:   # noqa: BLE001 — any device failure
+        except retryable as e:
             attempt += 1
             if on_failure:
                 on_failure(attempt, e)
             if attempt > max_retries:
                 raise
-            args = restore_fn()
+            d = next(delays, 0.0)
+            if d > 0:
+                sleep(d)
+            fresh = restore_fn() if restore_fn is not None else None
+            if fresh is not None:
+                args = fresh

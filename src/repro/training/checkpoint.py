@@ -2,7 +2,7 @@
 
 Layout:
   <dir>/step_000123/
-      manifest.json          {step, leaf paths, shapes, dtypes, mesh}
+      manifest.json          {step, leaf paths, shapes, dtypes, meta}
       shard_h000.npz         this host's param/opt leaves (gathered locally)
       _COMMITTED             written last — restore ignores uncommitted dirs
 
@@ -10,6 +10,22 @@ Writes go to a tmp dir + atomic rename; a crash mid-save never corrupts the
 latest checkpoint (restart-safe).  Restore rebuilds the pytree and
 device_puts with the current shardings, so a run may resume on a DIFFERENT
 mesh shape (elastic re-scale) as long as the global shapes divide.
+
+Errors are typed so callers can distinguish *absence* (nothing to resume
+from — start fresh) from *corruption* (on-disk state disagrees with its
+own manifest or with the requested tree — fail loudly, never train on
+garbage):
+
+* :class:`CheckpointMissing` — the directory/step doesn't exist or was
+  never committed;
+* :class:`CheckpointError` — committed state that fails validation
+  (missing shard, leaf-count drift, shape mismatch vs ``manifest.json``
+  or vs the restore target).
+
+``save(..., meta=...)`` embeds JSON metadata in the manifest — the
+distributed trainers store ``DistProblem.meta_dict()`` there so a resume
+can rebuild packs on the original mesh (pinned family/c) or re-dispatch
+onto a degraded one (docs/robustness.md).
 """
 from __future__ import annotations
 
@@ -21,13 +37,28 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """Committed checkpoint state that fails validation (corruption or a
+    restore target whose tree doesn't match what was saved)."""
+
+
+class CheckpointMissing(CheckpointError):
+    """No committed checkpoint at the requested location — absence, not
+    corruption; callers typically start fresh."""
+
+
 def _leaf_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
 
 
-def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
-    """Synchronous single-host save (per-host shards in multi-host runs)."""
+def save(ckpt_dir: str, step: int, tree, keep: int = 3,
+         meta: dict | None = None) -> str:
+    """Synchronous single-host save (per-host shards in multi-host runs).
+
+    ``meta`` (JSON-able) rides in the manifest — e.g. the distributed
+    problem/Session metadata of :meth:`repro.core.api.DistProblem.meta_dict`.
+    """
     name = f"step_{step:08d}"
     final = os.path.join(ckpt_dir, name)
     tmp = final + ".tmp"
@@ -42,6 +73,8 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
         "shapes": [list(np.shape(l)) for _, l in leaves],
         "dtypes": [str(np.asarray(l).dtype) for _, l in leaves],
     }
+    if meta is not None:
+        manifest["meta"] = meta
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
@@ -69,21 +102,67 @@ def latest_step(ckpt_dir: str):
             continue
         if not os.path.exists(os.path.join(ckpt_dir, d, "_COMMITTED")):
             continue   # crash mid-save: ignore
-        best = max(best or -1, int(d.split("_")[1]))
+        best = max(best if best is not None else -1, int(d.split("_")[1]))
     return best
 
 
-def restore(ckpt_dir: str, step: int, tree_like, shardings=None):
-    """Restore into the structure of ``tree_like`` (shapes must match)."""
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """The committed manifest of one step (typed errors, see module doc)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    assert os.path.exists(os.path.join(path, "_COMMITTED")), \
-        f"checkpoint {path} is not committed"
-    with np.load(os.path.join(path, "shard_h000.npz")) as z:
+    if not os.path.exists(os.path.join(path, "_COMMITTED")):
+        raise CheckpointMissing(f"no committed checkpoint at {path}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointError(f"{path} is committed but has no "
+                              "manifest.json — corrupt checkpoint") from e
+    except json.JSONDecodeError as e:
+        raise CheckpointError(f"{path}/manifest.json is not valid JSON "
+                              "— corrupt checkpoint") from e
+
+
+def restore(ckpt_dir: str, step: int, tree_like, shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    Every restored leaf is validated against the shapes recorded in
+    ``manifest.json`` (shard/manifest disagreement = corruption) AND
+    against ``tree_like``'s leaf shapes (mismatch = wrong restore
+    target); both raise :class:`CheckpointError` naming the offending
+    leaf path.  Absence raises :class:`CheckpointMissing`.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = load_manifest(ckpt_dir, step)
+    npz = os.path.join(path, "shard_h000.npz")
+    if not os.path.exists(npz):
+        raise CheckpointError(f"{path} is committed but shard_h000.npz "
+                              "is missing — corrupt checkpoint")
+    with np.load(npz) as z:
         leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    if len(leaves) != len(manifest["shapes"]):
+        raise CheckpointError(
+            f"{path}: shard holds {len(leaves)} leaves but the manifest "
+            f"records {len(manifest['shapes'])} — corrupt checkpoint")
     flat, tdef = jax.tree_util.tree_flatten(tree_like)
-    assert len(flat) == len(leaves), (len(flat), len(leaves))
+    if len(flat) != len(leaves):
+        raise CheckpointError(
+            f"restore target has {len(flat)} leaves but {path} saved "
+            f"{len(leaves)} (paths {manifest['paths'][:3]}...) — "
+            "tree structure mismatch")
     out = []
-    for ref, val in zip(flat, leaves):
+    for i, (ref, val, want, p_name) in enumerate(
+            zip(flat, leaves, manifest["shapes"], manifest["paths"])):
+        if list(np.shape(val)) != list(want):
+            raise CheckpointError(
+                f"{path}: leaf {i} ({p_name}) has shape "
+                f"{list(np.shape(val))} on disk but the manifest says "
+                f"{want} — corrupt checkpoint")
+        ref_shape = list(np.shape(ref)) if hasattr(ref, "shape") else None
+        if ref_shape is not None and ref_shape != list(want):
+            raise CheckpointError(
+                f"{path}: leaf {i} ({p_name}) was saved with shape "
+                f"{want} but the restore target expects {ref_shape} — "
+                "refusing to restore mismatched state")
         val = val.astype(ref.dtype) if hasattr(ref, "dtype") else val
         out.append(val)
     tree = tdef.unflatten(out)

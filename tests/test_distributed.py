@@ -111,3 +111,24 @@ def test_backward_wire_words_match_extended_model():
     cheaper wherever a dense operand is replicated."""
     out = run_script("check_grad_costs.py")
     assert "ALL GRAD COSTS OK" in out
+
+
+@pytest.mark.slow
+def test_fault_injected_recovery_parity():
+    """Every (family x op x elision x session) cell recovers from an
+    injected transient fault with bitwise-identical results; seeded
+    fault plans replay; a mid-training DeviceLost degrades 8 -> 4 and
+    matches a checkpoint-resume onto the same mesh bitwise.  Writes the
+    FAULTS_summary.json CI artifact."""
+    out = run_script("check_faults.py")
+    assert "ALL FAULTS OK" in out
+    assert "device-lost re-mesh ok" in out
+
+
+@pytest.mark.slow
+def test_remesh_8_to_4_bitwise():
+    """DistProblem.replan / api.degrade shrink 8 -> 4 mid-run with
+    bitwise-identical kernel results (integer-exact data); non-divisible
+    device counts fail with the constraint trail."""
+    out = run_script("check_remesh.py")
+    assert "ALL REMESH OK" in out

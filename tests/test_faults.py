@@ -1,0 +1,289 @@
+"""Single-device tests for the fault-injection harness and the elastic
+recovery layer (docs/robustness.md).
+
+The 8-device recovery-parity sweep lives in
+tests/dist_scripts/check_faults.py (run via test_distributed.py); these
+cover the host-side machinery — plans, controllers, retry policies,
+typed errors, metadata — plus single-mesh ElasticProblem recovery, which
+needs no multi-device mesh.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import api, sparse
+from repro.distributed import elastic, faults
+
+
+def _dev1():
+    # pin to one device: in-suite the process may expose 512 forced
+    # host devices (test_dryrun_unit), which no tiny problem can split
+    return jax.devices()[:1]
+
+
+def tiny_problem(seed=0, m=32, n=32, r=8):
+    rng = np.random.default_rng(seed)
+    rows, cols, _ = sparse.erdos_renyi(m, n, 3, seed=seed)
+    vals = rng.integers(1, 5, rows.shape[0]).astype(np.float32)
+    X = rng.integers(-3, 4, (m, r)).astype(np.float32)
+    Y = rng.integers(-3, 4, (n, r)).astype(np.float32)
+    prob = api.make_problem(rows, cols, vals, (m, n), r, devices=_dev1())
+    return prob, X, Y
+
+
+# --- plans and controllers --------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        faults.FaultSpec(kind="meteor_strike")
+    with pytest.raises(ValueError, match="op"):
+        faults.FaultSpec(op="gemm")
+    with pytest.raises(ValueError, match="point"):
+        faults.FaultSpec(point="handshake")
+
+
+def test_random_plan_replayable():
+    a = faults.FaultPlan.random(42, n_faults=5, p=8)
+    b = faults.FaultPlan.random(42, n_faults=5, p=8)
+    c = faults.FaultPlan.random(43, n_faults=5, p=8)
+    assert a.specs == b.specs
+    assert a.specs != c.specs
+
+
+def test_controller_fires_once_and_logs():
+    ctl = faults.FaultController(faults.FaultPlan.scripted(
+        faults.FaultSpec(op="sddmm", point="shift", phase=1, round=1)))
+    events = [("gather", 0), ("phase", 0), ("shift", 0),
+              ("phase", 1), ("shift", 1)]
+    ctl.guard("sddmm", "d15", 4, events)          # round 0: no match
+    with pytest.raises(faults.TransientFault) as ei:
+        ctl.guard("sddmm", "d15", 4, events)      # round 1: fires
+    assert ei.value.coord["point"] == "shift"
+    assert ei.value.coord["phase"] == 1
+    ctl.guard("sddmm", "d15", 4, events)          # consumed: no re-fire
+    s = ctl.summary()
+    assert s["rounds"] == {"sddmm": 3} and len(s["fired"]) == 1
+    assert not s["pending"]
+
+
+def test_controller_unreachable_spec_stays_pending():
+    ctl = faults.FaultController(faults.FaultPlan.scripted(
+        faults.FaultSpec(op="spmm", point="gather", rank=7)))
+    ctl.guard("spmm", "s25", 4, [("phase", 0), ("reduce", 0)])  # no gather
+    assert len(ctl.summary()["pending"]) == 1
+
+
+def test_inject_nests_and_restores():
+    assert faults.active() is None
+    with faults.inject(faults.FaultPlan.scripted()) as outer:
+        assert faults.active() is outer
+        with faults.inject(faults.FaultPlan.scripted()) as inner:
+            assert faults.active() is inner
+        assert faults.active() is outer
+    assert faults.active() is None
+
+
+def test_unwrap_recovers_laundered_fault():
+    plan = faults.FaultPlan.scripted(
+        faults.FaultSpec(kind="device_lost", rank=0))
+    with faults.inject(plan) as ctl:
+        with pytest.raises(faults.DeviceLost):
+            ctl.guard("sddmm", "d15", 1, [("gather", 0)])
+        laundered = RuntimeError("INTERNAL: ... CpuCallback error")
+        typed = faults.unwrap(laundered)
+        assert isinstance(typed, faults.DeviceLost) and typed.rank == 0
+        # reclaimed once: a second unrelated error passes through
+        assert faults.unwrap(laundered) is laundered
+    assert faults.unwrap(laundered) is laundered  # no armed controller
+
+
+# --- retry policies ---------------------------------------------------------
+
+def test_backoff_delays_deterministic_and_bounded():
+    a = list(elastic.backoff_delays(5, base=0.1, max_delay=0.3, seed=4))
+    b = list(elastic.backoff_delays(5, base=0.1, max_delay=0.3, seed=4))
+    assert a == b and len(a) == 5
+    assert all(d <= 0.3 * 1.25 for d in a)
+    assert a[0] < a[1]   # exponential growth until the cap
+    assert list(elastic.backoff_delays(3)) == [0.0, 0.0, 0.0]  # no base
+
+
+def test_retry_policy_delays_deterministic():
+    pol = api.RetryPolicy(max_retries=4, base_delay=0.5, seed=9)
+    assert list(pol.delays()) == list(
+        api.RetryPolicy(max_retries=4, base_delay=0.5, seed=9).delays())
+
+
+def test_run_step_resilient_backoff_sleeps():
+    slept = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise faults.TransientFault("hiccup")
+        return "done"
+
+    out = elastic.run_step_resilient(
+        flaky, None, None, max_retries=3,
+        backoff=iter([0.01, 0.02, 0.04]), sleep=slept.append)
+    assert out == "done" and slept == [0.01, 0.02]
+
+
+# --- ElasticProblem recovery on a single-device mesh ------------------------
+
+def test_elastic_problem_recovers_bitwise():
+    prob, X, Y = tiny_problem()
+    base = np.asarray(prob.sddmm(X, Y).values())
+    plan = faults.FaultPlan.scripted(faults.FaultSpec(op="sddmm"))
+    with faults.inject(plan) as ctl:
+        ep = api.ElasticProblem(prob, session=api.Session())
+        got = np.asarray(ep.sddmm(X, Y).values())
+    assert np.array_equal(got, base)
+    assert len(ep.recoveries) == 1 and len(ctl.fired) == 1
+    assert ep.recoveries[0]["coord"]["op"] == "sddmm"
+
+
+def test_elastic_problem_exhausts_budget():
+    prob, X, Y = tiny_problem()
+    plan = faults.FaultPlan.scripted(
+        *[faults.FaultSpec(op="spmm", round=i) for i in range(5)])
+    with faults.inject(plan):
+        ep = api.ElasticProblem(prob,
+                                policy=api.RetryPolicy(max_retries=2))
+        with pytest.raises(api.FaultRecoveryError) as ei:
+            ep.spmm(Y)
+    assert len(ei.value.history) == 3   # initial + 2 retries, all faulted
+
+
+def test_elastic_problem_propagates_caller_bugs():
+    prob, X, Y = tiny_problem()
+    ep = api.ElasticProblem(prob)
+    with pytest.raises((TypeError, ValueError)):
+        ep.spmm(None)            # wrong operand, not a device failure
+    assert not ep.recoveries
+
+
+def test_session_invalidate_is_grid_scoped():
+    prob, X, Y = tiny_problem(seed=0)
+    other, X2, Y2 = tiny_problem(seed=1)
+    sess = api.Session()
+    prob.fusedmm(X, Y, elision="reuse", session=sess)
+    other.fusedmm(X2, Y2, elision="reuse", session=sess)
+    n_before = len(sess._cache)
+    evicted = sess.invalidate(prob)
+    assert evicted >= 1
+    assert len(sess._cache) == n_before - evicted
+    # other problem's entries survive, and the evicted ones refill
+    out, _ = prob.fusedmm(X, Y, elision="reuse", session=sess)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(prob.fusedmm(X, Y, elision="reuse")[0]))
+
+
+# --- checkpoint metadata ----------------------------------------------------
+
+def test_meta_roundtrip_and_digest_guard():
+    prob, X, Y = tiny_problem()
+    meta = prob.meta_dict()
+    re = api.problem_from_meta(meta, prob.rows, prob.cols, prob.vals,
+                               devices=_dev1())
+    assert (re.alg.name, re.p, re.c) == (meta["family"], prob.p, prob.c)
+    bad = prob.vals.copy()
+    bad[0] += 1.0
+    with pytest.raises(ValueError, match="wrong matrix"):
+        api.problem_from_meta(meta, prob.rows, prob.cols, bad,
+                              devices=_dev1())
+
+
+def test_replan_same_mesh_bitwise():
+    prob, X, Y = tiny_problem()
+    re = prob.replan()
+    assert np.array_equal(np.asarray(re.sddmm(X, Y).values()),
+                          np.asarray(prob.sddmm(X, Y).values()))
+
+
+def test_schedule_events_cover_all_ops():
+    prob, _, _ = tiny_problem()
+    for op in faults.OPS:
+        els = prob.alg.elisions if op == "fusedmm" else ("none",)
+        for el in els:
+            ev = prob.alg.schedule_events(prob, op, el)
+            assert ev, f"{prob.alg.name}.{op}[{el}] has an empty schedule"
+            assert all(pt in faults.POINTS for pt, _ in ev)
+
+
+# --- trainer wiring ---------------------------------------------------------
+
+def test_trainer_monitor_checkpoint_and_fault(tmp_path):
+    """train_embedding_distributed drives the whole stack on one device:
+    StepMonitor observes every step, checkpoints carry meta_dict, an
+    injected transient fault is recovered, and the run resumes from the
+    committed step."""
+    from repro.apps import als
+    from repro.training import checkpoint
+
+    mon = elastic.StepMonitor()
+    d = str(tmp_path / "ck")
+    plan = faults.FaultPlan.scripted(
+        faults.FaultSpec(op="sddmm", round=1))
+    with faults.inject(plan) as ctl:
+        X, Y, hist = als.train_embedding_distributed(
+            m=32, n=32, nnz_per_row=3, r=4, steps=4, monitor=mon,
+            ckpt_dir=d, ckpt_every=2, devices=_dev1(), verbose=False)
+    assert len(ctl.fired) == 1 and len(hist) == 4
+    assert len(mon._times) >= 4          # every step (incl. retry) timed
+    meta = checkpoint.load_manifest(d, 4)["meta"]
+    assert meta["p"] == 1 and "coo_digest" in meta
+    # resume: nothing left to do, factors restored bitwise
+    X2, Y2, h2 = als.train_embedding_distributed(
+        m=32, n=32, nnz_per_row=3, r=4, steps=4, ckpt_dir=d,
+        devices=_dev1(), verbose=False)
+    assert h2 == [] and np.array_equal(np.asarray(X), np.asarray(X2))
+
+
+def test_gat_trainer_checkpoint_and_fault(tmp_path):
+    from repro.apps import gat
+    from repro.training import checkpoint
+
+    prob, _, _ = tiny_problem(m=32, n=32, r=4)
+    rng = np.random.default_rng(2)
+    H = rng.standard_normal((32, 6)).astype(np.float32)
+    target = rng.standard_normal((32, 4)).astype(np.float32)
+    d = str(tmp_path / "ck")
+    plan = faults.FaultPlan.scripted(faults.FaultSpec(op="spmm", round=0))
+    with faults.inject(plan) as ctl:
+        params, hist = gat.train_gat_distributed(
+            prob, H, target, steps=4, ckpt_dir=d, ckpt_every=2,
+            verbose=False)
+    assert len(ctl.fired) == 1 and len(hist) == 4
+    assert checkpoint.load_manifest(d, 4)["meta"]["family"] == prob.alg.name
+    params2, h2 = gat.train_gat_distributed(
+        prob, H, target, steps=4, ckpt_dir=d, verbose=False)
+    assert h2 == []
+    for a, b in zip(params, params2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- straggler monitor (fake clock) ----------------------------------------
+
+def test_step_monitor_timed_fake_clock():
+    t = {"now": 0.0}
+
+    def clock():
+        return t["now"]
+
+    flagged = []
+    mon = elastic.StepMonitor(straggler_factor=2.0, clock=clock,
+                              on_straggler=lambda s, sec, med:
+                              flagged.append((s, sec)))
+
+    def work(cost):
+        t["now"] += cost
+        return np.zeros(1)
+
+    for i in range(5):
+        mon.timed(i, work, 1.0)
+    mon.timed(5, work, 5.0)        # 5x the median: flagged
+    mon.timed(6, work, 1.0)
+    assert flagged == [(5, 5.0)]
+    assert mon.flagged == [5]

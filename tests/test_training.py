@@ -98,6 +98,42 @@ def test_checkpoint_keep_k(tmp_path):
     assert len(steps) == 2
 
 
+def test_checkpoint_missing_is_typed(tmp_path):
+    d = str(tmp_path / "ck")
+    with pytest.raises(ckpt.CheckpointMissing):
+        ckpt.restore(d, 3, {"x": jnp.ones(2)})
+    # absence is a subtype of CheckpointError, so one except clause works
+    assert issubclass(ckpt.CheckpointMissing, ckpt.CheckpointError)
+
+
+def test_checkpoint_restore_rejects_shape_mismatch(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"x": jnp.ones((4, 2))})
+    with pytest.raises(ckpt.CheckpointError, match="shape"):
+        ckpt.restore(d, 1, {"x": jnp.ones((4, 3))})
+    with pytest.raises(ckpt.CheckpointError, match="leaves"):
+        ckpt.restore(d, 1, {"x": jnp.ones((4, 2)), "y": jnp.ones(1)})
+
+
+def test_checkpoint_restore_rejects_corruption(tmp_path):
+    d = str(tmp_path / "ck")
+    path = ckpt.save(d, 1, {"x": jnp.ones(3)})
+    os.remove(os.path.join(path, "shard_h000.npz"))
+    with pytest.raises(ckpt.CheckpointError, match="shard"):
+        ckpt.restore(d, 1, {"x": jnp.ones(3)})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(ckpt.CheckpointError, match="JSON"):
+        ckpt.load_manifest(d, 1)
+
+
+def test_checkpoint_meta_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    meta = {"family": "d15", "p": 8, "coo_digest": "abc123"}
+    ckpt.save(d, 2, {"x": jnp.ones(2)}, meta=meta)
+    assert ckpt.load_manifest(d, 2)["meta"] == meta
+
+
 def test_exact_resume_reproduces_run(tmp_path):
     """Train 10 steps; vs train 5, checkpoint, restore, train 5 more."""
     cfg, params, state, pipe = small_setup(seed=2)
@@ -168,16 +204,30 @@ def test_straggler_monitor_flags():
 
 def test_resilient_step_retries():
     from repro.distributed.elastic import run_step_resilient
+    from repro.distributed.faults import TransientFault
     calls = {"n": 0}
 
     def flaky(x):
         calls["n"] += 1
         if calls["n"] < 3:
-            raise RuntimeError("preempted")
+            raise TransientFault("preempted")
         return x + 1
 
     out = run_step_resilient(flaky, None, lambda: (41,), 41, max_retries=5)
     assert out == 42 and calls["n"] == 3
+
+
+def test_resilient_step_does_not_retry_caller_bugs():
+    from repro.distributed.elastic import run_step_resilient
+    calls = {"n": 0}
+
+    def buggy(x):
+        calls["n"] += 1
+        raise TypeError("caller bug, not a device failure")
+
+    with pytest.raises(TypeError):
+        run_step_resilient(buggy, None, lambda: (41,), 41, max_retries=5)
+    assert calls["n"] == 1
 
 
 def test_synthetic_data_deterministic_and_sharded():
