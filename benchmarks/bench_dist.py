@@ -122,12 +122,73 @@ def run(out, json_path=JSON_PATH):
                     lambda: mon.timed(next(steps), step, Xj, Yj),
                     iters=2)
                 rec["straggler_steps"] = list(mon.flagged)
+                # cache health for the step: a mis-keyed session shows
+                # up as hits=0 right here in the artifact
+                rec["session_stats"] = sess.stats()
                 out(common.csv_line(
                     f"dist.{name}.{elision}.trainstep", rec["seconds"],
                     f"c={prob.c};words_fwdbwd={words_step:.0f};"
                     f"session={words_step_sess:.0f};"
-                    f"stragglers={len(mon.flagged)}"))
+                    f"stragglers={len(mon.flagged)};"
+                    f"session_hits={rec['session_stats']['hits']}"))
             records.append(rec)
+
+    # --- comm-mode rows: dense vs support-pruned wire words per cell ---
+    # Measured (compiled-HLO) and modeled words for both wire formats,
+    # on the ER problem (near-full supports: the crossover keeps most
+    # channels dense) and a seeded power-law problem (skewed supports:
+    # pruning beats the dense Table-III optimum outright).  The bf16
+    # rows cast the pruned payloads to half width; on this CPU mesh
+    # XLA's float-normalization legalizes the bf16 collectives back to
+    # f32 (docs/algorithms.md), so their measured words match "sparse"
+    # here and halve only on backends with native bf16 collectives.
+    from repro.roofline.hlo_parse import collective_summary
+
+    def wire_words(lowered):
+        txt = lowered.compile().as_text()
+        return collective_summary(txt)["total_wire_bytes"] / 4
+
+    pl_scale = 9
+    problems = [
+        ("er", rows, cols, vals, (M, N)),
+        ("powerlaw",
+         *sparse.powerlaw_problem(pl_scale, R, edge_factor=8, seed=1)[:3],
+         (1 << pl_scale, 1 << pl_scale)),
+    ]
+    for gen, grows, gcols, gvals, (gm, gn) in problems:
+        rho_row, rho_col = costmodel.support_density(grows, gcols, gm, gn)
+        for name in sorted(api.ALGORITHMS):
+            probs = {
+                co: api.make_problem(grows, gcols, gvals, (gm, gn), R,
+                                     algorithm=name, comm=co)
+                for co in ("dense", "sparse")}
+            prob_bf16 = api.make_problem(grows, gcols, gvals, (gm, gn), R,
+                                         algorithm=name, comm="sparse",
+                                         compress="bf16")
+            ck = dict(p=probs["dense"].p, c=probs["dense"].c, n=gn, r=R,
+                      nnz=len(gvals))
+            for elision in probs["dense"].alg.elisions:
+                cm_name = costmodel.ELISION_COST_NAME[(name, elision)]
+                model = {
+                    "dense": costmodel.words_fusedmm(cm_name, **ck).words,
+                    "sparse": costmodel.words_fusedmm_sparse(
+                        cm_name, m=gm, rho_row=rho_row, rho_col=rho_col,
+                        **ck).words}
+                meas = {co: wire_words(pr.lower_fusedmm(elision=elision))
+                        for co, pr in probs.items()}
+                meas["sparse_bf16"] = wire_words(
+                    prob_bf16.lower_fusedmm(elision=elision))
+                records.append(dict(
+                    kind="comm", generator=gen, name=name,
+                    elision=elision, c=probs["dense"].c, m=gm, n=gn, r=R,
+                    nnz=len(gvals), rho_row=rho_row, rho_col=rho_col,
+                    measured_words=meas, model_words=model))
+                out(common.csv_line(
+                    f"dist.comm.{gen}.{name}.{elision}",
+                    meas["sparse"] / max(meas["dense"], 1.0),
+                    f"dense={meas['dense']:.0f};"
+                    f"sparse={meas['sparse']:.0f};"
+                    f"bf16={meas['sparse_bf16']:.0f}"))
 
     path = common.emit_json(json_path, records,
                             meta=dict(bench="dist", m=M, n=N, r=R,

@@ -273,7 +273,8 @@ class _D15(Algorithm):
         return make_grid15(c, devices=devices)
 
     def make_plan(self, prob, orient):
-        kw = dict(row_tile=prob.row_tile, nz_block=prob.nz_block)
+        kw = dict(row_tile=prob.row_tile, nz_block=prob.nz_block,
+                  comm=prob.comm, compress=prob.compress)
         if orient == "normal":
             return d15.plan_d15(prob.grid, prob.rows, prob.cols, prob.vals,
                                 prob.m, prob.n, prob.r, **kw)
@@ -371,7 +372,8 @@ class _S15(Algorithm):
         assert orient == "normal", "s15 keeps S stationary-by-row"
         return s15.plan_s15(prob.grid, prob.rows, prob.cols, prob.vals,
                             prob.m, prob.n, prob.r,
-                            row_tile=prob.row_tile, nz_block=prob.nz_block)
+                            row_tile=prob.row_tile, nz_block=prob.nz_block,
+                            comm=prob.comm, compress=prob.compress)
 
     def min_r_multiple(self, grid):
         return grid.p
@@ -460,7 +462,8 @@ class _D25(Algorithm):
         return make_grid25(c, devices=devices)
 
     def make_plan(self, prob, orient):
-        kw = dict(row_tile=prob.row_tile, nz_block=prob.nz_block)
+        kw = dict(row_tile=prob.row_tile, nz_block=prob.nz_block,
+                  comm=prob.comm, compress=prob.compress)
         if orient == "normal":
             return d25.plan_d25(prob.grid, prob.rows, prob.cols, prob.vals,
                                 prob.m, prob.n, prob.r, **kw)
@@ -565,7 +568,8 @@ class _S25(Algorithm):
         assert orient == "normal", "s25 replicates the structure"
         return s25.plan_s25(prob.grid, prob.rows, prob.cols, prob.vals,
                             prob.m, prob.n, prob.r,
-                            row_tile=prob.row_tile, nz_block=prob.nz_block)
+                            row_tile=prob.row_tile, nz_block=prob.nz_block,
+                            comm=prob.comm, compress=prob.compress)
 
     def min_r_multiple(self, grid):
         return grid.G * grid.c
@@ -655,6 +659,14 @@ class DistProblem:
     r: int
     row_tile: int = 32
     nz_block: int = 32
+    #: wire format for the dense-operand movements: "dense" ships full
+    #: fibers/chunks, "sparse" support-prunes each channel at plan time
+    #: (crossover-guarded per channel; bitwise-identical results either
+    #: way).  Resolved from "auto" in :func:`make_problem`.
+    comm: str = "dense"
+    #: optional payload compression for the PRUNED sends ("bf16" or
+    #: None); dense-mode channels ignore it.
+    compress: Optional[str] = None
     _plans: dict = dataclasses.field(default_factory=dict)
     _derived_r: dict = dataclasses.field(default_factory=dict)
     _posmaps: dict = dataclasses.field(default_factory=dict)
@@ -694,8 +706,12 @@ class DistProblem:
         for ANY value vector on this structure."""
         if orient not in self._posmaps:
             posvals = np.arange(1, self.nnz + 1, dtype=np.float32)
+            # packing is deterministic in the coordinates and identical
+            # across comm modes, so the position plan skips the (pure
+            # overhead here) support-set construction
             tmp = dataclasses.replace(
-                self, vals=posvals, _plans={}, _posmaps={},
+                self, vals=posvals, comm="dense", compress=None,
+                _plans={}, _posmaps={},
                 _derived_r={}, _ones=None, _transposed=None)
             pv = self.alg.make_plan(tmp, orient).vals
 
@@ -831,7 +847,8 @@ class DistProblem:
         return make_problem(self.rows, self.cols, self.vals,
                             (self.m, self.n), self.r, algorithm=algorithm,
                             c=c, devices=devices, row_tile=self.row_tile,
-                            nz_block=self.nz_block)
+                            nz_block=self.nz_block, comm=self.comm,
+                            compress=self.compress)
 
     def coo_digest(self) -> str:
         """Content digest of the host COO (structure + values) — ties a
@@ -851,6 +868,7 @@ class DistProblem:
         return dict(family=self.alg.name, p=self.p, c=self.c, m=self.m,
                     n=self.n, r=self.r, nnz=self.nnz,
                     row_tile=self.row_tile, nz_block=self.nz_block,
+                    comm=self.comm, compress=self.compress,
                     coo_digest=self.coo_digest())
 
     # -- elision resolution --------------------------------------------------
@@ -982,10 +1000,14 @@ class Session:
 
     @staticmethod
     def _key(problem: "DistProblem", arr, slot: str):
+        # comm mode is part of the key: replication state cached for a
+        # dense-wire problem is never served to a sparse-wire one (the
+        # pre-gathered layouts coincide today, but the key must not bake
+        # that implementation detail in)
         a = np.asarray(arr)
         digest = hashlib.blake2b(a.tobytes(), digest_size=16).hexdigest()
-        return (id(problem.grid), problem.alg.name, slot, a.shape,
-                str(a.dtype), digest)
+        return (id(problem.grid), problem.alg.name, problem.comm, slot,
+                a.shape, str(a.dtype), digest)
 
     @staticmethod
     def _cheap_fp(arr):
@@ -1005,7 +1027,8 @@ class Session:
         The memo holds only WEAK references (no operand pinning) and
         evicts LRU per entry; an id is validated by dereferencing the
         weakref, so id recycling after gc cannot alias a dead entry."""
-        memo_k = (id(problem.grid), problem.alg.name, slot, id(arr))
+        memo_k = (id(problem.grid), problem.alg.name, problem.comm, slot,
+                  id(arr))
         memo = self._id_memo.get(memo_k)
         fp = self._cheap_fp(arr)
         if memo is not None and memo[0]() is arr and memo[2] == fp:
@@ -1051,6 +1074,15 @@ class Session:
             del self._id_memo[k]
         return len(doomed)
 
+    def stats(self) -> dict:
+        """Cache-health counters: ``hits``/``misses`` since construction
+        plus current LRU ``entries`` and the ``capacity`` bound — what
+        ``bench_dist`` surfaces per training-step row so a mis-keyed
+        session (0 hits) is visible in the benchmark artifact."""
+        return dict(hits=self.hits, misses=self.misses,
+                    entries=len(self._cache),
+                    capacity=self._max_entries)
+
     def clear(self):
         self._cache.clear()
         self._id_memo.clear()
@@ -1066,14 +1098,32 @@ class Session:
 def make_problem(rows, cols, vals, shape: Tuple[int, int], r: int, *,
                  algorithm: str = "auto", c: int | None = None,
                  devices=None, row_tile: int = 32,
-                 nz_block: int = 32) -> DistProblem:
+                 nz_block: int = 32, comm: str = "dense",
+                 compress: Optional[str] = None) -> DistProblem:
     """Build a DistProblem, dispatching the algorithm by the cost model.
 
     algorithm="auto" ranks every feasible (family, elision, c) by the
     paper's Table-III bandwidth formulas; a family name pins the family
     and picks its best feasible c (or the caller's explicit ``c``).
+
+    ``comm`` selects the wire format for the dense-operand movements:
+    "dense" (the Table-III baseline), "sparse" (support-pruned sends,
+    bitwise-identical results), or "auto" — prune when S's row/column
+    support density clears :data:`costmodel.SPARSE_CROSSOVER`
+    (:func:`costmodel.choose_comm`; docs/choosing.md).  ``compress``
+    ("bf16" or None) additionally halves the pruned payloads with
+    error-feedback handled by the training loop (lossy — NOT
+    bitwise-identical; comm="sparse" alone is exact).
     """
     m, n = shape
+    if comm not in ("auto", "dense", "sparse"):
+        raise ValueError(f"comm must be 'auto'|'dense'|'sparse', "
+                         f"got {comm!r}")
+    if compress not in (None, "bf16"):
+        raise ValueError(f"compress must be None or 'bf16', "
+                         f"got {compress!r}")
+    if comm == "auto":
+        comm = costmodel.choose_comm(rows, cols, m, n)
     devices = list(devices) if devices is not None else list(jax.devices())
     p = len(devices)
     families = costmodel.FAMILIES if algorithm == "auto" else (algorithm,)
@@ -1086,7 +1136,8 @@ def make_problem(rows, cols, vals, shape: Tuple[int, int], r: int, *,
     grid = alg.make_grid(choice.c, devices)
     return DistProblem(alg, grid, np.asarray(rows), np.asarray(cols),
                        np.asarray(vals, np.float32), m, n, r,
-                       row_tile=row_tile, nz_block=nz_block)
+                       row_tile=row_tile, nz_block=nz_block,
+                       comm=comm, compress=compress)
 
 
 def sddmm(problem: DistProblem, X, Y,
@@ -1251,7 +1302,9 @@ def problem_from_meta(meta: dict, rows, cols, vals, *,
                                    if len(devices) == meta["p"] else "auto"),
                         c=meta["c"] if len(devices) == meta["p"] else None,
                         devices=devices, row_tile=meta["row_tile"],
-                        nz_block=meta["nz_block"])
+                        nz_block=meta["nz_block"],
+                        comm=meta.get("comm", "dense"),
+                        compress=meta.get("compress"))
     digest = prob.coo_digest()
     if digest != meta["coo_digest"]:
         raise ValueError(

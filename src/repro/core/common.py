@@ -128,6 +128,140 @@ def choose_row_tile(height: int, want: int = 256) -> int:
     return t
 
 
+# ---------------------------------------------------------------------------
+# Support-pruned communication (comm="sparse")
+# ---------------------------------------------------------------------------
+#
+# A dense *input* operand movement (fiber all-gather, traveling A/B chunk)
+# only needs to deliver the rows the receiver's nonzeros actually read —
+# the pack's row/col support.  The planners precompute, per channel, the
+# per-(device, offset/phase) send and receive index sets, padded to a
+# static width; the executors replace the dense collective with one
+# ``ppermute`` of the packed rows per offset, scattered into a zero
+# buffer at the receiver.  Rows outside the support stay zero but are
+# never read by the local kernels, so results are bitwise-identical to
+# the dense schedule.  Traveling *accumulators* (SpMMB/FusedMMB outputs,
+# partial-dot buffers) and reduce-scatters are never pruned: they carry
+# partial sums whose exact FP addition order must be preserved.
+
+@dataclasses.dataclass(frozen=True)
+class SparseMeta:
+    """Static per-plan record of which channels ship pruned (and how wide).
+
+    ``gather``/``gather_b`` — the fiber all-gather(s) of a dense operand;
+    ``shift``/``shift_b`` — the traveling dense input chunks.  A flag is
+    False when the channel does not exist on this grid (c == 1, L == 1)
+    or when the crossover heuristic found the support too dense to win
+    (``costmodel.SPARSE_CROSSOVER``); the executor then keeps the dense
+    schedule for that channel.  ``wg``/``wg_b`` are the padded per-offset
+    gather widths, ``ws``/``ws_b`` the per-phase padded shift widths —
+    the exact payload heights shipped, which the nnz-dependent cost
+    model is asserted against at 1.00x.
+    """
+    gather: bool = False
+    gather_b: bool = False
+    shift: bool = False
+    shift_b: bool = False
+    wg: int = 0
+    wg_b: int = 0
+    ws: Tuple[int, ...] = ()
+    ws_b: Tuple[int, ...] = ()
+    compress: object = None     # None | "bf16" — wire format of pruned sends
+
+
+def pad_sets(sets: np.ndarray, width: int, fill: int) -> np.ndarray:
+    """Stack an object-array of sorted index sets into (..., width) int32.
+
+    Senders pad with 0 (a junk row that the receiver drops); receivers
+    pad with an out-of-bounds index (scatter ``mode="drop"``).
+    """
+    sets = np.asarray(sets, dtype=object)
+    out = np.full(sets.shape + (width,), fill, np.int32)
+    for idx in np.ndindex(sets.shape):
+        s = np.asarray(sets[idx], np.int32)
+        out[idx][:s.shape[0]] = s
+    return out
+
+
+def _wire(x, compress):
+    if compress == "bf16":
+        from repro.training import compression
+        return compression.to_bf16(x)
+    return x
+
+
+def _unwire(x, dtype, compress):
+    # NB: on the CPU test backend XLA's float-normalization legalizes
+    # bf16 collectives to f32 (converts fused at the sender), so host
+    # meshes see the bf16 *rounding* but not the byte saving; backends
+    # with native bf16 collectives ship the half-width payload.
+    if compress == "bf16":
+        from repro.training import compression
+        return compression.from_bf16(x, dtype)
+    return x
+
+
+def pruned_permute(x, send_idx, recv_idx, perm, axis_name, out_rows, *,
+                   out=None, compress=None):
+    """One support-pruned send: ship ``x[send_idx]``, scatter at ``recv_idx``.
+
+    ``send_idx``/``recv_idx`` are equal-width per-device index vectors
+    (aligned element-wise by the planner); receiver padding points at
+    ``out_rows`` (out of bounds) and is dropped.  Returns a dense
+    ``(out_rows, x.shape[1])`` buffer — zeros (or ``out``) outside the
+    support.
+    """
+    payload = _wire(x[send_idx, :], compress)
+    arrived = _unwire(jax.lax.ppermute(payload, axis_name, perm),
+                      x.dtype, compress)
+    if out is None:
+        out = jnp.zeros((out_rows, x.shape[1]), x.dtype)
+    return out.at[recv_idx, :].set(arrived, mode="drop")
+
+
+def pruned_gather_rows(x, send_tuple, recv_tuple, axis_name, size, *,
+                       compress=None):
+    """Support-pruned row-tiled fiber all-gather: (slot, r) -> (slot*size, r).
+
+    The own slab lands whole (free); every other slab arrives as one
+    pruned ppermute per offset d, placed at absolute row indices.
+    """
+    slot = x.shape[0]
+    idx = jax.lax.axis_index(axis_name)
+    out = jnp.zeros((slot * size, x.shape[1]), x.dtype)
+    out = jax.lax.dynamic_update_slice(out, x, (idx * slot, 0))
+    for d in range(1, size):
+        perm = [(i, (i + d) % size) for i in range(size)]
+        out = pruned_permute(x, send_tuple[d - 1], recv_tuple[d - 1], perm,
+                             axis_name, slot * size, out=out,
+                             compress=compress)
+    return out
+
+
+def pruned_gather_cols(x, send_tuple, recv_idx, axis_name, size, *,
+                       compress=None):
+    """Support-pruned column-slab fiber all-gather: (m, w) -> (m, w*size).
+
+    Slabs are full-height, so the receiver's row support ``recv_idx`` is
+    one set per device (the union over its resident blocks), independent
+    of the source — senders ship ``x[recv's rows]`` per offset.
+    """
+    m, w = x.shape
+    idx = jax.lax.axis_index(axis_name)
+    out = jnp.zeros((m, w * size), x.dtype)
+    out = jax.lax.dynamic_update_slice(out, x, (0, idx * w))
+    for d in range(1, size):
+        perm = [(i, (i + d) % size) for i in range(size)]
+        payload = _wire(x[send_tuple[d - 1], :], compress)
+        arrived = _unwire(jax.lax.ppermute(payload, axis_name, perm),
+                          x.dtype, compress)
+        slab = jnp.zeros((m, w), x.dtype).at[recv_idx, :].set(
+            arrived, mode="drop")
+        out = jax.lax.dynamic_update_slice(out, slab,
+                                           (0, ((idx - d) % size) * w))
+    return out
+
+
 @dataclasses.dataclass(frozen=True, eq=False)   # identity semantics:
 # numpy arrays inside static pytree metadata must not be __eq__-compared
 class BlockMeta:

@@ -216,6 +216,164 @@ def words_spmm(family: str, *, p: int, c: int, n: int, r: int,
     return CommCost(f"{family}_spmm", p, c, words, msgs, phi)
 
 
+# ---------------------------------------------------------------------------
+# Sparsity-aware communication (comm="sparse") — nnz-dependent words
+# ---------------------------------------------------------------------------
+#
+# Support pruning ships only the rows of a dense input operand that the
+# receiver's nonzeros read (SpComm3D's observation, PAPERS.md).  The
+# pruned channels per family are exactly the implementation's
+# (docs/algorithms.md "Sparse communication"):
+#
+#   d15: fiber AG of the replicated operand; traveling B input chunks
+#        (both FusedMM rounds where B travels — never the traveling
+#        FusedMMB/SpMMB *output* accumulator, whose FP order is exact)
+#   s15: both fiber all-gathers of the dense column slabs (the COO pack
+#        shifts are already 3 words/nnz — nothing dense travels)
+#   d25: fiber AG of A; traveling B input chunks on the Cannon rows
+#   s25: traveling A and B input r-chunks (nothing dense is replicated;
+#        fiber traffic is values-only and stays exact)
+#
+# Reduce-scatters and traveling accumulators always stay dense.  The
+# formulas below take the measured support densities rho_row/rho_col
+# (fraction of rows/cols of S with at least one nonzero) and price each
+# pruned channel at rho x its dense words; they are per-processor and
+# channel-exact against the implementation up to padding (per-offset
+# supports pad to the max over devices) and locality (per-device block
+# supports are smaller than the global rho), so measured wire words land
+# slightly *below* these estimates on skewed matrices.
+
+SPARSE_CROSSOVER = 0.9
+"""Per-channel fallback threshold: a channel ships pruned only when its
+padded support words are below this fraction of its dense words —
+otherwise index+pad overhead makes pruning a loss and the planner keeps
+the dense schedule for that channel (recorded in the plan's SparseMeta)."""
+
+
+def support_density(rows, cols, m: int, n: int):
+    """(rho_row, rho_col): fraction of rows/cols of S that are nonempty.
+
+    The cheap host-side statistic ``comm="auto"`` decides from — an upper
+    bound on every per-device support density (a device's support is the
+    union over only *its* blocks' nonzeros).
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    rho_r = (np.unique(rows).size / m) if m else 1.0
+    rho_c = (np.unique(cols).size / n) if n else 1.0
+    return float(rho_r), float(rho_c)
+
+
+def choose_comm(rows, cols, m: int, n: int) -> str:
+    """The ``comm="auto"`` rule: prune when *either* support is sparse.
+
+    One sparse side is enough — each channel falls back to dense
+    independently (SPARSE_CROSSOVER), so a matrix with full column
+    support but skewed row support still wins on its gather channels.
+    See docs/choosing.md.
+    """
+    rho_r, rho_c = support_density(rows, cols, m, n)
+    return "sparse" if min(rho_r, rho_c) <= SPARSE_CROSSOVER else "dense"
+
+
+def words_fusedmm_sparse(algorithm: str, *, p: int, c: int, m: int, n: int,
+                         r: int, nnz: int, rho_row: float,
+                         rho_col: float) -> CommCost:
+    """Per-processor FusedMM words under comm="sparse" (channel-exact).
+
+    Mirrors the implementation's channel inventory (module comment):
+    dense-channel terms match :func:`words_fusedmm`'s Table-III rows at
+    rho = 1; pruned channels scale by the support density of the axis
+    that indexes them (the gathered operand by ``rho_row`` of S — its
+    rows index the replicated matrix — and the traveling B chunks by
+    ``rho_col``).  ``m``/``n`` are S's dims (the existing dense model
+    assumes square; this one does not need to).
+    """
+    _check(p, c)
+    phi = nnz / (n * r)
+    L = p // c
+    G = int(math.isqrt(p // c)) if p // c else 1
+    ra, rb = rho_row, rho_col
+    if algorithm.startswith("d15"):
+        ag = (c - 1) * (m // p) * r          # one dense AG/RS unit
+        rnd = max(L - 1, 0) * (n // p) * r   # one dense-B trip round
+        out = L * (n // p) * r               # FusedMMB output trips
+        words = {"d15_no_elision": ag * (1 + ra) + 2 * rnd * rb,
+                 "d15_replication_reuse": ag * ra + rnd * rb + out,
+                 "d15_local_fusion": ag * (1 + ra) + rnd * rb,
+                 }[algorithm]
+        msgs = 2 * (c - 1) + {"d15_no_elision": 2 * max(L - 1, 0),
+                              "d15_replication_reuse": max(L - 1, 0) + L,
+                              "d15_local_fusion": max(L - 1, 0)}[algorithm]
+    elif algorithm.startswith("s15"):
+        gth_a = (c - 1) * m * (r // p)       # one dense column-slab AG
+        gth_b = (c - 1) * n * (r // p)
+        shift = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz).words \
+            - n * r * (2 if algorithm == "s15_no_elision" else 1) * (c - 1) / p
+        n_gb = 2 if algorithm == "s15_no_elision" else 1
+        words = shift + gth_a * ra + n_gb * gth_b * rb
+        msgs = (1 + n_gb) * (c - 1) + 2 * p / c
+    elif algorithm.startswith("d25"):
+        mA, nS, rW = m // (G * c), n // (G * c), r // G
+        ag = (c - 1) * mA * rW               # AG unit (RS same, dense)
+        rnd = max(G - 1, 0) * nS * rW        # one dense-B trip round
+        out = G * nS * rW
+        coo = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz).words
+        # strip the dense model's AG/RS and dense-chunk terms, keep COO
+        dense_units = {"d25_no_elision": (2, 2), "d25_local_fusion": (2, 1),
+                       "d25_replication_reuse": (1, 1)}[algorithm]
+        coo -= dense_units[0] * n * r * (c - 1) / p
+        coo -= (dense_units[1] * G * nS * rW
+                if algorithm != "d25_replication_reuse" else G * nS * rW)
+        coo = max(coo, 0.0)
+        words = {"d25_no_elision": ag * (1 + ra) + 2 * rnd * rb,
+                 "d25_replication_reuse": ag * ra + rnd * rb + out,
+                 "d25_local_fusion": ag * (1 + ra) + rnd * rb,
+                 }[algorithm] + coo
+        msgs = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz).messages
+    elif algorithm.startswith("s25"):
+        mS, nS, rc = m // G, n // G, r // (G * c)
+        a_rnd = max(G - 1, 0) * mS * rc      # one A-chunk trip round
+        b_rnd = max(G - 1, 0) * nS * rc
+        out = G * mS * rc                    # output trips (dense)
+        vals = 3.0 * phi * n * r * (c - 1) / p   # fiber values (dense)
+        n_b = 2 if algorithm == "s25_no_elision" else 1
+        words = a_rnd * ra + n_b * b_rnd * rb + out + vals
+        msgs = words_fusedmm(algorithm, p=p, c=c, n=n, r=r, nnz=nnz).messages
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return CommCost(f"{algorithm}_sparse", p, c, float(words), float(msgs),
+                    phi)
+
+
+def words_spmm_sparse(family: str, *, p: int, c: int, m: int, n: int,
+                      r: int, nnz: int, rho_row: float,
+                      rho_col: float) -> CommCost:
+    """Per-processor words of ONE SpMM round under comm="sparse"."""
+    _check(p, c)
+    phi = nnz / (n * r)
+    L = p // c
+    G = int(math.isqrt(p // c)) if p // c else 1
+    dense = words_spmm(family, p=p, c=c, n=n, r=r, nnz=nnz)
+    if family == "d15":      # B trip pruned; RS stays dense
+        words = (c - 1) * (m // p) * r + max(L - 1, 0) * (n // p) * r \
+            * rho_col
+    elif family == "s15":    # one gather pruned; COO trip already sparse
+        words = dense.words - n * r * (c - 1) / p \
+            + rho_col * (c - 1) * n * (r // p)
+    elif family == "d25":    # B trips pruned; RS dense; COO kept
+        nS, rW = n // (G * c), r // G
+        words = dense.words - G * nS * rW + max(G - 1, 0) * nS * rW * rho_col
+    elif family == "s25":    # B trips pruned; output + values dense
+        mS, nS, rc = m // G, n // G, r // (G * c)
+        words = G * mS * rc + max(G - 1, 0) * nS * rc * rho_col \
+            + phi * n * r * (c - 1) / p
+    else:
+        raise ValueError(f"unknown family {family!r}")
+    return CommCost(f"{family}_spmm_sparse", p, c, float(words),
+                    float(dense.messages), phi)
+
+
 # Replication units (of n*r*(c-1)/p words) a Session elides from the
 # BACKWARD pass when the same Session that served the forward is threaded
 # through the VJP (repro.core.grads): the backward's dual FusedMM finds

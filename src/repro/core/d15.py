@@ -64,6 +64,12 @@ class PlanD15:
     tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     # host-only metadata (not traced):
     meta: object = dataclasses.field(metadata=dict(static=True))
+    # comm="sparse" support indices: (gather_send, gather_recv,
+    # shift_send, shift_recv), each a tuple of (L, c, w) int32 arrays
+    # (per fiber offset / per phase); empty for dense plans.
+    sup: tuple = ()
+    smeta: object = dataclasses.field(default=None,
+                                      metadata=dict(static=True))
 
     @property
     def block_shape(self) -> Tuple[int, int]:
@@ -90,12 +96,19 @@ class MetaD15:
 
 def plan_d15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
              transpose: bool = False, row_tile: int = 256,
-             nz_block: int = 256, group: int = 1) -> PlanD15:
+             nz_block: int = 256, group: int = 1, comm: str = "dense",
+             compress=None) -> PlanD15:
     """Pack S for the 1.5D dense-shifting schedule (host, amortized).
 
     transpose=True packs S^T blocks (needed by replication-reuse FusedMM
     and by SpMMB — the paper stores both copies, §IV-B).  ``group`` pads
     window runs so ``blocks_per_step`` up to ``group`` stays feasible.
+
+    comm="sparse" additionally derives, from the same block structure,
+    the per-device support index sets that let the executors prune the
+    fiber all-gather (rows of the replicated operand any resident block
+    reads) and the traveling B chunks (per-phase column support of the
+    resident block) — see docs/algorithms.md "Sparse communication".
     """
     L, c, p = grid.L, grid.c, grid.p
     assert m % p == 0 and n % p == 0, (m, n, p)
@@ -113,12 +126,24 @@ def plan_d15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
     row_off = np.zeros((L, L, c), np.int64)   # (phase, layer, fiber)
     col_off = np.zeros((L, L, c), np.int64)
     n_dense = cmA if transpose else nB        # rows of the gathered/shifted
+    sparse_comm = comm == "sparse"
+    # comm="sparse" support sets, in pre-swap coordinates: the gathered
+    # operand T is always indexed by S's row axis (block-local, [0,cmA))
+    # and the traveling B chunk by S's col axis ([0,nB)), regardless of
+    # pack orientation — transpose only relabels which pack field holds
+    # which axis.
+    a_sets = [[set() for _ in range(c)] for _ in range(L)]
+    b_sets = [[[np.zeros(0, np.int64)] * c for _ in range(L)]
+              for _ in range(L)]
     for t in range(L):                        # dense operand fed to kernels
         blocks = []
         for u in range(L):
             for v in range(c):
                 j = ((u - t) % L) * c + v
                 br, bc, bv = part.get((u, j), empty)
+                if sparse_comm:
+                    a_sets[u][v].update(np.unique(br).tolist())
+                    b_sets[t][u][v] = np.unique(bc)
                 if transpose:
                     br, bc = bc, br
                     row_off[t, u, v], col_off[t, u, v] = j * nB, u * cmA
@@ -137,9 +162,83 @@ def plan_d15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
 
     meta = MetaD15(cmA, nB, common.BlockMeta(
         row_off, col_off, (n, m) if transpose else (m, n)))
+    sup, smeta = ((), None) if not sparse_comm else _sparse_sup(
+        grid, a_sets, b_sets, mA, nB, sh5, compress)
     return PlanD15(tuple(rls), tuple(cls), tuple(vls), tuple(tbs),
                    m, n, r, row_tile, transpose,
-                   common.merge_tilings(tilings), meta)
+                   common.merge_tilings(tilings), meta, sup, smeta)
+
+
+def _sparse_sup(grid: Grid15, a_sets, b_sets, mA, nB, sh, compress):
+    """Pad + align the comm="sparse" support sets into device arrays.
+
+    Gather channel (offset d, device (u, v)): as a *sender* it ships the
+    slab-local rows of its own A slab that receiver (u, (v+d)%c)'s
+    support touches; as a *receiver* it scatters at the absolute rows of
+    its support falling in sender (v-d)%c's slab.  Shift channel (phase
+    t >= 1): the home layer of the chunk device (u, v) consumes at phase
+    t is (u-t)%L, so sender i ships to (i+t)%L the column support of the
+    receiver's phase-t resident block.  Per-channel crossover: if the
+    padded support words are not under SPARSE_CROSSOVER x the dense
+    words, the channel stays dense (flag off).
+    """
+    L, c = grid.L, grid.c
+    cmA = c * mA
+    cross = costmodel.SPARSE_CROSSOVER
+    g_send, g_recv, wg, gather = (), (), 0, False
+    if c > 1:
+        a_sorted = [[np.array(sorted(a_sets[u][v]), np.int64)
+                     for v in range(c)] for u in range(L)]
+        send_sets = np.empty((c - 1, L, c), object)
+        recv_sets = np.empty((c - 1, L, c), object)
+        w = 1
+        for d in range(1, c):
+            for u in range(L):
+                for v in range(c):
+                    rcv = a_sorted[u][(v + d) % c]
+                    send_sets[d - 1, u, v] = (
+                        rcv[(rcv >= v * mA) & (rcv < (v + 1) * mA)] - v * mA)
+                    own = a_sorted[u][v]
+                    sv = (v - d) % c
+                    recv_sets[d - 1, u, v] = \
+                        own[(own >= sv * mA) & (own < (sv + 1) * mA)]
+                    w = max(w, send_sets[d - 1, u, v].size)
+        gather = w <= cross * mA
+        if gather:
+            wg = w
+            g_send = tuple(jax.device_put(
+                common.pad_sets(send_sets[d], wg, 0), sh)
+                for d in range(c - 1))
+            g_recv = tuple(jax.device_put(
+                common.pad_sets(recv_sets[d], wg, cmA), sh)
+                for d in range(c - 1))
+    s_send, s_recv, ws, shift = (), (), (), False
+    if L > 1:
+        widths, sends, recvs = [], [], []
+        for t in range(1, L):
+            ssend = np.empty((L, c), object)
+            srecv = np.empty((L, c), object)
+            w = 1
+            for i in range(L):
+                for v in range(c):
+                    ssend[i, v] = b_sets[t][(i + t) % L][v]
+                    srecv[i, v] = b_sets[t][i][v]
+                    w = max(w, srecv[i, v].size)
+            widths.append(w)
+            sends.append(ssend)
+            recvs.append(srecv)
+        shift = sum(widths) <= cross * (L - 1) * nB
+        if shift:
+            ws = tuple(widths)
+            s_send = tuple(jax.device_put(
+                common.pad_sets(sends[i], ws[i], 0), sh)
+                for i in range(L - 1))
+            s_recv = tuple(jax.device_put(
+                common.pad_sets(recvs[i], ws[i], nB), sh)
+                for i in range(L - 1))
+    sup = (g_send, g_recv, s_send, s_recv)
+    return sup, common.SparseMeta(gather=gather, shift=shift, wg=wg, ws=ws,
+                                  compress=compress)
 
 
 def _s(s, t):
@@ -163,18 +262,60 @@ def _exec(grid: Grid15, plan: PlanD15, body, A, B, out_specs,
 
     ``a_spec`` overrides the spec of the first dense operand — the
     pre-gathered (Session-cached) paths pass ``P(layer)``, i.e. rows split
-    over the layer axis only and replicated along the fiber.
+    over the layer axis only and replicated along the fiber.  The plan's
+    comm="sparse" support indices ride along as a fourth body argument
+    (an empty pytree for dense plans).
     """
     mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
     s_spec = P(lay, fib)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
     s_specs = jax.tree_util.tree_map(lambda _: s_spec, s_pack)
+    sup_specs = jax.tree_util.tree_map(lambda _: s_spec, plan.sup)
     fn = common.shard_map(
         body, mesh=mesh,
         in_specs=(s_specs, a_spec if a_spec is not None else P((lay, fib)),
-                  P((lay, fib))),
+                  P((lay, fib)), sup_specs),
         out_specs=out_specs)
-    return fn(s_pack, A, B)
+    return fn(s_pack, A, B, plan.sup)
+
+
+def _sq_sup(sup):
+    """Drop the (layer, fiber) unit dims of the per-device support sets."""
+    return jax.tree_util.tree_map(lambda x: x[0, 0], sup)
+
+
+def _gather_T(plan: PlanD15, A_loc, sup, fib, c):
+    """Fiber replication of the stationary operand, pruned when planned."""
+    sm = plan.smeta
+    if sm is None or not sm.gather:
+        return jax.lax.all_gather(A_loc, fib, tiled=True)
+    return common.pruned_gather_rows(A_loc, sup[0], sup[1], fib, c,
+                                     compress=sm.compress)
+
+
+def _shift_sparse(plan: PlanD15) -> bool:
+    return plan.smeta is not None and plan.smeta.shift
+
+
+def _b_chunks(plan: PlanD15, B_loc, sup, lay, L, barrier=False):
+    """Per-phase B input chunks via support-pruned direct sends.
+
+    Phase t's chunk ships straight from its home layer ((u-t) mod L for
+    receiver u) instead of riding the dense ring: one ppermute of the
+    receiver's per-phase column support, scattered into zeros.  Phase 0
+    is the local chunk (free).  ``barrier=True`` re-sends from an
+    optimization-barrier'd source — the "none" cell's honest second
+    round, which XLA would otherwise CSE against round 1 (the payloads
+    are syntactically identical; compare s15's re-gather idiom).
+    """
+    src = jax.lax.optimization_barrier(B_loc) if barrier else B_loc
+    chunks = [B_loc]
+    for t in range(1, L):
+        perm = [(i, (i + t) % L) for i in range(L)]
+        chunks.append(common.pruned_permute(
+            src, sup[2][t - 1], sup[3][t - 1], perm, lay, plan.nB,
+            compress=plan.smeta.compress))
+    return chunks
 
 
 def replicated_spec(grid: Grid15) -> P:
@@ -231,14 +372,23 @@ def resolve_elision(elision: str, transpose: bool) -> str:
     return "reuse" if transpose else "fused"
 
 
-def _sddmm_phases(plan, T, B0, s, L, lay, overlap, swap=False):
+def _sddmm_phases(plan, T, B0, s, L, lay, overlap, swap=False, chunks=None):
     """L SDDMM phases against a shifting B; returns (vals list, B home).
 
     Overlapped: the shift of B for phase t+1 is issued before the phase-t
     kernel, so it has no consumer inside the phase and hides behind it.
+    ``chunks`` (comm="sparse") supplies the per-phase B chunks from
+    support-pruned direct sends instead of the dense ring — the kernels
+    read identical values (supported rows) so results are bitwise equal.
     """
     tk = plan.tiling.kernel_kwargs()
     vals_out = []
+    if chunks is not None:
+        for t in range(L):
+            coo = _coo(plan, _s(s, t))
+            args = (chunks[t], T) if swap else (T, chunks[t])
+            vals_out.append(ops.sddmm(*args, coo, **tk).vals)
+        return vals_out, B0
     B_cur = B0
     B_nxt = _shift(B0, lay, L) if overlap else None
     for t in range(L):
@@ -269,10 +419,14 @@ def sddmm_d15(grid: Grid15, plan: PlanD15, A, B, overlap: bool = True,
     across-call replication reuse of ``repro.core.api.Session``."""
     lay, fib, L = grid.layer, grid.fiber, grid.L
 
-    def body(s, A_loc, B_loc):
+    def body(s, A_loc, B_loc, sup):
+        sup = _sq_sup(sup)
         T = A_loc if pre_gathered \
-            else jax.lax.all_gather(A_loc, fib, tiled=True)  # (c m/p, r)
-        r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap)
+            else _gather_T(plan, A_loc, sup, fib, grid.c)    # (c m/p, r)
+        chunks = _b_chunks(plan, B_loc, sup, lay, L) \
+            if _shift_sparse(plan) else None
+        r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap,
+                                  chunks=chunks)
         return tuple(v[None, None] for v in r_vals)
 
     return _exec(grid, plan, body, A, B,
@@ -287,8 +441,16 @@ def spmma_d15(grid: Grid15, plan: PlanD15, B, overlap: bool = True):
     lay, fib, L, c = grid.layer, grid.fiber, grid.L, grid.c
     tk = plan.tiling.kernel_kwargs()
 
-    def body(s, _unused, B_loc):
+    def body(s, _unused, B_loc, sup):
+        sup = _sq_sup(sup)
         T = jnp.zeros((plan.cmA, plan.r), jnp.float32)
+        if _shift_sparse(plan):
+            chunks = _b_chunks(plan, B_loc, sup, lay, L)
+            for t in range(L):
+                T = T + ops.spmm(_coo(plan, _s(s, t)), chunks[t],
+                                 m=plan.cmA, **tk)
+            return jax.lax.psum_scatter(T, fib, scatter_dimension=0,
+                                        tiled=True)
         B_cur = B_loc
         B_nxt = _shift(B_loc, lay, L) if overlap else None
         for t in range(L):
@@ -325,9 +487,11 @@ def spmmb_d15(grid: Grid15, plan: PlanD15, A, overlap: bool = True,
     lay, fib, L = grid.layer, grid.fiber, grid.L
     tk = plan.tiling.kernel_kwargs()
 
-    def body(s, A_loc, B0):
+    def body(s, A_loc, B0, sup):
+        # only the gather is prunable here: the traveling B buffer IS
+        # the output accumulator — its FP addition order must be exact
         T = A_loc if pre_gathered \
-            else jax.lax.all_gather(A_loc, fib, tiled=True)
+            else _gather_T(plan, A_loc, _sq_sup(sup), fib, grid.c)
         B_cur = B0
         if overlap:
             contrib = ops.spmm(_coo(plan, _s(s, 0)), T, m=plan.nB, **tk)
@@ -378,16 +542,30 @@ def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "auto",
     r_specs = tuple(P(lay, fib) for _ in range(L))
     a_spec = replicated_spec(grid) if pre_gathered else None
 
-    def gather(A_loc):
+    def gather(A_loc, sup):
         if pre_gathered:
             return A_loc
-        return jax.lax.all_gather(A_loc, fib, tiled=True)
+        return _gather_T(plan, A_loc, sup, fib, grid.c)
 
     if elision == "none":
         assert not plan.transpose
 
-        def body(s, A_loc, B_loc):
-            T = gather(A_loc)
+        def body(s, A_loc, B_loc, sup):
+            sup = _sq_sup(sup)
+            T = gather(A_loc, sup)
+            if _shift_sparse(plan):
+                chunks = _b_chunks(plan, B_loc, sup, lay, L)
+                r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay,
+                                          overlap, chunks=chunks)
+                # honest two-launch baseline: B ships again for round 2
+                chunks = _b_chunks(plan, B_loc, sup, lay, L, barrier=True)
+                T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
+                for t in range(L):
+                    R_t = _coo(plan, _s(s, t)).with_vals(r_vals[t])
+                    T2 = T2 + ops.spmm(R_t, chunks[t], m=plan.cmA, **tk)
+                out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
+                                           tiled=True)
+                return out, tuple(v[None, None] for v in r_vals)
             r_vals, B_cur = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap)
             T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
             B_nxt = _shift(B_cur, lay, L) if overlap else None
@@ -411,11 +589,14 @@ def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "auto",
         # FusedMMB: replicate A once; it serves the SDDMM *and* the SpMMB.
         assert plan.transpose, "reuse needs a transpose-packed plan"
 
-        def body(s, A_loc, B_loc):
-            T = gather(A_loc)                                # single AG
+        def body(s, A_loc, B_loc, sup):
+            sup = _sq_sup(sup)
+            T = gather(A_loc, sup)                           # single AG
+            chunks = _b_chunks(plan, B_loc, sup, lay, L) \
+                if _shift_sparse(plan) else None
             # sampled <B_j, A_i> on the S^T layout
             r_vals, _ = _sddmm_phases(plan, T, B_loc, s, L, lay, overlap,
-                                      swap=True)
+                                      swap=True, chunks=chunks)
             out_cur = jnp.zeros((plan.nB, plan.r), jnp.float32)
             if overlap:
                 contrib = ops.spmm(
@@ -441,18 +622,25 @@ def fusedmm_d15(grid: Grid15, plan: PlanD15, A, B, elision: str = "auto",
     if elision == "fused":
         assert not plan.transpose
 
-        def body(s, A_loc, B_loc):
-            T = gather(A_loc)
+        def body(s, A_loc, B_loc, sup):
+            sup = _sq_sup(sup)
+            T = gather(A_loc, sup)
             T2 = jnp.zeros((plan.cmA, plan.r), jnp.float32)
             r_vals = []
+            chunks = _b_chunks(plan, B_loc, sup, lay, L) \
+                if _shift_sparse(plan) else None
             B_cur = B_loc
-            B_nxt = _shift(B_loc, lay, L) if overlap else None
+            B_nxt = _shift(B_loc, lay, L) \
+                if overlap and chunks is None else None
             for t in range(L):
-                contrib, R_t = ops.fusedmm(T, B_cur, _coo(plan, _s(s, t)),
+                B_t = chunks[t] if chunks is not None else B_cur
+                contrib, R_t = ops.fusedmm(T, B_t, _coo(plan, _s(s, t)),
                                            m=plan.cmA, **tk)
                 T2 = T2 + contrib
                 r_vals.append(R_t.vals)
-                if overlap:
+                if chunks is not None:
+                    pass
+                elif overlap:
                     B_cur = B_nxt
                     if t + 1 < L:
                         B_nxt = _shift(B_nxt, lay, L)

@@ -53,6 +53,9 @@ class PlanD25:
     transpose: bool = dataclasses.field(metadata=dict(static=True))
     tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     meta: object = dataclasses.field(metadata=dict(static=True))
+    sup: tuple = ()             # comm="sparse" support index arrays
+    smeta: object = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def block_shape(self):
@@ -72,7 +75,19 @@ class MetaD25:
 
 def plan_d25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
              transpose: bool = False, row_tile: int = 256,
-             nz_block: int = 256, group: int = 1) -> PlanD25:
+             nz_block: int = 256, group: int = 1, comm: str = "dense",
+             compress=None) -> PlanD25:
+    """Pack S pre-skewed for the Cannon schedule (host, amortized).
+
+    comm="sparse": device (x, y, z) only ever touches S blocks
+    (x, g*c + z) — the fiber all-gather of A needs just the union of
+    their (pre-swap) row supports, and the B chunk consumed at phase t
+    just the column support of the block resident that phase, so both
+    channels ship pruned (docs/algorithms.md "Sparse communication").
+    The traveling COO pack, the partial-dot buffer, the traveling
+    output chunks and the reduce-scatter stay dense — they carry the
+    accumulation order.
+    """
     G, c, p = grid.G, grid.c, grid.p
     assert m % (G * c) == 0 and n % (G * c) == 0 and r % G == 0
     mS, nS, mA, rW = m // G, n // (G * c), m // (G * c), r // G
@@ -104,12 +119,98 @@ def plan_d25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
         np.array(row_off).reshape(G, G, c),
         np.array(col_off).reshape(G, G, c),
         (n, m) if transpose else (m, n)))
+    sup, smeta = ((), None) if comm != "sparse" else _sparse_sup(
+        grid, rows, cols, vals, meta, sh, compress)
     return PlanD25(
         jax.device_put(rl.reshape(shp), sh),
         jax.device_put(cl.reshape(shp), sh),
         jax.device_put(vl.reshape(shp), sh),
         jax.device_put(tb.reshape((G, G, c) + tb.shape[1:]), sh),
-        m, n, r, row_tile, transpose, tiling, meta)
+        m, n, r, row_tile, transpose, tiling, meta, sup, smeta)
+
+
+def _sparse_sup(grid: Grid25, rows, cols, vals, meta, sh, compress):
+    """Pad + align the comm="sparse" support sets into device arrays.
+
+    Supports are in *pre-swap* coordinates — the gathered operand T is
+    always indexed by S's row axis ([0, mS)) and the traveling B chunk
+    by S's col axis ([0, nS)) — so one support set serves both pack
+    orientations.  Gather: per offset d along the fiber, sender z ships
+    the slab-local rows of receiver (z+d)%c's union support (which
+    depends on (x, z) only).  Shift: phase t's B chunk is shipped
+    directly from its home grid-row (x+t)%G, pruned to the column
+    support of the block the receiver holds that phase.
+    """
+    G, c = grid.G, grid.c
+    mS, nS, mA = meta.mS, meta.nS, meta.mA
+    cross = costmodel.SPARSE_CROSSOVER
+    part = common.block_partition(np.asarray(rows), np.asarray(cols),
+                                  np.asarray(vals), mS, nS, G * c)
+    empty = np.zeros(0, np.int64)
+    ub_rows = {k: np.unique(v[0]) for k, v in part.items()}
+    ub_cols = {k: np.unique(v[1]) for k, v in part.items()}
+
+    g_send, g_recv, wg, gather = (), (), 0, False
+    if c > 1:
+        ra = [[np.unique(np.concatenate(
+            [ub_rows.get((x, g * c + z), empty) for g in range(G)]))
+            for z in range(c)] for x in range(G)]
+        send_sets = np.empty((c - 1, G, G, c), object)
+        recv_sets = np.empty((c - 1, G, G, c), object)
+        w = 1
+        for d in range(1, c):
+            for x in range(G):
+                for y in range(G):
+                    for z in range(c):
+                        rcv = ra[x][(z + d) % c]
+                        send_sets[d - 1, x, y, z] = (
+                            rcv[(rcv >= z * mA) & (rcv < (z + 1) * mA)]
+                            - z * mA)
+                        own = ra[x][z]
+                        zs = (z - d) % c
+                        recv_sets[d - 1, x, y, z] = \
+                            own[(own >= zs * mA) & (own < (zs + 1) * mA)]
+                        w = max(w, send_sets[d - 1, x, y, z].size)
+        gather = w <= cross * mA
+        if gather:
+            wg = w
+            g_send = tuple(jax.device_put(
+                common.pad_sets(send_sets[d], wg, 0), sh)
+                for d in range(c - 1))
+            g_recv = tuple(jax.device_put(
+                common.pad_sets(recv_sets[d], wg, mS), sh)
+                for d in range(c - 1))
+
+    s_send, s_recv, ws, shift = (), (), (), False
+    if G > 1:
+        widths, sends, recvs = [], [], []
+        for t in range(1, G):
+            ssend = np.empty((G, G, c), object)
+            srecv = np.empty((G, G, c), object)
+            w = 1
+            for x in range(G):
+                for y in range(G):
+                    for z in range(c):
+                        ssend[x, y, z] = ub_cols.get(
+                            ((x - t) % G, ((x + y) % G) * c + z), empty)
+                        srecv[x, y, z] = ub_cols.get(
+                            (x, ((x + y + t) % G) * c + z), empty)
+                        w = max(w, srecv[x, y, z].size)
+            widths.append(w)
+            sends.append(ssend)
+            recvs.append(srecv)
+        shift = sum(widths) <= cross * (G - 1) * nS
+        if shift:
+            ws = tuple(widths)
+            s_send = tuple(jax.device_put(
+                common.pad_sets(sends[i], ws[i], 0), sh)
+                for i in range(G - 1))
+            s_recv = tuple(jax.device_put(
+                common.pad_sets(recvs[i], ws[i], nS), sh)
+                for i in range(G - 1))
+    sup = (g_send, g_recv, s_send, s_recv)
+    return sup, common.SparseMeta(gather=gather, shift=shift, wg=wg, ws=ws,
+                                  compress=compress)
 
 
 def skew_b(grid: Grid25, B: np.ndarray) -> jax.Array:
@@ -159,14 +260,15 @@ def _exec(grid: Grid25, plan: PlanD25, body, A, B_sk, out_specs,
     mesh = grid.mesh
     rw, cl_ax, fib = grid.row, grid.col, grid.fiber
     s_spec = P(rw, cl_ax, fib)
+    sup_specs = jax.tree_util.tree_map(lambda _: s_spec, plan.sup)
     fn = common.shard_map(
         body, mesh=mesh,
         in_specs=((s_spec,) * 4,
                   a_spec if a_spec is not None else P((rw, fib), cl_ax),
-                  s_spec),
+                  s_spec, sup_specs),
         out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
-    return fn(s_pack, A, B_sk)
+    return fn(s_pack, A, B_sk, plan.sup)
 
 
 def replicated_spec(grid: Grid25) -> P:
@@ -221,7 +323,44 @@ def _sq(args):
     return tuple(x[0, 0, 0] for x in args)
 
 
-def _sddmm_round(grid, plan, T, s, B0, overlap=True):
+def _sq_sup(sup):
+    """Per-device view of the support arrays (drop grid dims)."""
+    return jax.tree_util.tree_map(lambda x: x[0, 0, 0], sup)
+
+
+def _gather_T(plan, A_loc, sup, fib, c):
+    """Fiber all-gather of the replicated operand, pruned when won."""
+    sm = plan.smeta
+    if sm is None or not sm.gather:
+        return jax.lax.all_gather(A_loc, fib, tiled=True)
+    return common.pruned_gather_rows(A_loc, sup[0], sup[1], fib, c,
+                                     compress=sm.compress)
+
+
+def _shift_sparse(plan) -> bool:
+    return plan.smeta is not None and plan.smeta.shift
+
+
+def _b_chunks(grid, plan, B0, sup, G, barrier=False):
+    """Per-phase B chunks via direct pruned sends from each chunk's home.
+
+    Phase t's chunk lives at grid-row (x+t) % G, so one ppermute with
+    perm i -> (i-t) % G replaces the dense ring hop, shipping only the
+    column support of the receiver's phase-t resident block.  barrier=
+    True keeps a replay round (FusedMM "none") out of XLA's CSE — the
+    re-sends are syntactically identical to round 1's otherwise.
+    """
+    src = jax.lax.optimization_barrier(B0) if barrier else B0
+    chunks = [B0]
+    for t in range(1, G):
+        perm = [(i, (i - t) % G) for i in range(G)]
+        chunks.append(common.pruned_permute(
+            src, sup[2][t - 1], sup[3][t - 1], perm, grid.row,
+            plan.meta.nS, compress=plan.smeta.compress))
+    return chunks
+
+
+def _sddmm_round(grid, plan, T, s, B0, overlap=True, chunks=None):
     """Cannon round accumulating partial dots in the traveling S pack.
 
     For a normal pack the kernel samples <T_i, B_j>; for a transpose pack
@@ -240,10 +379,11 @@ def _sddmm_round(grid, plan, T, s, B0, overlap=True):
     ones = jnp.ones_like(vl)
     struct = (rl, cl, tb)
     structs, bchunks = [], []
-    B_cur = B0
+    B_cur = B0 if chunks is None else chunks[0]
     if overlap and G > 1:
         nxt = tuple(_shift_back(x, grid.col, G) for x in struct)
-        B_nxt = _shift_back(B_cur, grid.row, G)
+        if chunks is None:
+            B_nxt = _shift_back(B_cur, grid.row, G)
     for t in range(G):
         rl_c, cl_c, tb_c = struct
         structs.append(struct)
@@ -255,12 +395,18 @@ def _sddmm_round(grid, plan, T, s, B0, overlap=True):
             dots = ops.sddmm(T, B_cur, coo, **tk).vals
         partial = _shift_back(partial + dots, grid.col, G)
         if overlap and G > 1:
-            struct, B_cur = nxt, B_nxt
+            struct = nxt
             if t + 1 < G:
                 nxt = tuple(_shift_back(x, grid.col, G) for x in nxt)
-                B_nxt = _shift_back(B_nxt, grid.row, G)
         else:
             struct = tuple(_shift_back(x, grid.col, G) for x in struct)
+        if chunks is not None:            # comm="sparse": direct sends
+            B_cur = chunks[t + 1] if t + 1 < G else chunks[0]
+        elif overlap and G > 1:
+            B_cur = B_nxt
+            if t + 1 < G:
+                B_nxt = _shift_back(B_nxt, grid.row, G)
+        else:
             B_cur = _shift_back(B_cur, grid.row, G)
     rl, cl, tb = struct
     return (rl, cl, partial, tb), B_cur, structs, bchunks
@@ -277,13 +423,16 @@ def sddmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, overlap: bool = True,
     across-call replication reuse of ``repro.core.api.Session``."""
     fib = grid.fiber
 
-    def body(s, A_loc, B_loc):
+    def body(s, A_loc, B_loc, sup):
         s = _sq(s)
+        sup = _sq_sup(sup)
         B0 = B_loc[0, 0, 0]
         T = A_loc if pre_gathered \
-            else jax.lax.all_gather(A_loc, fib, tiled=True)
+            else _gather_T(plan, A_loc, sup, fib, grid.c)
+        chunks = _b_chunks(grid, plan, B0, sup, grid.G) \
+            if _shift_sparse(plan) else None
         (rl, cl, partial, tb), _, _, _ = _sddmm_round(grid, plan, T, s, B0,
-                                                      overlap)
+                                                      overlap, chunks)
         return (s[2] * partial)[None, None, None]
 
     return _exec(grid, plan, body, A, B_sk,
@@ -298,19 +447,27 @@ def spmma_d25(grid: Grid25, plan: PlanD25, B_sk, overlap: bool = True):
     G, fib = grid.G, grid.fiber
     tk = plan.tiling.kernel_kwargs()
 
-    def body(s, _A, B_loc):
-        cur = _sq(s) + (B_loc[0, 0, 0],)
+    def body(s, _A, B_loc, sup):
+        sparse_b = _shift_sparse(plan)
+        chunks = _b_chunks(grid, plan, B_loc[0, 0, 0], _sq_sup(sup), G) \
+            if sparse_b else None
+        cur = _sq(s) + (() if sparse_b else (B_loc[0, 0, 0],))
         if overlap and G > 1:
-            nxt = _advance(grid, cur, G)
+            nxt = _advance(grid, cur, G) if not sparse_b else \
+                tuple(_shift_back(x, grid.col, G) for x in cur)
         T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
         for t in range(G):
-            rl, cl, vl, tb, B_cur = cur
+            rl, cl, vl, tb = cur[:4]
+            B_cur = chunks[t] if sparse_b else cur[4]
             T2 = T2 + ops.spmm(_coo(plan, rl, cl, vl, tb), B_cur,
                                m=plan.meta.mS, **tk)
             if overlap and G > 1:
                 cur = nxt
                 if t + 1 < G:
-                    nxt = _advance(grid, nxt, G)
+                    nxt = _advance(grid, nxt, G) if not sparse_b else \
+                        tuple(_shift_back(x, grid.col, G) for x in nxt)
+            elif sparse_b:
+                cur = tuple(_shift_back(x, grid.col, G) for x in cur)
             else:
                 cur = _advance(grid, cur, G)
         out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0, tiled=True)
@@ -344,10 +501,10 @@ def spmmb_d25(grid: Grid25, plan: PlanD25, A, overlap: bool = True,
     G, fib = grid.G, grid.fiber
     tk = plan.tiling.kernel_kwargs()
 
-    def body(s, A_loc, _B):
+    def body(s, A_loc, _B, sup):
         s = _sq(s)
         T = A_loc if pre_gathered \
-            else jax.lax.all_gather(A_loc, fib, tiled=True)
+            else _gather_T(plan, A_loc, _sq_sup(sup), fib, grid.c)
         out_cur = jnp.zeros((plan.meta.nS, plan.meta.rW), jnp.float32)
         struct = s
         contrib = ops.spmm(_coo(plan, *struct), T, m=plan.meta.nS, **tk)
@@ -415,33 +572,46 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
     tk = plan.tiling.kernel_kwargs()
     a_spec = replicated_spec(grid) if pre_gathered else None
 
-    def gather(A_loc):
+    def gather(A_loc, sup):
         if pre_gathered:
             return A_loc
-        return jax.lax.all_gather(A_loc, fib, tiled=True)
+        return _gather_T(plan, A_loc, sup, fib, grid.c)
 
     if elision == "none":
         assert not plan.transpose
 
-        def body(s, A_loc, B_loc):
+        def body(s, A_loc, B_loc, sup):
             s = _sq(s)
+            sup = _sq_sup(sup)
             B0 = B_loc[0, 0, 0]
-            T = gather(A_loc)
+            T = gather(A_loc, sup)
+            sparse_b = _shift_sparse(plan)
+            chunks = _b_chunks(grid, plan, B0, sup, G) if sparse_b else None
             (rl, cl, partial, tb), B_home, _, _ = _sddmm_round(
-                grid, plan, T, s, B0, overlap)
+                grid, plan, T, s, B0, overlap, chunks)
             r_vals = s[2] * partial
+            # Round 2 re-ships the chunks; the barrier keeps the replay's
+            # (syntactically identical) sends out of XLA's CSE so the
+            # two-launch baseline is priced honestly.
+            chunks2 = _b_chunks(grid, plan, B0, sup, G, barrier=True) \
+                if sparse_b else None
             T2 = jnp.zeros((plan.meta.mS, plan.meta.rW), jnp.float32)
-            cur = (rl, cl, r_vals, tb, B_home)
+            cur = (rl, cl, r_vals, tb) + (() if sparse_b else (B_home,))
             if overlap and G > 1:
-                nxt = _advance(grid, cur, G)
+                nxt = _advance(grid, cur, G) if not sparse_b else \
+                    tuple(_shift_back(x, grid.col, G) for x in cur)
             for t in range(G):
-                rl_c, cl_c, vl_c, tb_c, B_cur = cur
+                rl_c, cl_c, vl_c, tb_c = cur[:4]
+                B_cur = chunks2[t] if sparse_b else cur[4]
                 T2 = T2 + ops.spmm(_coo(plan, rl_c, cl_c, vl_c, tb_c),
                                    B_cur, m=plan.meta.mS, **tk)
                 if overlap and G > 1:
                     cur = nxt
                     if t + 1 < G:
-                        nxt = _advance(grid, nxt, G)
+                        nxt = _advance(grid, nxt, G) if not sparse_b else \
+                            tuple(_shift_back(x, grid.col, G) for x in nxt)
+                elif sparse_b:
+                    cur = tuple(_shift_back(x, grid.col, G) for x in cur)
                 else:
                     cur = _advance(grid, cur, G)
             out = jax.lax.psum_scatter(T2, fib, scatter_dimension=0,
@@ -456,12 +626,15 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
     if elision == "fused":
         assert not plan.transpose
 
-        def body(s, A_loc, B_loc):
+        def body(s, A_loc, B_loc, sup):
             s = _sq(s)
+            sup = _sq_sup(sup)
             B0 = B_loc[0, 0, 0]
-            T = gather(A_loc)
+            T = gather(A_loc, sup)
+            chunks = _b_chunks(grid, plan, B0, sup, G) \
+                if _shift_sparse(plan) else None
             (rl, cl, partial, tb), _, structs, bchunks = _sddmm_round(
-                grid, plan, T, s, B0, overlap)
+                grid, plan, T, s, B0, overlap, chunks)
             r_vals = s[2] * partial
             # Round 2 replays the cached structure and B chunks; only the
             # final values travel (same col-axis schedule as the pack
@@ -492,12 +665,16 @@ def fusedmm_d25(grid: Grid25, plan: PlanD25, A, B_sk, elision: str = "auto",
     if elision == "reuse":
         assert plan.transpose
 
-        def body(s, A_loc, B_loc):
+        def body(s, A_loc, B_loc, sup):
             s = _sq(s)
+            sup = _sq_sup(sup)
             B0 = B_loc[0, 0, 0]
-            T = gather(A_loc)                                # single AG
+            T = gather(A_loc, sup)                           # single AG
+            chunks = _b_chunks(grid, plan, B0, sup, G) \
+                if _shift_sparse(plan) else None
             (rl, cl, partial, tb), _, _, _ = _sddmm_round(grid, plan, T, s,
-                                                          B0, overlap)
+                                                          B0, overlap,
+                                                          chunks)
             r_vals = s[2] * partial
             out_cur = jnp.zeros((plan.meta.nS, plan.meta.rW), jnp.float32)
             # the output travels and accumulates, so its shift trails the

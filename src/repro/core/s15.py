@@ -56,6 +56,9 @@ class PlanS15:
     row_tile: int = dataclasses.field(metadata=dict(static=True))
     tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     meta: object = dataclasses.field(metadata=dict(static=True))
+    sup: tuple = ()             # comm="sparse" support index arrays
+    smeta: object = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def mS(self):
@@ -74,18 +77,33 @@ class MetaS15:
 
 
 def plan_s15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
-             row_tile: int = 256, nz_block: int = 256,
-             group: int = 1) -> PlanS15:
+             row_tile: int = 256, nz_block: int = 256, group: int = 1,
+             comm: str = "dense", compress=None) -> PlanS15:
+    """Pack one home row-block per device (host, amortized).
+
+    comm="sparse": the dense column slabs are full-height, and device
+    (u, v) only ever reads the rows/cols its resident blocks touch —
+    blocks b = v (mod c), the same set for every layer position u.  The
+    planner records those two unions (A rows, B cols) so the fiber
+    all-gathers ship only supported rows.  The COO propagation is the
+    sparse payload itself and always stays as-is.
+    """
     L, c, p = grid.L, grid.c, grid.p
     assert m % p == 0 and r % p == 0, (m, r, p)
     mS = m // p
     row_tile = common.choose_row_tile(mS, row_tile)
+    sparse_comm = comm == "sparse"
+    a_sets = [set() for _ in range(c)]   # absolute A rows read at fiber v
+    b_sets = [set() for _ in range(c)]   # B cols read at fiber v
     blocks, row_off = [], []
     for u in range(L):
         for v in range(c):
             b = u * c + v
             br, bc, bv = common.extract_block(rows, cols, vals,
                                               b * mS, (b + 1) * mS, 0, n)
+            if sparse_comm:
+                a_sets[v].update((np.unique(br) + b * mS).tolist())
+                b_sets[v].update(np.unique(bc).tolist())
             blocks.append((br, bc, bv))
             row_off.append(b * mS)
     rl, cl, vl, tb = common.pack_block_list(blocks, (mS, n), row_tile,
@@ -96,12 +114,53 @@ def plan_s15(grid: Grid15, rows, cols, vals, m: int, n: int, r: int, *,
     shp = (L, c) + rl.shape[1:]
     meta = MetaS15(mS, r * c // p, common.BlockMeta(
         np.array(row_off).reshape(L, c), np.zeros((L, c), np.int64), (m, n)))
+    sup, smeta = ((), None) if not sparse_comm else _sparse_sup(
+        grid, a_sets, b_sets, m, n, sh, compress)
     return PlanS15(
         jax.device_put(rl.reshape(shp), sh),
         jax.device_put(cl.reshape(shp), sh),
         jax.device_put(vl.reshape(shp), sh),
         jax.device_put(tb.reshape((L, c) + tb.shape[1:]), sh),
-        m, n, r, row_tile, tiling, meta)
+        m, n, r, row_tile, tiling, meta, sup, smeta)
+
+
+def _sparse_sup(grid: Grid15, a_sets, b_sets, m, n, sh, compress):
+    """Pad + align the comm="sparse" support sets into device arrays.
+
+    Slabs are full-height, so the support is receiver-determined: per
+    offset d the sender at fiber v ships rows R[(v+d) % c] of its own
+    column slab and scatters arrivals at its constant R[v].  One channel
+    per dense operand (A rows / B cols); per-channel crossover against
+    the dense slab height.
+    """
+    L, c = grid.L, grid.c
+    cross = costmodel.SPARSE_CROSSOVER
+
+    def grid_sets(pick):
+        out = np.empty((L, c), object)
+        for u in range(L):
+            for v in range(c):
+                out[u, v] = pick(v)
+        return out
+
+    def channel(sets, height):
+        sorted_ = [np.array(sorted(sets[v]), np.int64) for v in range(c)]
+        w = max(1, max(s.size for s in sorted_))
+        if c == 1 or w > cross * height:
+            return (), (), 0, False
+        send = tuple(
+            jax.device_put(common.pad_sets(
+                grid_sets(lambda v: sorted_[(v + d) % c]), w, 0), sh)
+            for d in range(1, c))
+        recv = jax.device_put(common.pad_sets(
+            grid_sets(lambda v: sorted_[v]), w, height), sh)
+        return send, (recv,), w, True
+
+    a_send, a_recv, wa, ga = channel(a_sets, m)
+    b_send, b_recv, wb, gb = channel(b_sets, n)
+    sup = (a_send, a_recv, b_send, b_recv)
+    return sup, common.SparseMeta(gather=ga, gather_b=gb, wg=wa, wg_b=wb,
+                                  compress=compress)
 
 
 def _coo(plan, rl, cl, vl, tb):
@@ -124,14 +183,16 @@ def _exec(grid: Grid15, plan: PlanS15, body, A, B, out_specs,
     slabs split over the layer axis, replicated along the fiber."""
     mesh, lay, fib = grid.mesh, grid.layer, grid.fiber
     s_spec = P(lay, fib)
+    sup_specs = jax.tree_util.tree_map(lambda _: s_spec, plan.sup)
     fn = common.shard_map(
         body, mesh=mesh,
         in_specs=((s_spec,) * 4,
                   a_spec if a_spec is not None else P(None, (lay, fib)),
-                  b_spec if b_spec is not None else P(None, (lay, fib))),
+                  b_spec if b_spec is not None else P(None, (lay, fib)),
+                  sup_specs),
         out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
-    return fn(s_pack, A, B)
+    return fn(s_pack, A, B, plan.sup)
 
 
 def replicated_spec(grid: Grid15) -> P:
@@ -259,6 +320,22 @@ def _gather_cols(x, fib):
     return jax.lax.all_gather(x, fib, axis=1, tiled=True)
 
 
+def _sq_sup(sup):
+    """Per-device view of the support arrays (drop (layer, fiber) dims)."""
+    return jax.tree_util.tree_map(lambda x: x[0, 0], sup)
+
+
+def _gather_side(plan, x, sup, fib, c, side):
+    """Fiber all-gather of one dense operand, support-pruned when won."""
+    sm = plan.smeta
+    on = sm is not None and (sm.gather if side == 0 else sm.gather_b)
+    if not on:
+        return _gather_cols(x, fib)
+    send, recv = sup[2 * side], sup[2 * side + 1][0]
+    return common.pruned_gather_cols(x, send, recv, fib, c,
+                                     compress=sm.compress)
+
+
 @functools.partial(jax.jit, static_argnums=(0,),
                    static_argnames=("pre_gathered",))
 def sddmm_s15(grid: Grid15, plan: PlanS15, A, B,
@@ -271,10 +348,13 @@ def sddmm_s15(grid: Grid15, plan: PlanS15, A, B,
     lay, fib, L = grid.layer, grid.fiber, grid.L
     pre_a, pre_b = pre_gathered
 
-    def body(s, A_loc, B_loc):
+    def body(s, A_loc, B_loc, sup):
         s = tuple(x[0, 0] for x in s)
-        T_A = A_loc if pre_a else _gather_cols(A_loc, fib)
-        T_B = B_loc if pre_b else _gather_cols(B_loc, fib)
+        sup = _sq_sup(sup)
+        T_A = A_loc if pre_a else _gather_side(plan, A_loc, sup, fib,
+                                               grid.c, 0)
+        T_B = B_loc if pre_b else _gather_side(plan, B_loc, sup, fib,
+                                               grid.c, 1)
         (rl, cl, partial, tb), _ = _sddmm_round(grid, plan, T_A, T_B, s,
                                                 L, lay)
         vals = s[2] * partial            # scale by original samples (home)
@@ -298,9 +378,10 @@ def spmma_s15(grid: Grid15, plan: PlanS15, B, pre_gathered: bool = False):
     """
     lay, fib, L = grid.layer, grid.fiber, grid.L
 
-    def body(s, _A, B_loc):
+    def body(s, _A, B_loc, sup):
         s = tuple(x[0, 0] for x in s)
-        T_B = B_loc if pre_gathered else _gather_cols(B_loc, fib)
+        T_B = B_loc if pre_gathered else _gather_side(
+            plan, B_loc, _sq_sup(sup), fib, grid.c, 1)
         slabs = _spmm_round(grid, plan, T_B, s, L, lay)
         return slabs[None, None]
 
@@ -343,10 +424,13 @@ def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "auto",
     lay, fib, L = grid.layer, grid.fiber, grid.L
     pre_a, pre_b = pre_gathered
 
-    def body(s, A_loc, B_loc):
+    def body(s, A_loc, B_loc, sup):
         s = tuple(x[0, 0] for x in s)
-        T_A = A_loc if pre_a else _gather_cols(A_loc, fib)
-        T_B = B_loc if pre_b else _gather_cols(B_loc, fib)
+        sup = _sq_sup(sup)
+        T_A = A_loc if pre_a else _gather_side(plan, A_loc, sup, fib,
+                                               grid.c, 0)
+        T_B = B_loc if pre_b else _gather_side(plan, B_loc, sup, fib,
+                                               grid.c, 1)
         (rl, cl, partial, tb), structs = _sddmm_round(grid, plan, T_A, T_B,
                                                       s, L, lay)
         r_vals = s[2] * partial
@@ -366,7 +450,7 @@ def fusedmm_s15(grid: Grid15, plan: PlanS15, A, B, elision: str = "auto",
             v_idx = jax.lax.axis_index(fib)
             w = T_B.shape[1] // grid.c
             B_back = jax.lax.dynamic_slice_in_dim(T_B, v_idx * w, w, axis=1)
-            T_B = jax.lax.all_gather(B_back, fib, axis=1, tiled=True)
+            T_B = _gather_side(plan, B_back, sup, fib, grid.c, 1)
         slabs = _spmm_round(grid, plan, T_B, (rl, cl, r_vals, tb), L, lay)
         return slabs[None, None], r_vals[None, None]
 

@@ -70,6 +70,9 @@ class PlanS25:
     row_tile: int = dataclasses.field(metadata=dict(static=True))
     tiling: costmodel.Tiling = dataclasses.field(metadata=dict(static=True))
     meta: object = dataclasses.field(metadata=dict(static=True))
+    sup: tuple = ()             # comm="sparse" support index arrays
+    smeta: object = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def mS(self):
@@ -93,18 +96,30 @@ class MetaS25:
 
 
 def plan_s25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
-             row_tile: int = 256, nz_block: int = 256,
-             group: int = 1) -> PlanS25:
+             row_tile: int = 256, nz_block: int = 256, group: int = 1,
+             comm: str = "dense", compress=None) -> PlanS25:
+    """Pack the stationary S block per layer position (host, amortized).
+
+    comm="sparse": the stationary block (x, y) reads its A r-chunks only
+    at its row support and its B r-chunks only at its column support —
+    both constant across phases, since only the chunk's column window
+    changes.  Each phase's chunk ships directly from its home position,
+    pruned to the receiver's support.  The fiber value traffic (the
+    3*phi term) and the traveling output chunks stay dense.
+    """
     G, c, p = grid.G, grid.c, grid.p
     assert m % G == 0 and n % G == 0 and r % (G * c) == 0
     mS, nS, rc = m // G, n // G, r // (G * c)
     row_tile = common.choose_row_tile(mS, row_tile)
 
     blocks, row_off, col_off = [], [], []
+    rsup = np.empty((G, G), object)
+    csup = np.empty((G, G), object)
     for x in range(G):
         for y in range(G):
             br, bc, bv = common.extract_block(
                 rows, cols, vals, x * mS, (x + 1) * mS, y * nS, (y + 1) * nS)
+            rsup[x, y], csup[x, y] = np.unique(br), np.unique(bc)
             blocks.append((br, bc, bv))
             row_off.append(x * mS), col_off.append(y * nS)
     rl, cl, vl, tb = common.pack_block_list(blocks, (mS, nS), row_tile,
@@ -131,10 +146,55 @@ def plan_s25(grid: Grid25, rows, cols, vals, m: int, n: int, r: int, *,
     meta = MetaS25(mS, nS, rc, common.BlockMeta(
         np.array(row_off).reshape(G, G), np.array(col_off).reshape(G, G),
         (m, n)))
+    sup, smeta = ((), None) if comm != "sparse" else _sparse_sup(
+        grid, rsup, csup, mS, nS, sh, compress)
     return PlanS25(
         jax.device_put(rl_g, sh), jax.device_put(cl_g, sh),
         jax.device_put(vl_g, sh), jax.device_put(tb_g, sh),
-        m, n, r, row_tile, tiling, meta)
+        m, n, r, row_tile, tiling, meta, sup, smeta)
+
+
+def _sparse_sup(grid: Grid25, rsup, csup, mS, nS, sh, compress):
+    """Pad + align the comm="sparse" support sets into device arrays.
+
+    Chunks are full-height within their layer block, so the support is
+    receiver-determined and phase-constant: at phase t device (x, y, z)
+    receives its A chunk from grid-col (y+t) % G pruned to rsup[x, y],
+    and its B chunk from grid-row (x+t) % G pruned to csup[x, y].  One
+    channel per traveling operand, each with its own crossover.
+    """
+    G, c = grid.G, grid.c
+    cross = costmodel.SPARSE_CROSSOVER
+
+    def channel(sup2, height, sender):
+        w = max(1, max(sup2[x, y].size for x in range(G) for y in range(G)))
+        if G == 1 or w > cross * height:
+            return (), (), 0, False
+        send = []
+        for t in range(1, G):
+            s_t = np.empty((G, G, c), object)
+            for x in range(G):
+                for y in range(G):
+                    for z in range(c):
+                        s_t[x, y, z] = sup2[sender(x, y, t)]
+            send.append(jax.device_put(common.pad_sets(s_t, w, 0), sh))
+        recv = np.empty((G, G, c), object)
+        for x in range(G):
+            for y in range(G):
+                for z in range(c):
+                    recv[x, y, z] = sup2[x, y]
+        recv = jax.device_put(common.pad_sets(recv, w, height), sh)
+        return tuple(send), (recv,), w, True
+
+    a_send, a_recv, wa, sa = channel(
+        rsup, mS, lambda x, y, t: (x, (y - t) % G))
+    b_send, b_recv, wb, sb = channel(
+        csup, nS, lambda x, y, t: ((x - t) % G, y))
+    sup = (a_send, a_recv, b_send, b_recv)
+    return sup, common.SparseMeta(shift=sa, shift_b=sb,
+                                  ws=(wa,) if sa else (),
+                                  ws_b=(wb,) if sb else (),
+                                  compress=compress)
 
 
 def skew_dense(grid: Grid25, X: np.ndarray, along: str) -> jax.Array:
@@ -184,15 +244,49 @@ def _shift_back(x, axis_name, size):
 
 def _exec(grid: Grid25, plan: PlanS25, body, A_sk, B_sk, out_specs):
     s_spec = P(grid.row, grid.col, grid.fiber)
+    sup_specs = jax.tree_util.tree_map(lambda _: s_spec, plan.sup)
     fn = common.shard_map(
         body, mesh=grid.mesh,
-        in_specs=((s_spec,) * 4, s_spec, s_spec),
+        in_specs=((s_spec,) * 4, s_spec, s_spec, sup_specs),
         out_specs=out_specs)
     s_pack = (plan.rows_local, plan.cols, plan.vals, plan.tile_base)
-    return fn(s_pack, A_sk, B_sk)
+    return fn(s_pack, A_sk, B_sk, plan.sup)
 
 
-def _sddmm_round(grid, plan, s, A0, B0):
+def _sq_sup(sup):
+    """Per-device view of the support arrays (drop grid dims)."""
+    return jax.tree_util.tree_map(lambda x: x[0, 0, 0], sup)
+
+
+def _a_sparse(plan) -> bool:
+    return plan.smeta is not None and plan.smeta.shift
+
+
+def _b_sparse(plan) -> bool:
+    return plan.smeta is not None and plan.smeta.shift_b
+
+
+def _r_chunks(grid, plan, X0, send, recv, axis_name, out_rows,
+              barrier=False):
+    """Per-phase r-chunks via direct pruned sends from each chunk's home.
+
+    Phase t's chunk sits t positions up the travel axis, so one ppermute
+    with perm i -> (i-t) % G replaces the dense ring hop; the payload is
+    the receiver's (phase-constant) support.  barrier=True keeps a
+    replay round (FusedMM "none") out of XLA's CSE.
+    """
+    G = grid.G
+    src = jax.lax.optimization_barrier(X0) if barrier else X0
+    chunks = [X0]
+    for t in range(1, G):
+        perm = [(i, (i - t) % G) for i in range(G)]
+        chunks.append(common.pruned_permute(
+            src, send[t - 1], recv[0], perm, axis_name, out_rows,
+            compress=plan.smeta.compress))
+    return chunks
+
+
+def _sddmm_round(grid, plan, s, A0, B0, sup=()):
     """Cannon round over r-chunks; returns layer-partial dots (nb, k).
 
     The A/B chunk shifts for phase t+1 are issued before the phase-t
@@ -200,30 +294,49 @@ def _sddmm_round(grid, plan, s, A0, B0):
     Also returns ``bchunks``, the per-phase resident B chunks — local
     references, free unless a caller consumes them (the "reuse"
     B-chunk-replay schedule feeds them to the SpMM round, eliding B's
-    second trip around the grid).
+    second trip around the grid).  comm="sparse" replaces either ring
+    with per-phase direct pruned sends (see _r_chunks).
     """
     G = grid.G
     tk = plan.tiling.kernel_kwargs()
     rl, cl, _, tb = s
     partial = jnp.zeros(rl.shape, jnp.float32)
     ones = jnp.ones(rl.shape, jnp.float32)
+    achunks = bchunks_in = None
+    if _a_sparse(plan):
+        achunks = _r_chunks(grid, plan, A0, sup[0], sup[1], grid.col,
+                            plan.mS)
+    if _b_sparse(plan):
+        bchunks_in = _r_chunks(grid, plan, B0, sup[2], sup[3], grid.row,
+                               plan.nS)
     A_cur, B_cur = A0, B0
     bchunks = []
     if G > 1:
-        A_nxt = _shift_back(A_cur, grid.col, G)
-        B_nxt = _shift_back(B_cur, grid.row, G)
+        if achunks is None:
+            A_nxt = _shift_back(A_cur, grid.col, G)
+        if bchunks_in is None:
+            B_nxt = _shift_back(B_cur, grid.row, G)
     for t in range(G):
         bchunks.append(B_cur)
         dots = ops.sddmm(A_cur, B_cur, _coo(plan, rl, cl, ones, tb),
                          **tk).vals
         partial = partial + dots
-        if G > 1:
-            A_cur, B_cur = A_nxt, B_nxt
+        nt = t + 1 if t + 1 < G else 0
+        if achunks is not None:
+            A_cur = achunks[nt]
+        elif G > 1:
+            A_cur = A_nxt
             if t + 1 < G:
                 A_nxt = _shift_back(A_nxt, grid.col, G)
-                B_nxt = _shift_back(B_nxt, grid.row, G)
         else:
             A_cur = _shift_back(A_cur, grid.col, G)
+        if bchunks_in is not None:
+            B_cur = bchunks_in[nt]
+        elif G > 1:
+            B_cur = B_nxt
+            if t + 1 < G:
+                B_nxt = _shift_back(B_nxt, grid.row, G)
+        else:
             B_cur = _shift_back(B_cur, grid.row, G)
     return partial, A_cur, B_cur, bchunks
 
@@ -233,10 +346,11 @@ def sddmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
     """R = S * (A @ B.T); values end fiber-sharded at home (nb/c, k)."""
     fib = grid.fiber
 
-    def body(s, A_loc, B_loc):
+    def body(s, A_loc, B_loc, sup):
         s = tuple(x[0, 0, 0] for x in s)
         partial, _, _, _ = _sddmm_round(grid, plan, s,
-                                        A_loc[0, 0, 0], B_loc[0, 0, 0])
+                                        A_loc[0, 0, 0], B_loc[0, 0, 0],
+                                        _sq_sup(sup))
         # sum partials over the fiber, back to home value shards
         mine = jax.lax.psum_scatter(partial, fib, scatter_dimension=0,
                                     tiled=True)
@@ -246,22 +360,28 @@ def sddmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk):
                  P(grid.row, grid.col, grid.fiber))
 
 
-def _spmm_round(grid, plan, s, B0):
+def _spmm_round(grid, plan, s, B0, sup=(), barrier=False):
     """Cannon round for SpMM: the traveling output accumulates, so its
     shift trails the kernel; the next contribution is precomputed from the
-    double-buffered incoming B chunk while the output is in flight."""
+    double-buffered incoming B chunk while the output is in flight.
+    comm="sparse" replaces the B ring with direct pruned sends (the
+    traveling output keeps its dense, order-preserving shifts)."""
     G = grid.G
     tk = plan.tiling.kernel_kwargs()
     rl, cl, vals, tb = s
     coo = _coo(plan, rl, cl, vals, tb)
     out_cur = jnp.zeros((plan.mS, plan.rc), jnp.float32)
+    chunks = _r_chunks(grid, plan, B0, sup[2], sup[3], grid.row, plan.nS,
+                       barrier=barrier) if _b_sparse(plan) else None
     contrib = ops.spmm(coo, B0, m=plan.mS, **tk)
-    B_nxt = _shift_back(B0, grid.row, G) if G > 1 else None
+    if chunks is None:
+        B_nxt = _shift_back(B0, grid.row, G) if G > 1 else None
     for t in range(G):
         out_cur = _shift_back(out_cur + contrib, grid.col, G)
         if t + 1 < G:
-            contrib = ops.spmm(coo, B_nxt, m=plan.mS, **tk)
-            if t + 2 < G:
+            B_in = chunks[t + 1] if chunks is not None else B_nxt
+            contrib = ops.spmm(coo, B_in, m=plan.mS, **tk)
+            if chunks is None and t + 2 < G:
                 B_nxt = _shift_back(B_nxt, grid.row, G)
     return out_cur
 
@@ -289,10 +409,11 @@ def spmma_s25(grid: Grid25, plan: PlanS25, B_sk):
     """A = S @ B; output chunks end in skewed-home layout."""
     G, fib = grid.G, grid.fiber
 
-    def body(s, _A, B_loc):
+    def body(s, _A, B_loc, sup):
         rl, cl, vshard, tb = tuple(x[0, 0, 0] for x in s)
         vals = jax.lax.all_gather(vshard, fib, tiled=True)   # (nb, k)
-        out = _spmm_round(grid, plan, (rl, cl, vals, tb), B_loc[0, 0, 0])
+        out = _spmm_round(grid, plan, (rl, cl, vals, tb), B_loc[0, 0, 0],
+                          _sq_sup(sup))
         return out[None, None, None]
 
     dummy = jnp.zeros((grid.G, grid.G, grid.c, 1, 1), jnp.float32)
@@ -368,12 +489,14 @@ def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk,
                          f"impossible here — see docs/algorithms.md)")
     G, fib = grid.G, grid.fiber
 
-    def body(s, A_loc, B_loc):
+    def body(s, A_loc, B_loc, sup):
         s = tuple(x[0, 0, 0] for x in s)
+        sup = _sq_sup(sup)
         rl, cl, vshard, tb = s
         partial, A_home, B_home, bchunks = _sddmm_round(grid, plan, s,
                                                         A_loc[0, 0, 0],
-                                                        B_loc[0, 0, 0])
+                                                        B_loc[0, 0, 0],
+                                                        sup)
         mine = jax.lax.psum_scatter(partial, fib, scatter_dimension=0,
                                     tiled=True)                  # RS
         r_mine = vshard * mine
@@ -382,7 +505,11 @@ def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk,
             out = _spmm_round_cached(grid, plan, (rl, cl, r_vals, tb),
                                      bchunks)
         else:
-            out = _spmm_round(grid, plan, (rl, cl, r_vals, tb), B_home)
+            # barrier: the replay's pruned sends are syntactically
+            # identical to round 1's — keep them out of XLA's CSE so the
+            # unoptimized baseline is priced honestly.
+            out = _spmm_round(grid, plan, (rl, cl, r_vals, tb), B_home,
+                              sup, barrier=True)
         return out[None, None, None], r_mine[None, None, None]
 
     return _exec(grid, plan, body, A_sk, B_sk,

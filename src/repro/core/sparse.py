@@ -256,6 +256,28 @@ def rmat(scale: int, edge_factor: int = 16, seed: int = 0,
     return rows, cols, vals
 
 
+def powerlaw_problem(scale: int, r: int, *, edge_factor: int = 16,
+                     seed: int = 0, a: float = 0.57, b: float = 0.19,
+                     c: float = 0.19):
+    """One seeded power-law (rows, cols, vals, X, Y) problem bundle.
+
+    The RMAT surrogate for the paper's headline web/social matrices
+    (m = n = 2**scale), unpermuted so the degree skew — many empty or
+    near-empty rows and columns, a few dense hubs — survives into the
+    per-device packs.  This is the regime where ``comm="sparse"``
+    support pruning beats the dense Table-III optimum outright: the
+    row/col supports cover only a fraction of each fiber slab.  Same
+    bundle contract as :func:`random_problem` (dense operands draw from
+    ``seed + 1``), so benchmarks and dist_scripts can swap generators.
+    """
+    rows, cols, vals = rmat(scale, edge_factor, seed=seed, a=a, b=b, c=c)
+    m = n = 1 << scale
+    rng = np.random.default_rng(seed + 1)
+    X = rng.standard_normal((m, r)).astype(np.float32)
+    Y = rng.standard_normal((n, r)).astype(np.float32)
+    return rows, cols, vals, X, Y
+
+
 def random_permute(rows: np.ndarray, cols: np.ndarray, m: int, n: int,
                    seed: int = 0):
     """Random row+col permutation for load balance (paper §VI)."""

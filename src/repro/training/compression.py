@@ -1,10 +1,22 @@
-"""Gradient compression for the data-parallel all-reduce.
+"""Lossy wire formats for distributed collectives, with error feedback.
 
-int8 block-quantized gradients with error feedback: before the DP psum,
-each gradient tensor is scaled to int8 per 256-element block; the
-quantization residual is carried to the next step (error feedback keeps
-convergence).  This 4x-shrinks the dominant multi-pod collective, the
-classic distributed-optimization trick for slow inter-pod links.
+Two compression levels share this module:
+
+* **bf16 payload casts** — the wire format of the support-pruned sends
+  (``repro.core.common.pruned_permute`` and friends ship payloads
+  through :func:`to_bf16`/:func:`from_bf16` when a plan carries
+  ``compress="bf16"``).  Halves every pruned channel's bytes; lossy, so
+  the exactness contract drops from bitwise to ~3 decimal digits.
+* **int8 block-quantized gradients** — before the data-parallel psum,
+  each gradient tensor is scaled to int8 per 256-element block.  This
+  4x-shrinks the dominant multi-pod collective, the classic
+  distributed-optimization trick for slow inter-pod links.
+
+Both are meant to run under **error feedback**: the compression residual
+is carried to the next step and added back before compressing again, so
+the *accumulated* error stays bounded and convergence is preserved
+(:class:`ErrorFeedback` for the generic per-tensor form,
+:func:`compressed_psum` for the fused int8+psum form).
 """
 from __future__ import annotations
 
@@ -12,6 +24,50 @@ import jax
 import jax.numpy as jnp
 
 BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# bf16 wire casts (the compress="bf16" payload format of the pruned sends)
+# ---------------------------------------------------------------------------
+
+def to_bf16(x):
+    """f32 payload -> bf16 wire format (half the bytes on the wire)."""
+    return x.astype(jnp.bfloat16)
+
+
+def from_bf16(x, dtype=jnp.float32):
+    """bf16 wire payload -> compute dtype at the receiver."""
+    return x.astype(dtype)
+
+
+class ErrorFeedback:
+    """Per-tensor compression-residual accumulator (host-side state).
+
+    ``seen = ef(tree)`` returns what the receivers observe after the
+    lossy round-trip and folds the residual ``corrected - seen`` into
+    the next call, so repeated lossy steps do not accumulate drift —
+    the standard error-feedback guarantee.  The default round-trip is
+    the bf16 wire cast (what ``compress="bf16"`` pruned sends apply);
+    pass any elementwise lossy function to model other formats.
+
+    State lives on the host across steps, mirroring how a training loop
+    owns its optimizer state; one accumulator per compressed tensor
+    tree.
+    """
+
+    def __init__(self, roundtrip=None):
+        self.residual = None
+        self._roundtrip = roundtrip or \
+            (lambda x: from_bf16(to_bf16(x), x.dtype))
+
+    def __call__(self, tree):
+        if self.residual is None:
+            self.residual = jax.tree.map(
+                lambda g: jnp.zeros_like(g), tree)
+        corrected = jax.tree.map(lambda g, e: g + e, tree, self.residual)
+        seen = jax.tree.map(self._roundtrip, corrected)
+        self.residual = jax.tree.map(lambda c, s: c - s, corrected, seen)
+        return seen
 
 
 def _pad_to(x, mult):

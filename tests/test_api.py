@@ -113,19 +113,70 @@ def test_api_parity_vs_ref(name):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("comm", ("dense", "sparse"))
 @pytest.mark.parametrize("name,el", ELISION_CELLS)
-def test_fusedmm_parity_per_cell(name, el):
+def test_fusedmm_parity_per_cell(name, el, comm):
     """Every registry-declared (family, elision) cell executes and
     matches the dense oracle — a declared-but-unimplemented cell fails
-    exactly here."""
+    exactly here.  Parametrized over the wire format: comm="sparse"
+    plans and runs the support-pruned program through the same cells
+    (degenerate single-device channels here; the multi-device pruning is
+    tests/dist_scripts/check_comm_sparse.py)."""
     rows, cols, vals, X, Y, Sd = _problem_data()
-    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm=name)
+    prob = _make(rows, cols, vals, Sd.shape, X.shape[1], algorithm=name,
+                 comm=comm)
     wantR = np.asarray(ref.sddmm_dense(jnp.asarray(X), jnp.asarray(Y),
                                        jnp.asarray(Sd)))
     want_out, _ = ref.fusedmm_dense(X, Y, Sd)
     out, R = prob.fusedmm(X, Y, elision=el)
     np.testing.assert_allclose(out, want_out, rtol=2e-3, atol=2e-3)
     np.testing.assert_allclose(R.to_dense(), wantR, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("name,el", ELISION_CELLS)
+def test_comm_sparse_bitwise_vs_dense(name, el):
+    """comm="sparse" is bitwise-identical to comm="dense" at every
+    registry cell (the executors prune only input-operand movements;
+    every accumulation keeps its order)."""
+    rows, cols, vals, X, Y, Sd = _problem_data(seed=4)
+    pd = _make(rows, cols, vals, Sd.shape, 8, algorithm=name)
+    ps = _make(rows, cols, vals, Sd.shape, 8, algorithm=name,
+               comm="sparse")
+    od, Rd = pd.fusedmm(X, Y, elision=el)
+    os_, Rs = ps.fusedmm(X, Y, elision=el)
+    np.testing.assert_array_equal(od, os_)
+    np.testing.assert_array_equal(Rd.values(), Rs.values())
+    np.testing.assert_array_equal(pd.spmm_t(X), ps.spmm_t(X))
+
+
+def test_comm_mode_plumbing():
+    """comm/compress validate, resolve from "auto" via the support
+    densities, survive the meta_dict round-trip, and key the Session."""
+    rows, cols, vals, X, Y, _ = _problem_data(seed=12)
+    with pytest.raises(ValueError, match="comm"):
+        _make(rows, cols, vals, (64, 64), 8, comm="nope")
+    with pytest.raises(ValueError, match="compress"):
+        _make(rows, cols, vals, (64, 64), 8, compress="fp4")
+    auto = _make(rows, cols, vals, (64, 64), 8, comm="auto")
+    assert auto.comm == costmodel.choose_comm(rows, cols, 64, 64)
+    prob = _make(rows, cols, vals, (64, 64), 8, algorithm="d15",
+                 comm="sparse", compress="bf16")
+    meta = prob.meta_dict()
+    assert meta["comm"] == "sparse" and meta["compress"] == "bf16"
+    back = api.problem_from_meta(meta, rows, cols, vals,
+                                 devices=_dev1())
+    assert back.comm == "sparse" and back.compress == "bf16"
+    # derived problems inherit the wire format
+    assert prob.transposed().comm == "sparse"
+    assert prob.with_values(vals * 2).comm == "sparse"
+    # sessions key on comm: same operand under each mode -> two entries
+    dense = _make(rows, cols, vals, (64, 64), 8, algorithm="d15")
+    sess = api.Session()
+    sess.replicate(dense, X, "x")
+    sess.replicate(prob, X, "x")
+    assert sess.stats() == dict(hits=0, misses=2, entries=2, capacity=16)
+    sess.replicate(prob, X, "x")
+    assert sess.stats()["hits"] == 1
 
 
 def test_undeclared_elision_rejected():

@@ -302,3 +302,41 @@ def test_message_counts():
     c2 = cm.words_fusedmm("d15_local_fusion", p=64, c=4, n=1 << 16, r=64,
                           nnz=1 << 18)
     assert c2.messages == 64 / 4 + 2 * 3
+
+
+def test_support_density_and_choose_comm_rule():
+    import numpy as np
+    rows = np.array([0, 1, 2, 3])
+    cols = np.array([0, 0, 1, 1])
+    assert cm.support_density(rows, cols, 8, 8) == (0.5, 0.25)
+    assert cm.choose_comm(rows, cols, 8, 8) == "sparse"
+    # full support on both axes: index+pad overhead loses -> dense
+    full = np.arange(8)
+    assert cm.support_density(full, full, 8, 8) == (1.0, 1.0)
+    assert cm.choose_comm(full, full, 8, 8) == "dense"
+    # ONE sparse side is enough (channels fall back independently)
+    assert cm.choose_comm(full, np.zeros(8, int), 8, 8) == "sparse"
+
+
+def test_words_sparse_monotone_in_support_density():
+    """The nnz-dependent word formulas shrink monotonically with the
+    support densities and beat the dense Table-III rows outright in the
+    skewed regime (rho = 0.1) — the comm="auto" premise."""
+    kw = dict(p=64, c=4, m=1 << 14, n=1 << 14, r=128, nnz=1 << 18)
+    dkw = dict(p=64, c=4, n=1 << 14, r=128, nnz=1 << 18)
+    for alg in sorted(cm.FAMILY_ELISION):
+        dense = cm.words_fusedmm(alg, **dkw).words
+        prev = None
+        for rho in (1.0, 0.7, 0.5, 0.3, 0.1):
+            w = cm.words_fusedmm_sparse(alg, rho_row=rho, rho_col=rho,
+                                        **kw).words
+            assert w > 0
+            if prev is not None:
+                assert w <= prev + 1e-6, (alg, rho)
+            prev = w
+        assert prev < dense, alg
+    for fam in cm.FAMILIES:
+        dense = cm.words_spmm(fam, **dkw).words
+        hi = cm.words_spmm_sparse(fam, rho_row=1.0, rho_col=1.0, **kw).words
+        lo = cm.words_spmm_sparse(fam, rho_row=0.1, rho_col=0.1, **kw).words
+        assert lo <= hi + 1e-6 and lo < dense, fam

@@ -87,3 +87,23 @@ def test_random_problem_deterministic_and_matches_er():
     np.testing.assert_array_equal(
         a[3], rng.standard_normal((32, 4)).astype(np.float32))
     assert a[3].shape == (32, 4) and a[4].shape == (48, 4)
+
+
+def test_powerlaw_problem_deterministic_and_skewed():
+    """The RMAT bundle is seed-deterministic, honors the random_problem
+    contract, and produces the degree skew comm="sparse" exploits:
+    partial row/col support with hub rows far above the mean degree."""
+    a = sparse.powerlaw_problem(8, 16, edge_factor=8, seed=3)
+    b = sparse.powerlaw_problem(8, 16, edge_factor=8, seed=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    rows, cols, vals, X, Y = a
+    n = 1 << 8
+    assert X.shape == (n, 16) and Y.shape == (n, 16)
+    assert rows.max() < n and cols.max() < n and len(vals) == len(rows)
+    from repro.core import costmodel
+    rho_r, rho_c = costmodel.support_density(rows, cols, n, n)
+    assert rho_r < 0.9 and rho_c < 0.9, (rho_r, rho_c)
+    deg = np.bincount(rows, minlength=n)
+    assert deg.max() > 4 * deg.mean()
+    assert costmodel.choose_comm(rows, cols, n, n) == "sparse"
