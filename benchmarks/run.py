@@ -23,6 +23,7 @@ MODULES = [
     ("fig7", "benchmarks.bench_fig7_replication"),
     ("fig8", "benchmarks.bench_fig8_strong_scaling"),
     ("fig9", "benchmarks.bench_fig9_apps"),
+    ("serving", "benchmarks.bench_serving"),
 ]
 
 

@@ -224,6 +224,54 @@ def run_als_distributed(m=1024, n=1024, nnz_per_row=8, r=32, rounds=3,
 
 
 # ---------------------------------------------------------------------------
+# Query mode: trained factors served through repro.serving — many
+# clients' user-item score queries coalesced per tick (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def deploy_factors(pool, rows, cols, vals, shape, U, V, *,
+                   algorithm: str = "auto", c=None, devices=None,
+                   comm: str = "dense", row_tile: int = 32,
+                   nz_block: int = 32):
+    """Deploy trained CF factors for serving: the ratings graph plus the
+    factor matrices ``U (m, r)`` / ``V (n, r)`` as stationary operands.
+
+    The pool key digests the factors too, so re-deploying after a
+    training refresh is a miss (fresh replication), while the identical
+    deploy is a hit (warm Session).  Prediction traffic then moves only
+    (user, item) coordinate lists.
+    """
+    U = np.asarray(U, np.float32)
+    V = np.asarray(V, np.float32)
+    if U.shape[1] != V.shape[1]:
+        raise ValueError(f"factor widths differ: {U.shape} vs {V.shape}")
+    return pool.deploy(rows, cols, vals, shape, U.shape[1],
+                       operands={"U": U, "V": V}, algorithm=algorithm,
+                       c=c, devices=devices, comm=comm,
+                       row_tile=row_tile, nz_block=nz_block)
+
+
+def predict_scores(engine, deployment, users, items, *,
+                   arrival: float = 0.0):
+    """Queue a prediction query: ``score_k = <U_users[k], V_items[k]>``.
+
+    Exactly the paper's CF inference shape — an SDDMM sampled at the
+    requested (user, item) pairs against the deployed factors.  Every
+    prediction ticket shares the deployed operands, so a tick's worth
+    of clients coalesces into ONE union-of-patterns SDDMM round.
+    """
+    return engine.submit_score(deployment, users, items, "U", "V",
+                               arrival=arrival)
+
+
+def lookup_embeddings(engine, deployment, weights, *,
+                      arrival: float = 0.0):
+    """Queue an embedding aggregation: ``out = ratings_graph @ weights``
+    (``weights (n, w)``) — the neighborhood-lookup shape; all deployed-
+    values lookups in a tick ride one batched-RHS SpMM round."""
+    return engine.submit_aggregate(deployment, weights, arrival=arrival)
+
+
+# ---------------------------------------------------------------------------
 # Sampled-loss embedding training: SGD through the differentiable
 # distributed kernels (repro.core.grads) — the gradient-based sibling of
 # the ALS solver above, FusedMM forward AND backward every step

@@ -205,6 +205,99 @@ def gat_forward_distributed(graphP: api.DistProblem, H0, layers,
 
 
 # ---------------------------------------------------------------------------
+# Query mode: the same layer served through repro.serving, many clients'
+# node queries coalesced per tick (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def gat_deploy_layer(pool, rows, cols, n_nodes, H, p: GATParams, *,
+                     head: int = 0, n_heads: int = 1,
+                     algorithm: str = "auto", c=None, devices=None,
+                     comm: str = "dense", row_tile: int = 32,
+                     nz_block: int = 32):
+    """Deploy one GAT head for serving: graph + precomputed operands.
+
+    At inference the parameters are frozen, so everything stationary is
+    computed once and deployed with the graph: ``Wh`` (the projected
+    embeddings the aggregation SpMM consumes) and the augmented score
+    operands ``A* = [u, 1]`` / ``B* = [1, v]`` whose r=2 SDDMM yields
+    the additive attention logits.  Every client query then moves only
+    coordinates and attention values — the deployment's Session serves
+    the operand replication from cache tick after tick.
+    """
+    H = np.asarray(H, np.float32)
+    d_out = p.W.shape[1] // n_heads
+    W = np.asarray(p.W)[:, head * d_out:(head + 1) * d_out]
+    a1 = np.asarray(p.a1)[head * d_out:(head + 1) * d_out]
+    a2 = np.asarray(p.a2)[head * d_out:(head + 1) * d_out]
+    Wh = H @ W
+    u, v = Wh @ a1, Wh @ a2
+    A_star = np.zeros((n_nodes, 2), np.float32)
+    B_star = np.zeros((n_nodes, 2), np.float32)
+    A_star[:, 0], A_star[:, 1] = u, 1.0
+    B_star[:, 0], B_star[:, 1] = 1.0, v
+    return pool.deploy(rows, cols, np.ones(len(rows), np.float32),
+                       (n_nodes, n_nodes), d_out,
+                       operands={"A": A_star, "B": B_star, "Wh": Wh},
+                       algorithm=algorithm, c=c, devices=devices,
+                       comm=comm, row_tile=row_tile, nz_block=nz_block)
+
+
+def gat_query_edges(deployment, node_ids):
+    """The deployed graph's edges leaving ``node_ids`` (host COO order) —
+    a served query's score pattern."""
+    prob = deployment.problem
+    node_ids = np.unique(np.asarray(node_ids).reshape(-1))
+    mask = np.isin(prob.rows, node_ids)
+    if not mask.any():
+        raise ValueError("queried nodes have no outgoing edges")
+    return prob.rows[mask], prob.cols[mask], mask
+
+
+def gat_submit_scores(engine, deployment, node_ids, *,
+                      arrival: float = 0.0):
+    """Phase 1 of a served GAT query: queue the edge-score SDDMM for the
+    edges leaving ``node_ids``.  All clients' phase-1 tickets share the
+    deployed ``A``/``B`` operands, so a tick's worth of them coalesces
+    into ONE union-of-patterns round."""
+    erows, ecols, _ = gat_query_edges(deployment, node_ids)
+    ticket = engine.submit_score(deployment, erows, ecols, "A", "B",
+                                 arrival=arrival)
+    return ticket, erows
+
+
+def gat_submit_aggregate(engine, deployment, node_ids, scores, *,
+                         arrival: float = 0.0):
+    """Phase 2: LeakyReLU + row softmax on the completed queried rows
+    (the Fig. 9 barrier, now per client), then the aggregation SpMM
+    with the client's attention as a per-request values override (zero
+    outside the queried rows — a row of the SpMM output reads only its
+    own row's values, so the queried rows are exact)."""
+    prob = deployment.problem
+    erows, _, mask = gat_query_edges(deployment, node_ids)
+    e = np.asarray(leaky_relu(jnp.asarray(np.asarray(scores))))
+    attn = row_softmax_coo(erows, e, prob.m)
+    vals = np.zeros(prob.nnz, np.float32)
+    vals[mask] = attn
+    return engine.submit_aggregate(deployment, deployment.operand("Wh"),
+                                   vals=vals, arrival=arrival)
+
+
+def gat_layer_served(engine, deployment, node_ids,
+                     activation=jax.nn.elu):
+    """Single-client convenience: run both phases through the engine
+    (one tick each) and return the layer output rows for ``node_ids``.
+    Matches :func:`gat_layer_distributed`'s rows bitwise for a one-head
+    layer — same padded score width, same softmax, same aggregation."""
+    node_ids = np.unique(np.asarray(node_ids).reshape(-1))
+    t_score, _ = gat_submit_scores(engine, deployment, node_ids)
+    engine.tick()
+    t_agg = gat_submit_aggregate(engine, deployment, node_ids,
+                                 t_score.result())
+    engine.tick()
+    return activation(jnp.asarray(t_agg.result()[node_ids]))
+
+
+# ---------------------------------------------------------------------------
 # Trainable path: the same pipeline through the differentiable
 # repro.core.grads entrypoints, so jax.grad flows end-to-end
 # ---------------------------------------------------------------------------

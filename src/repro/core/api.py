@@ -62,7 +62,7 @@ __all__ = [
     "ALGORITHMS", "Algorithm", "DistProblem", "Session", "SparseResult",
     "make_problem", "sddmm", "spmm", "spmm_t", "fusedmm", "activate",
     "ElasticProblem", "RetryPolicy", "FaultRecoveryError",
-    "RETRYABLE_ERRORS", "problem_from_meta", "degrade",
+    "RETRYABLE_ERRORS", "problem_from_meta", "degrade", "spmm_batched",
 ]
 
 
@@ -810,6 +810,93 @@ class DistProblem:
                 _ones=None, _transposed=None)
         return self._derived_r[r]
 
+    def with_pattern(self, rows, cols, vals=None, *, m: int | None = None,
+                     n: int | None = None) -> "DistProblem":
+        """A *different* sparse pattern on the SAME grid and algorithm —
+        the serving tick's union-of-patterns entry point (docs/serving.md).
+
+        The derived problem shares this problem's grid **object**, family,
+        wire format and tiling knobs, so Session replication state — which
+        is keyed by the grid identity plus operand content — carries over:
+        the deployed factor matrices' fiber gathers, paid once per
+        deployed graph, serve every per-tick query pattern's SDDMM
+        directly.  Packs and posmaps are rebuilt lazily for the new
+        structure (host-side packing, O(nnz) of the query pattern).
+        ``vals=None`` installs unit samples (the SDDMM mask).  The shape
+        defaults to this problem's ``(m, n)``; a different shape is
+        validated against the family's feasibility rules."""
+        m = self.m if m is None else int(m)
+        n = self.n if n is None else int(n)
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        if rows.ndim != 1 or rows.shape != cols.shape:
+            raise ValueError("pattern rows/cols must be matching 1-D "
+                             f"arrays, got {rows.shape} / {cols.shape}")
+        if len(rows) == 0:
+            raise ValueError("empty query pattern")
+        vals = (np.ones(len(rows), np.float32) if vals is None
+                else np.asarray(vals, np.float32))
+        if vals.shape != rows.shape:
+            raise ValueError(f"vals length {vals.shape} != pattern "
+                             f"length {rows.shape}")
+        if (int(rows.min()) < 0 or int(rows.max()) >= m
+                or int(cols.min()) < 0 or int(cols.max()) >= n):
+            raise ValueError(f"pattern coordinates outside ({m}, {n})")
+        if (m, n) != (self.m, self.n) and not self.alg.feasible(
+                m=m, n=n, r=self.r, p=self.p, c=self.c):
+            raise ValueError(f"{self.alg.name} infeasible for pattern "
+                             f"shape ({m}, {n}) on this grid")
+        return dataclasses.replace(
+            self, rows=rows, cols=cols, vals=vals, m=m, n=n,
+            _plans={}, _derived_r={}, _posmaps={}, _coo_sort=None,
+            _ones=None, _transposed=None)
+
+    def spmm_batched(self, Ys, vals=None,
+                     session: Optional["Session"] = None,
+                     pad_to: int | None = None) -> List[np.ndarray]:
+        """One SpMM round over column-concatenated right-hand sides.
+
+        ``Ys`` is a sequence of ``(n, r_i)`` host arrays.  They are
+        concatenated along columns, zero-padded up to the smallest
+        feasible width (the summed widths rounded up to the family's
+        r-multiple — or ``pad_to``, a caller-supplied bucket that bounds
+        the set of compiled widths a long-running server accumulates),
+        executed as ONE :meth:`spmm` at that width on the width-derived
+        problem, and split back per request.  An SpMM's output columns
+        are independent — ``out[:, j]`` consumes only ``Y[:, j]``, the
+        nonzero accumulation order never depends on the dense width, and
+        padding columns are zero and dropped — so the batched round is
+        **bitwise-identical** to running each RHS alone (the serving
+        batcher's parity contract, docs/serving.md).  ``vals`` /
+        ``session`` exactly as for :meth:`spmm`."""
+        Ys = [np.asarray(Y, np.float32) for Y in Ys]
+        if not Ys:
+            return []
+        for Y in Ys:
+            if Y.ndim != 2 or Y.shape[0] != self.n:
+                raise ValueError(f"every RHS must be (n={self.n}, r_i), "
+                                 f"got {Y.shape}")
+        widths = [Y.shape[1] for Y in Ys]
+        mult = self.alg.min_r_multiple(self.grid)
+        r_tot = -(-max(sum(widths), 1) // mult) * mult
+        if pad_to is not None:
+            if pad_to < r_tot or pad_to % mult:
+                raise ValueError(f"pad_to={pad_to} must be a multiple of "
+                                 f"{mult} and >= {r_tot}")
+            r_tot = pad_to
+        cat = np.zeros((self.n, r_tot), np.float32)
+        off = 0
+        for Y, w in zip(Ys, widths):
+            cat[:, off:off + w] = Y
+            off += w
+        prob = self if r_tot == self.r else self.with_r(r_tot)
+        out = prob.spmm(cat, vals=vals, session=session)
+        outs, off = [], 0
+        for w in widths:
+            outs.append(out[:, off:off + w])
+            off += w
+        return outs
+
     def transposed(self) -> "DistProblem":
         """The S^T problem on the same grid (for SpMMB-style updates).
 
@@ -1184,6 +1271,15 @@ def spmm_t(problem: DistProblem, A, vals=None,
     return problem.spmm_t(A, vals=vals, session=session)
 
 
+def spmm_batched(problem: DistProblem, Ys, vals=None,
+                 session: Optional[Session] = None,
+                 pad_to: int | None = None) -> List[np.ndarray]:
+    """One SpMM round over many right-hand sides — the serving batcher's
+    aggregation primitive.  See :meth:`DistProblem.spmm_batched`."""
+    return problem.spmm_batched(Ys, vals=vals, session=session,
+                                pad_to=pad_to)
+
+
 def fusedmm(problem: DistProblem, X, Y, elision: str = "auto",
             session: Optional[Session] = None):
     """Distributed FusedMM with *FusedMMA semantics* on every family:
@@ -1428,6 +1524,28 @@ class ElasticProblem:
         return self._run("fusedmm",
                          lambda p: p.fusedmm(X, Y, elision=elision,
                                              session=self.session))
+
+    def spmm_batched(self, Ys, vals=None, pad_to: int | None = None):
+        return self._run(
+            "spmm_batched",
+            lambda p: p.spmm_batched(Ys, vals=vals, session=self.session,
+                                     pad_to=pad_to))
+
+    # -- derived-problem rounds, resiliently ---------------------------------
+    def run_round(self, label: str, fn):
+        """Run one serving round under the typed retry loop.
+
+        ``fn(problem)`` receives the CURRENT deployment problem — after a
+        ``DeviceLost`` the facade degrades ``self.problem`` onto the
+        surviving mesh and calls ``fn`` again with the re-planned
+        problem, so ``fn`` must derive any per-round state (a
+        :meth:`DistProblem.with_pattern` union problem, a width-derived
+        batch problem) from its argument rather than close over a
+        pre-fault derivation.  This is the hook the serving engine's
+        score ticks use: the union-of-patterns problem is rebuilt on the
+        degraded grid each retry, keeping answers bitwise-correct across
+        the re-mesh (tests/dist_scripts/check_serving.py)."""
+        return self._run(label, fn)
 
 
 # ---------------------------------------------------------------------------

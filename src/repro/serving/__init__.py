@@ -1,0 +1,21 @@
+"""Serving layer: continuous batching over the distributed api.
+
+Two sub-stacks share this package:
+
+* the distributed serving engine (requests/pool/batcher/server) —
+  coalesced SDDMM/SpMM rounds over pooled graph deployments, the
+  docs/serving.md subsystem;
+* the local LM decode path (:mod:`repro.serving.engine`) — prefill +
+  greedy decode on the single-process model, imported explicitly so
+  this package does not pull the model stack in for graph serving.
+"""
+from repro.serving.pool import Deployment, SessionPool, content_key
+from repro.serving.requests import (AdmissionError, AggregateRequest,
+                                    RequestQueue, ScoreRequest, Ticket)
+from repro.serving.server import ServingEngine, replay_trace
+
+__all__ = [
+    "AdmissionError", "AggregateRequest", "Deployment", "RequestQueue",
+    "ScoreRequest", "ServingEngine", "SessionPool", "Ticket",
+    "content_key", "replay_trace",
+]

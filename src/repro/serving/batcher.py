@@ -1,0 +1,235 @@
+"""Continuous batcher: coalesce a tick's tickets into few kernel rounds.
+
+Two coalescing transforms, both **bitwise-identical** to running each
+request alone (the parity contract of docs/serving.md, enforced by the
+property tests in tests/test_serving.py):
+
+* **Union-of-patterns SDDMM** for score requests.  All (i, j) pairs of
+  a merge unit are concatenated, deduplicated (``np.unique`` over
+  ``i * n + j`` with ``return_inverse`` for the scatter-back), and run
+  as ONE sampled round via :meth:`DistProblem.with_pattern`.  Each
+  sample's value is a dot over the operand width ``w``; the kernels'
+  r-tiling depends only on (r, local width, VMEM budget) — never on the
+  pattern's nonzero count — so adding samples to the pattern cannot
+  change any individual sample's accumulation order.
+* **Batched-RHS SpMM** for aggregate requests sharing a values key:
+  column-concatenated through :meth:`DistProblem.spmm_batched`, which
+  is column-independent (``out[:, j]`` consumes only ``Y[:, j]``).
+
+Score merge rule (X side; the group already fixed the Y operand and
+width): requests with the SAME ``x_key`` share the operand verbatim;
+requests with DIFFERENT X operands merge only when their queried row
+sets are disjoint — an SDDMM sample (i, j) reads row ``X[i]`` only, so
+scattering each request's queried rows into one combined X is exact.
+Requests that fit neither rule start a new merge unit (still one round
+each, never dropped).
+
+Every round runs through the deployment's :class:`api.ElasticProblem`
+(``run_round``): the round-builder receives the CURRENT problem, so a
+mid-round ``DeviceLost`` re-plans the deployment and the union problem
+is rebuilt on the degraded mesh before the retry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List
+
+import numpy as np
+
+from repro.serving.requests import Ticket
+
+
+def _roundup(w: int, mult: int) -> int:
+    return -(-w // mult) * mult
+
+
+def _pattern_key(u_key: np.ndarray) -> str:
+    return hashlib.blake2b(np.ascontiguousarray(u_key).tobytes(),
+                           digest_size=16).hexdigest()
+
+
+@dataclasses.dataclass
+class ScoreUnit:
+    """One union-of-patterns SDDMM round in the making."""
+    m: int
+    tickets: List[Ticket] = dataclasses.field(default_factory=list)
+    x_key: str = ""
+    scatter: bool = False
+    _used: np.ndarray = None   # bool mask over m: rows any member queries
+
+    def try_add(self, t: Ticket) -> bool:
+        r = t.request
+        if not self.tickets:
+            self.tickets.append(t)
+            self.x_key = r.x_key
+            self._used = np.zeros(self.m, bool)
+            self._used[r.rows] = True
+            return True
+        if not self.scatter and r.x_key == self.x_key:
+            self.tickets.append(t)
+            self._used[r.rows] = True
+            return True
+        # different X: admissible only on disjoint queried rows — the
+        # combined X then carries each member's rows unclobbered
+        if self._used[r.rows].any():
+            return False
+        self.tickets.append(t)
+        self._used[r.rows] = True
+        self.scatter = True
+        return True
+
+
+def plan_score_units(tickets: List[Ticket]) -> List[ScoreUnit]:
+    """Group score tickets into merge units.
+
+    Outer grouping: (deployment, y_key, width) — a unit's members share
+    the stationary operand and query width exactly.  Inner: greedy
+    first-fit into :class:`ScoreUnit` under the X merge rule.
+    """
+    groups: dict = {}
+    for t in tickets:
+        r = t.request
+        groups.setdefault((id(r.deployment), r.y_key, r.width),
+                          []).append(t)
+    units: List[ScoreUnit] = []
+    for group in groups.values():
+        g_units: List[ScoreUnit] = []
+        for t in group:
+            if not any(u.try_add(t) for u in g_units):
+                u = ScoreUnit(m=t.request.deployment.problem.m)
+                u.try_add(t)
+                g_units.append(u)
+        units.extend(g_units)
+    return units
+
+
+def execute_score_unit(unit: ScoreUnit, *, use_session: bool = True,
+                       use_elastic: bool = True,
+                       use_caches: bool = True) -> int:
+    """Run one union round and fulfill every member ticket.
+
+    Returns the number of kernel rounds executed (1).  The round
+    builder derives everything — padding width, operands, the union
+    problem — from the problem it is HANDED, so an elastic retry after
+    ``DeviceLost`` rebuilds on the degraded mesh (whose r-multiple may
+    differ) and stays correct.
+    """
+    dep = unit.tickets[0].request.deployment
+    reqs = [t.request for t in unit.tickets]
+    w = reqs[0].width
+    n = dep.problem.n
+    key = np.concatenate([r.rows.astype(np.int64) * n + r.cols
+                          for r in reqs])
+    u_key, inv = np.unique(key, return_inverse=True)
+    u_rows = (u_key // n).astype(np.int64)
+    u_cols = (u_key % n).astype(np.int64)
+    pkey = _pattern_key(u_key)
+
+    if unit.scatter:
+        X = np.zeros((dep.problem.m, w), np.float32)
+        for r in reqs:
+            qr = np.unique(r.rows)
+            X[qr] = r.X[qr]
+        x_cache_key = None           # per-tick operand, never cached
+    else:
+        X = reqs[0].X
+        x_cache_key = reqs[0].x_key
+
+    def round_fn(prob):
+        mult = prob.alg.min_r_multiple(prob.grid)
+        w_pad = max(_roundup(w, mult), mult)
+        if use_caches:
+            qp = dep.pattern_problem(u_rows, u_cols, w_pad, pkey)
+            Xp = dep.padded(X, w_pad, key=x_cache_key)
+            Yp = dep.padded(reqs[0].Y, w_pad, key=reqs[0].y_key)
+        else:
+            qp = prob.with_pattern(u_rows, u_cols)
+            if w_pad != qp.r:
+                qp = qp.with_r(w_pad)
+            Xp = dep.padded(X, w_pad, key=None)
+            Yp = dep.padded(reqs[0].Y, w_pad, key=None)
+        session = dep.session if use_session else None
+        return qp.sddmm(Xp, Yp, session=session).values()
+
+    if use_elastic:
+        vals = dep.elastic.run_round("serve.score", round_fn)
+    else:
+        vals = round_fn(dep.problem)
+    vals = np.asarray(vals)
+    off = 0
+    for t in unit.tickets:
+        k = len(t.request.rows)
+        t.batched_with = len(unit.tickets) - 1
+        t.fulfill(vals[inv[off:off + k]].copy())
+        off += k
+    return 1
+
+
+def plan_aggregate_groups(tickets: List[Ticket]) -> List[List[Ticket]]:
+    """Group aggregate tickets by (deployment, values key): each group
+    is one batched-RHS SpMM round regardless of member widths."""
+    groups: dict = {}
+    for t in tickets:
+        r = t.request
+        groups.setdefault((id(r.deployment), r.vals_key), []).append(t)
+    return list(groups.values())
+
+
+def execute_aggregate_group(group: List[Ticket], *,
+                            use_session: bool = True,
+                            use_elastic: bool = True) -> int:
+    """One batched-RHS SpMM round for a values-keyed group."""
+    dep = group[0].request.deployment
+    Ys = [t.request.Y for t in group]
+    vals = group[0].request.vals
+    if use_elastic:
+        outs = dep.elastic.spmm_batched(Ys, vals=vals)
+    else:
+        outs = dep.problem.spmm_batched(
+            Ys, vals=vals, session=dep.session if use_session else None)
+    for t, out in zip(group, outs):
+        t.batched_with = len(group) - 1
+        t.fulfill(np.asarray(out))
+    return 1
+
+
+def execute_solo(t: Ticket, *, use_session: bool = False,
+                 use_elastic: bool = True) -> int:
+    """The per-request path: one round per ticket, no coalescing and no
+    pattern/padding caches — the baseline the batched engine is raced
+    against (bench_serving.py) and the parity reference the property
+    tests compare coalesced answers to bitwise."""
+    r = t.request
+    dep = r.deployment
+    session = dep.session if use_session else None
+    if r.kind == "score":
+        n = dep.problem.n
+        key = r.rows.astype(np.int64) * n + r.cols
+        u_key, inv = np.unique(key, return_inverse=True)
+        u_rows = (u_key // n).astype(np.int64)
+        u_cols = (u_key % n).astype(np.int64)
+
+        def round_fn(prob):
+            mult = prob.alg.min_r_multiple(prob.grid)
+            w_pad = max(_roundup(r.width, mult), mult)
+            qp = prob.with_pattern(u_rows, u_cols)
+            if w_pad != qp.r:
+                qp = qp.with_r(w_pad)
+            Xp = dep.padded(r.X, w_pad, key=None)
+            Yp = dep.padded(r.Y, w_pad, key=None)
+            return qp.sddmm(Xp, Yp, session=session).values()
+
+        vals = (dep.elastic.run_round("serve.score", round_fn)
+                if use_elastic else round_fn(dep.problem))
+        t.fulfill(np.asarray(vals)[inv].copy())
+    else:
+
+        def round_fn(prob):
+            return prob.spmm_batched([r.Y], vals=r.vals,
+                                     session=session)[0]
+
+        out = (dep.elastic.run_round("serve.aggregate", round_fn)
+               if use_elastic else round_fn(dep.problem))
+        t.fulfill(np.asarray(out))
+    return 1

@@ -1,0 +1,221 @@
+"""Request, ticket and admission-queue layer of the serving engine.
+
+The distributed serving engine (docs/serving.md) speaks two request
+shapes, chosen because they are the two kernel shapes inference traffic
+over a deployed sparse graph actually takes (paper §VII):
+
+* :class:`ScoreRequest` — "score these (i, j) pairs": an SDDMM sampled
+  at the request's coordinate list, ``<X_i, Y_j>`` per pair.  The CF
+  prediction query (user-item scores against deployed factors) and the
+  GAT/attention edge-score query are both this shape.
+* :class:`AggregateRequest` — "push this dense block through the
+  graph": an SpMM right-hand side against the deployment's sparse
+  values (optionally overridden per request, e.g. softmaxed attention).
+  Embedding lookups and neighborhood aggregation are this shape.
+
+Both carry content digests of their dense operands so the batcher can
+group mergeable work without comparing arrays, and the Session can
+serve repeated operands from its content-keyed replication cache.
+
+:class:`RequestQueue` is the admission policy: a bounded FIFO that
+fails fast (:class:`AdmissionError`) once ``max_pending`` requests are
+waiting — open-loop traffic beyond the server's capacity is shed at the
+door instead of growing an unbounded backlog (the rejection count is
+part of the queue's stats, so the bench records shed load explicitly).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+
+class AdmissionError(RuntimeError):
+    """The queue is full: the request was rejected at admission."""
+
+
+def digest(arr) -> str:
+    """Content digest of a host array (the batcher's grouping key)."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class ScoreRequest:
+    """SDDMM samples ``<X_i, Y_j>`` at the request's (rows, cols) pairs.
+
+    ``X (m, w)`` / ``Y (n, w)`` are host operands on the deployment's
+    shape; ``w`` is the query width (padded to the family's feasible
+    width inside the round, zero columns contribute nothing to any
+    dot).  ``x_key`` / ``y_key`` are content digests used for merge
+    grouping — requests sharing ``y_key`` and width can coalesce into
+    one union-of-patterns SDDMM; see :mod:`repro.serving.batcher` for
+    the X-side merge rule (identical digest, or disjoint row sets).
+    """
+    deployment: object
+    rows: np.ndarray
+    cols: np.ndarray
+    X: np.ndarray
+    Y: np.ndarray
+    x_key: str
+    y_key: str
+    kind = "score"
+
+    @classmethod
+    def make(cls, deployment, rows, cols, X, Y,
+             x_key: Optional[str] = None,
+             y_key: Optional[str] = None) -> "ScoreRequest":
+        prob = deployment.problem
+        rows = np.asarray(rows).reshape(-1)
+        cols = np.asarray(cols).reshape(-1)
+        if rows.shape != cols.shape or len(rows) == 0:
+            raise ValueError("score query needs matching non-empty "
+                             "rows/cols")
+        X = np.asarray(X, np.float32)
+        Y = np.asarray(Y, np.float32)
+        if X.ndim != 2 or X.shape[0] != prob.m:
+            raise ValueError(f"X must be (m={prob.m}, w), got {X.shape}")
+        if Y.ndim != 2 or Y.shape != (prob.n, X.shape[1]):
+            raise ValueError(f"Y must be (n={prob.n}, w={X.shape[1]}), "
+                             f"got {Y.shape}")
+        if (int(rows.min()) < 0 or int(rows.max()) >= prob.m
+                or int(cols.min()) < 0 or int(cols.max()) >= prob.n):
+            raise ValueError("query coordinates outside the deployment "
+                             f"shape ({prob.m}, {prob.n})")
+        return cls(deployment, rows, cols, X, Y,
+                   x_key=x_key if x_key is not None else digest(X),
+                   y_key=y_key if y_key is not None else digest(Y))
+
+    @property
+    def width(self) -> int:
+        return int(self.X.shape[1])
+
+
+@dataclasses.dataclass
+class AggregateRequest:
+    """SpMM right-hand side ``Y (n, w)`` against the deployment's values.
+
+    ``vals=None`` uses the deployed sample values (the coalescible
+    common case: every such request in a tick rides one batched-RHS
+    SpMM); a per-request ``vals`` override (host COO order of the
+    deployment, e.g. a client's softmaxed attention) groups only with
+    requests carrying the identical override.
+    """
+    deployment: object
+    Y: np.ndarray
+    vals: Optional[np.ndarray]
+    vals_key: str
+    kind = "aggregate"
+
+    @classmethod
+    def make(cls, deployment, Y, vals=None) -> "AggregateRequest":
+        prob = deployment.problem
+        Y = np.asarray(Y, np.float32)
+        if Y.ndim != 2 or Y.shape[0] != prob.n:
+            raise ValueError(f"Y must be (n={prob.n}, w), got {Y.shape}")
+        if vals is not None:
+            vals = np.asarray(vals, np.float32)
+            if vals.shape != (prob.nnz,):
+                raise ValueError(f"vals override must be ({prob.nnz},) "
+                                 f"in host COO order, got {vals.shape}")
+        return cls(deployment, Y, vals,
+                   vals_key="deployed" if vals is None else digest(vals))
+
+    @property
+    def width(self) -> int:
+        return int(self.Y.shape[1])
+
+
+@dataclasses.dataclass
+class Ticket:
+    """The caller's handle on a submitted request (a synchronous future).
+
+    ``arrival`` / ``completion`` are *trace timestamps* in the caller's
+    clock (the replay driver's simulated seconds) — the engine never
+    reads wall time from them; :func:`repro.serving.server.replay_trace`
+    stamps completion as tick-start + measured tick wall time, which is
+    what makes the latency distribution deterministic to re-derive.
+    """
+    request: object
+    seq: int
+    arrival: float = 0.0
+    completion: Optional[float] = None
+    done: bool = False
+    batched_with: int = 0
+    _result: object = None
+    _error: Optional[BaseException] = None
+
+    def fulfill(self, result):
+        self._result = result
+        self.done = True
+
+    def fail(self, error: BaseException):
+        self._error = error
+        self.done = True
+
+    def result(self):
+        if not self.done:
+            raise RuntimeError(f"ticket {self.seq} still pending — "
+                               "run engine.tick() first")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.completion is None:
+            return None
+        return self.completion - self.arrival
+
+
+class RequestQueue:
+    """Bounded FIFO with fail-fast admission.
+
+    Admission rule: a request is accepted iff fewer than ``max_pending``
+    tickets are waiting; otherwise :class:`AdmissionError` — the caller
+    (or the open-loop replay driver) decides whether to retry later.
+    ``rejected`` counts shed requests so saturation is observable.
+    """
+
+    def __init__(self, max_pending: int = 256):
+        if max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        self.max_pending = max_pending
+        self._pending: collections.deque = collections.deque()
+        self._seq = itertools.count()
+        self.admitted = 0
+        self.rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, request, arrival: float = 0.0) -> Ticket:
+        if len(self._pending) >= self.max_pending:
+            self.rejected += 1
+            raise AdmissionError(
+                f"queue full ({self.max_pending} pending); request "
+                "rejected at admission")
+        t = Ticket(request, next(self._seq), arrival=arrival)
+        self._pending.append(t)
+        self.admitted += 1
+        return t
+
+    def drain(self, max_requests: Optional[int] = None) -> List[Ticket]:
+        """Pop up to ``max_requests`` tickets in FIFO order (one tick's
+        worth of work)."""
+        k = len(self._pending) if max_requests is None else \
+            min(max_requests, len(self._pending))
+        return [self._pending.popleft() for _ in range(k)]
+
+    def stats(self) -> dict:
+        return dict(pending=len(self._pending), admitted=self.admitted,
+                    rejected=self.rejected,
+                    max_pending=self.max_pending)

@@ -1,0 +1,194 @@
+"""The serving loop: admission queue -> per-tick coalesced rounds.
+
+``ServingEngine`` ties the layers together: requests enter through the
+bounded :class:`~repro.serving.requests.RequestQueue`, each ``tick``
+drains up to ``max_batch`` tickets, pins their deployments against pool
+eviction, plans the tick's merge units
+(:mod:`repro.serving.batcher`) and executes them — union-of-patterns
+SDDMM rounds for scores, batched-RHS SpMM rounds for aggregates — all
+through each deployment's ``ElasticProblem`` so a ``DeviceLost``
+mid-tick degrades the mesh and retries without the caller noticing.
+``batching=False`` turns the same engine into the per-request baseline
+(one round per ticket, no Session, no caches) that ``bench_serving``
+races the batched engine against.
+
+``replay_trace`` is the latency methodology (docs/serving.md): an
+open-loop arrival trace in *simulated* seconds is replayed
+deterministically — the driver admits every request whose arrival
+precedes the current simulated time, runs one tick, measures the
+tick's WALL duration, and stamps each served ticket's completion as
+tick-start + wall.  Arrivals are fixed by the trace and service times
+are measured, so the p50/p99 distribution is reproducible run to run
+up to machine timing noise, and queueing delay under bursts is modeled
+faithfully (a request arriving mid-tick waits for the next tick).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving import batcher
+from repro.serving.pool import SessionPool
+from repro.serving.requests import (AdmissionError, AggregateRequest,
+                                    RequestQueue, ScoreRequest, Ticket)
+
+
+class ServingEngine:
+    """Continuous-batching server over a deployment pool."""
+
+    def __init__(self, pool: SessionPool, *, max_batch: int = 64,
+                 max_pending: int = 256, batching: bool = True,
+                 use_session: bool = True, use_elastic: bool = True):
+        self.pool = pool
+        self.queue = RequestQueue(max_pending)
+        self.max_batch = max_batch
+        self.batching = batching
+        self.use_session = use_session
+        self.use_elastic = use_elastic
+        self.rounds = 0
+        self.served = 0
+        self.failed = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit_score(self, deployment, rows, cols, X, Y=None, *,
+                     x_key: Optional[str] = None,
+                     y_key: Optional[str] = None,
+                     arrival: float = 0.0) -> Ticket:
+        """Queue an SDDMM score query.  ``X`` / ``Y`` may be host arrays
+        or NAMES of deployment operands (the common case — stationary
+        factors deployed with the graph), in which case the digest key
+        is the operand name and the Session's identity fast path
+        applies across ticks."""
+        if isinstance(X, str):
+            name = X
+            X = deployment.operand(name)
+            x_key = x_key or f"operand:{name}"
+        if isinstance(Y, str) or Y is None:
+            name = Y or "Y"
+            Y = deployment.operand(name)
+            y_key = y_key or f"operand:{name}"
+        req = ScoreRequest.make(deployment, rows, cols, X, Y,
+                                x_key=x_key, y_key=y_key)
+        return self.queue.submit(req, arrival=arrival)
+
+    def submit_aggregate(self, deployment, Y, vals=None, *,
+                         arrival: float = 0.0) -> Ticket:
+        """Queue an SpMM aggregation/lookup: ``deployment_graph @ Y``."""
+        req = AggregateRequest.make(deployment, Y, vals=vals)
+        return self.queue.submit(req, arrival=arrival)
+
+    # -- the tick ------------------------------------------------------------
+    def tick(self) -> dict:
+        """Drain one batch, execute its coalesced rounds, fulfill
+        tickets.  Returns the tick report (counts + wall seconds)."""
+        tickets = self.queue.drain(self.max_batch)
+        report = dict(requests=len(tickets), rounds=0, wall=0.0,
+                      tickets=tickets)
+        if not tickets:
+            return report
+        deployments = {id(t.request.deployment): t.request.deployment
+                       for t in tickets}
+        t0 = time.perf_counter()
+        with self.pool.pin(*deployments.values()):
+            try:
+                if self.batching:
+                    report["rounds"] = self._run_batched(tickets)
+                else:
+                    report["rounds"] = self._run_solo(tickets)
+            except BaseException as e:
+                # a round that exhausts its retry budget fails the
+                # tickets still pending, never the whole server
+                for t in tickets:
+                    if not t.done:
+                        t.fail(e)
+                        self.failed += 1
+        self.rounds += report["rounds"]
+        self.served += sum(1 for t in tickets
+                           if t.done and t._error is None)
+        report["wall"] = time.perf_counter() - t0
+        return report
+
+    def _run_batched(self, tickets: List[Ticket]) -> int:
+        scores = [t for t in tickets if t.request.kind == "score"]
+        aggs = [t for t in tickets if t.request.kind == "aggregate"]
+        rounds = 0
+        for unit in batcher.plan_score_units(scores):
+            rounds += batcher.execute_score_unit(
+                unit, use_session=self.use_session,
+                use_elastic=self.use_elastic)
+        for group in batcher.plan_aggregate_groups(aggs):
+            rounds += batcher.execute_aggregate_group(
+                group, use_session=self.use_session,
+                use_elastic=self.use_elastic)
+        return rounds
+
+    def _run_solo(self, tickets: List[Ticket]) -> int:
+        rounds = 0
+        for t in tickets:
+            rounds += batcher.execute_solo(
+                t, use_session=self.use_session,
+                use_elastic=self.use_elastic)
+        return rounds
+
+    def run_until_drained(self, max_ticks: int = 1000) -> int:
+        """Tick until the queue is empty; returns ticks executed."""
+        ticks = 0
+        while len(self.queue) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks
+
+    def stats(self) -> dict:
+        return dict(rounds=self.rounds, served=self.served,
+                    failed=self.failed, queue=self.queue.stats(),
+                    pool=self.pool.stats())
+
+
+def replay_trace(engine: ServingEngine,
+                 trace: List[Tuple[float, Callable]]) -> dict:
+    """Deterministically replay an open-loop arrival trace.
+
+    ``trace`` is a list of ``(arrival_sim_seconds, submit_fn)`` where
+    ``submit_fn(engine, arrival)`` submits one request and returns its
+    :class:`Ticket` (raise-through of :class:`AdmissionError` is caught
+    and counted as shed load).  Simulated time advances by each tick's
+    measured wall duration; a ticket's completion is stamped
+    tick-start + wall, so ``latency = queueing delay + service time``
+    exactly as an open-loop client would observe.  Returns the latency
+    summary (p50/p99/mean seconds, throughput in requests per simulated
+    second, shed count) plus the fulfilled tickets.
+    """
+    trace = sorted(trace, key=lambda item: item[0])
+    sim = trace[0][0] if trace else 0.0
+    i = 0
+    tickets: List[Ticket] = []
+    shed = 0
+    while i < len(trace) or len(engine.queue):
+        if not len(engine.queue) and i < len(trace) and trace[i][0] > sim:
+            sim = trace[i][0]          # idle server: jump to next arrival
+        while i < len(trace) and trace[i][0] <= sim:
+            arrival, submit_fn = trace[i]
+            try:
+                tickets.append(submit_fn(engine, arrival))
+            except AdmissionError:
+                shed += 1
+            i += 1
+        report = engine.tick()
+        for t in report["tickets"]:
+            t.completion = sim + report["wall"]
+        sim += report["wall"]
+    lats = sorted(t.latency for t in tickets
+                  if t.done and t._error is None)
+    summary = dict(served=len(lats), shed=shed,
+                   sim_seconds=sim - (trace[0][0] if trace else 0.0),
+                   tickets=tickets)
+    if lats:
+        summary.update(
+            p50=float(np.percentile(lats, 50)),
+            p99=float(np.percentile(lats, 99)),
+            mean=float(np.mean(lats)),
+            max=float(lats[-1]),
+            throughput=len(lats) / max(summary["sim_seconds"], 1e-12))
+    return summary

@@ -137,6 +137,18 @@ def test_fault_injected_recovery_parity():
 
 
 @pytest.mark.slow
+def test_serving_engine_elastic_8dev():
+    """Continuous-batching serving engine under seeded traffic on the
+    8-device mesh: coalesced ticks bitwise vs solo and vs the numpy
+    reference, mid-stream DeviceLost re-meshing the pool's deployments
+    (score AND aggregate rounds), pool churn under traffic, and the
+    deterministic open-loop latency replay."""
+    out = run_script("check_serving.py")
+    assert "ALL SERVING OK" in out
+    assert "re-meshed to" in out
+
+
+@pytest.mark.slow
 def test_remesh_8_to_4_bitwise():
     """DistProblem.replan / api.degrade shrink 8 -> 4 mid-run with
     bitwise-identical kernel results (integer-exact data); non-divisible

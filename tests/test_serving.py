@@ -1,5 +1,15 @@
-"""Serving tests: decode == teacher-forcing across all model families,
-cache extension, greedy generation determinism."""
+"""Serving tests.
+
+Local LM path: decode == teacher-forcing across all model families,
+cache extension, greedy generation determinism.
+
+Distributed engine (docs/serving.md): batching parity — coalesced
+union-of-patterns SDDMM and batched-RHS SpMM must BITWISE-match solo
+per-request execution across families, comm wire formats and the
+Session elision (property-based, hypothesis or the _propcheck
+fallback) — plus Session-pool churn/LRU/pinning, admission shedding,
+transient-fault recovery mid-tick, and the deterministic replay driver.
+"""
 import importlib
 
 import numpy as np
@@ -7,9 +17,19 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _propcheck import given, settings, strategies as st
+
+from repro import serving
+from repro.apps import als, gat
+from repro.core import api
+from repro.distributed import faults
+from repro.serving import batcher
+from repro.serving import engine
 from repro.config import ParallelConfig
 from repro.models import model as M
-from repro.serving import engine
 
 PCFG = ParallelConfig(compute_dtype="float32")
 
@@ -93,3 +113,471 @@ def test_fsdp_extend_picks_free_divisible_dim():
     # too small -> untouched
     out = fsdp_extend_spec(P(None,), (128,), sizes, "data")
     assert out == P(None)
+
+
+# ===========================================================================
+# Distributed serving engine (docs/serving.md)
+# ===========================================================================
+
+def _dev1():
+    # other test modules force host device counts at import; one device
+    # keeps the fast tier independent of import order
+    return jax.devices()[:1]
+
+
+def _graph(m, n, nnz, seed=0):
+    """Integer-exact random COO (no duplicate coordinates)."""
+    rng = np.random.default_rng(seed)
+    key = np.unique(rng.integers(0, m * n, nnz))
+    rows = (key // n).astype(np.int64)
+    cols = (key % n).astype(np.int64)
+    vals = (rng.integers(1, 4, len(key))
+            * rng.choice([-1.0, 1.0], len(key))).astype(np.float32)
+    return rows, cols, vals
+
+
+def _int_mat(rng, shape):
+    return rng.integers(-3, 4, shape).astype(np.float32)
+
+
+def _deploy(pool, m=48, n=40, r=8, seed=0, algorithm="d15",
+            comm="dense", operands=None, nnz=260):
+    rows, cols, vals = _graph(m, n, nnz, seed)
+    return pool.deploy(rows, cols, vals, (m, n), r,
+                       operands=operands or {}, algorithm=algorithm,
+                       comm=comm, devices=_dev1())
+
+
+def _solo_results(tickets, use_session=False):
+    """Re-run each ticket's request alone (fresh tickets) — the parity
+    reference for the coalesced tick."""
+    outs = []
+    for t in tickets:
+        ref = serving.Ticket(t.request, seq=-1)
+        batcher.execute_solo(ref, use_session=use_session,
+                             use_elastic=False)
+        outs.append(ref.result())
+    return outs
+
+
+# -- core parity: coalesced tick == per-request execution, bitwise ---------
+
+def test_score_batching_bitwise_matches_solo():
+    rng = np.random.default_rng(0)
+    pool = serving.SessionPool(capacity=4)
+    m, n, w = 48, 40, 5
+    U = _int_mat(rng, (m, w))
+    V = _int_mat(rng, (n, w))
+    dep = _deploy(pool, m=m, n=n, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool, max_batch=32)
+    tickets = []
+    # three same-X clients (merge freely, overlapping rows allowed) ...
+    for seed in range(3):
+        r2 = np.random.default_rng(seed)
+        tickets.append(eng.submit_score(
+            dep, r2.integers(0, m, 7), r2.integers(0, n, 7), "U", "V"))
+    # ... plus two different-X clients on disjoint row blocks (scatter)
+    for lo in (0, 24):
+        Xc = _int_mat(rng, (m, w))
+        qr = rng.integers(lo, lo + 24, 6)
+        tickets.append(eng.submit_score(dep, qr, rng.integers(0, n, 6),
+                                        Xc, "V"))
+    report = eng.tick()
+    assert report["requests"] == 5
+    # same-X unit + scatter unit: at most 2 rounds for 5 requests
+    assert report["rounds"] <= 2
+    for got, ref in zip([t.result() for t in tickets],
+                        _solo_results(tickets)):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_aggregate_batching_bitwise_matches_solo():
+    rng = np.random.default_rng(1)
+    pool = serving.SessionPool(capacity=4)
+    dep = _deploy(pool, seed=1)
+    n, nnz = dep.problem.n, dep.problem.nnz
+    eng = serving.ServingEngine(pool, max_batch=32)
+    override = _int_mat(rng, nnz)
+    tickets = [eng.submit_aggregate(dep, _int_mat(rng, (n, wi)))
+               for wi in (3, 5, 2)]
+    tickets += [eng.submit_aggregate(dep, _int_mat(rng, (n, 4)),
+                                     vals=override) for _ in range(2)]
+    report = eng.tick()
+    # one deployed-values round + one override round
+    assert report["rounds"] == 2
+    for got, ref in zip([t.result() for t in tickets],
+                        _solo_results(tickets)):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_duplicate_query_pairs_dedup_across_requests():
+    """The union round computes each distinct (i, j) once; every request
+    still gets its own (duplicated) samples back, bitwise."""
+    rng = np.random.default_rng(2)
+    pool = serving.SessionPool(capacity=2)
+    m, n, w = 48, 40, 4
+    U, V = _int_mat(rng, (m, w)), _int_mat(rng, (n, w))
+    dep = _deploy(pool, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool)
+    qr = np.array([3, 3, 7, 3]); qc = np.array([5, 5, 1, 5])
+    t1 = eng.submit_score(dep, qr, qc, "U", "V")
+    t2 = eng.submit_score(dep, qr[:2], qc[:2], "U", "V")
+    rep = eng.tick()
+    assert rep["rounds"] == 1
+    ref = np.einsum("ij,ij->i", U[qr], V[qc])
+    np.testing.assert_array_equal(t1.result(), ref)
+    np.testing.assert_array_equal(t2.result(), ref[:2])
+
+
+@settings(max_examples=5, deadline=None)
+@given(family=st.sampled_from(["d15", "s15", "d25", "s25"]),
+       comm=st.sampled_from(["dense", "sparse"]),
+       use_session=st.booleans(),
+       w=st.integers(2, 9),
+       n_score=st.integers(0, 3),
+       n_agg=st.integers(0, 3),
+       seed=st.integers(0, 10 ** 6))
+def test_property_batching_parity(family, comm, use_session, w,
+                                  n_score, n_agg, seed):
+    """Random request mixes: the coalesced tick bitwise-matches solo
+    per-request execution on every (family x comm x session) cell."""
+    if n_score + n_agg == 0:
+        n_score = 1
+    rng = np.random.default_rng(seed)
+    m, n = 48, 40
+    pool = serving.SessionPool(capacity=4)
+    U, V = _int_mat(rng, (m, w)), _int_mat(rng, (n, w))
+    dep = _deploy(pool, m=m, n=n, seed=seed % 97, algorithm=family,
+                  comm=comm, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool, max_batch=32,
+                                use_session=use_session)
+    tickets = []
+    for i in range(n_score):
+        k = int(rng.integers(1, 8))
+        if rng.integers(2):        # shared deployed X
+            tickets.append(eng.submit_score(
+                dep, rng.integers(0, m, k), rng.integers(0, n, k),
+                "U", "V"))
+        else:                      # client-private X, random rows
+            tickets.append(eng.submit_score(
+                dep, rng.integers(0, m, k), rng.integers(0, n, k),
+                _int_mat(rng, (m, w)), "V"))
+    override = _int_mat(rng, dep.problem.nnz)
+    for i in range(n_agg):
+        wi = int(rng.integers(1, 6))
+        vals = override if rng.integers(2) else None
+        tickets.append(eng.submit_aggregate(dep, _int_mat(rng, (n, wi)),
+                                            vals=vals))
+    eng.tick()
+    for got, ref in zip([t.result() for t in tickets],
+                        _solo_results(tickets,
+                                      use_session=use_session)):
+        np.testing.assert_array_equal(got, ref)
+
+
+# -- api-level entry points ------------------------------------------------
+
+def test_spmm_batched_parity_and_validation():
+    rng = np.random.default_rng(3)
+    m, n, r = 48, 40, 8
+    rows, cols, vals = _graph(m, n, 260, seed=3)
+    prob = api.make_problem(rows, cols, vals, (m, n), r,
+                            algorithm="d15", devices=_dev1())
+    Ys = [_int_mat(rng, (n, wi)) for wi in (3, 1, 6)]
+    outs = prob.spmm_batched(Ys)
+    assert [o.shape for o in outs] == [(m, 3), (m, 1), (m, 6)]
+    for Y, out in zip(Ys, outs):
+        mult = prob.alg.min_r_multiple(prob.grid)
+        w_pad = -(-Y.shape[1] // mult) * mult
+        Yp = np.zeros((n, max(w_pad, mult)), np.float32)
+        Yp[:, :Y.shape[1]] = Y
+        ref_prob = prob if Yp.shape[1] == prob.r \
+            else prob.with_r(Yp.shape[1])
+        np.testing.assert_array_equal(
+            out, ref_prob.spmm(Yp)[:, :Y.shape[1]])
+    assert prob.spmm_batched([]) == []
+    with pytest.raises(ValueError, match="every RHS"):
+        prob.spmm_batched([np.zeros((n + 1, 2), np.float32)])
+    with pytest.raises(ValueError, match="pad_to"):
+        prob.spmm_batched(Ys, pad_to=1)
+    # pad_to buckets the compiled width without changing answers
+    outs2 = prob.spmm_batched(Ys, pad_to=16)
+    for a, b in zip(outs, outs2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_with_pattern_validation():
+    rows, cols, vals = _graph(48, 40, 260, seed=4)
+    prob = api.make_problem(rows, cols, vals, (48, 40), 8,
+                            algorithm="d15", devices=_dev1())
+    qp = prob.with_pattern([1, 2], [3, 4])
+    assert qp.grid is prob.grid and qp.nnz == 2
+    np.testing.assert_array_equal(qp.vals, [1.0, 1.0])
+    with pytest.raises(ValueError, match="matching 1-D"):
+        prob.with_pattern([1, 2], [3])
+    with pytest.raises(ValueError, match="empty"):
+        prob.with_pattern([], [])
+    with pytest.raises(ValueError, match="outside"):
+        prob.with_pattern([0], [40])
+    with pytest.raises(ValueError, match="vals length"):
+        prob.with_pattern([0], [0], vals=[1.0, 2.0])
+
+
+# -- admission + tickets ---------------------------------------------------
+
+def test_queue_admission_shedding():
+    pool = serving.SessionPool(capacity=2)
+    dep = _deploy(pool, operands={"U": np.ones((48, 4), np.float32),
+                                  "V": np.ones((40, 4), np.float32)})
+    eng = serving.ServingEngine(pool, max_pending=2)
+    eng.submit_score(dep, [0], [0], "U", "V")
+    eng.submit_score(dep, [1], [1], "U", "V")
+    with pytest.raises(serving.AdmissionError):
+        eng.submit_score(dep, [2], [2], "U", "V")
+    assert eng.queue.stats()["rejected"] == 1
+    eng.tick()
+    # queue drained: admission reopens
+    eng.submit_score(dep, [2], [2], "U", "V")
+    assert len(eng.queue) == 1
+
+
+def test_ticket_lifecycle():
+    pool = serving.SessionPool(capacity=2)
+    dep = _deploy(pool, operands={"U": np.ones((48, 4), np.float32),
+                                  "V": np.ones((40, 4), np.float32)})
+    eng = serving.ServingEngine(pool)
+    t = eng.submit_score(dep, [0], [0], "U", "V", arrival=1.5)
+    with pytest.raises(RuntimeError, match="pending"):
+        t.result()
+    assert t.latency is None
+    eng.tick()
+    t.completion = 2.0
+    assert t.result().shape == (1,)
+    assert t.latency == pytest.approx(0.5)
+
+
+# -- Session-pool churn (satellite: LRU, stats, pinning) -------------------
+
+def test_pool_lru_eviction_order_and_stats():
+    pool = serving.SessionPool(capacity=2)
+    deps = [_deploy(pool, seed=i) for i in range(4)]
+    # capacity 2: deployments 0 and 1 evicted in insertion (LRU) order
+    assert pool.stats()["occupancy"] == 2
+    assert pool.stats()["evictions"] == 2
+    assert pool.keys == [deps[2].key, deps[3].key]
+    # re-deploying a resident digest is a hit and refreshes recency
+    dep2b = _deploy(pool, seed=2)
+    assert dep2b is deps[2]
+    assert pool.stats()["hits"] == 1
+    assert pool.keys == [deps[3].key, deps[2].key]
+    # a fresh digest now evicts deployment 3, not the refreshed 2
+    _deploy(pool, seed=9)
+    assert deps[2].key in pool.keys and deps[3].key not in pool.keys
+    s = pool.stats()
+    assert s["misses"] == 5 and s["evictions"] == 3
+    assert 0.0 < s["hit_rate"] < 1.0
+
+
+def test_pool_redeploy_with_refreshed_operands_is_miss():
+    """Same graph, refreshed factors -> new digest -> fresh deployment
+    (stale factors must never serve a post-refresh query)."""
+    pool = serving.SessionPool(capacity=4)
+    U1 = np.ones((48, 4), np.float32)
+    U2 = 2 * U1
+    V = np.ones((40, 4), np.float32)
+    d1 = _deploy(pool, operands={"U": U1, "V": V})
+    d2 = _deploy(pool, operands={"U": U2, "V": V})
+    assert d1 is not d2 and d1.key != d2.key
+    assert pool.stats()["misses"] == 2 and pool.stats()["hits"] == 0
+
+
+def test_pool_pinned_never_evicted_and_inflight_survives():
+    rng = np.random.default_rng(5)
+    pool = serving.SessionPool(capacity=1)
+    m, n, w = 48, 40, 4
+    U, V = _int_mat(rng, (m, w)), _int_mat(rng, (n, w))
+    dep = _deploy(pool, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool)
+    with pool.pin(dep):
+        # churn past capacity while pinned: dep must survive (the pool
+        # overshoots instead of corrupting in-flight state)
+        others = [_deploy(pool, seed=10 + i) for i in range(3)]
+        assert dep.key in pool.keys
+        assert pool.stats()["occupancy"] >= 1
+        t = eng.submit_score(dep, [1, 2], [3, 4], "U", "V")
+        eng.tick()
+        np.testing.assert_array_equal(
+            t.result(), np.einsum("ij,ij->i", U[[1, 2]], V[[3, 4]]))
+    # unpinned: the next deploy can evict it
+    _deploy(pool, seed=20)
+    assert pool.stats()["occupancy"] == 1
+    assert dep.key not in pool.keys
+
+
+def test_pool_session_accounting_across_ticks():
+    """Tick after tick against one deployment: the stationary operands'
+    replication is served from the Session cache (hits grow, misses
+    stay put) and the pattern cache pins repeated hot queries."""
+    rng = np.random.default_rng(6)
+    pool = serving.SessionPool(capacity=2)
+    m, n, w = 48, 40, 4
+    U, V = _int_mat(rng, (m, w)), _int_mat(rng, (n, w))
+    dep = _deploy(pool, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool)
+    qr, qc = rng.integers(0, m, 6), rng.integers(0, n, 6)
+    t0 = eng.submit_score(dep, qr, qc, "U", "V")
+    eng.tick()
+    miss0 = dep.session.stats()["misses"]
+    results = [t0.result()]
+    for _ in range(3):
+        t = eng.submit_score(dep, qr, qc, "U", "V")
+        eng.tick()
+        results.append(t.result())
+    s = dep.session.stats()
+    assert s["misses"] == miss0, "steady-state ticks must not re-replicate"
+    assert s["hits"] > 0
+    assert len(dep._pattern_cache) == 1   # one hot pattern, reused
+    for r in results[1:]:
+        np.testing.assert_array_equal(r, results[0])
+
+
+# -- elastic serving (transient fault mid-tick) ----------------------------
+
+def test_tick_recovers_from_transient_fault():
+    rng = np.random.default_rng(7)
+    pool = serving.SessionPool(capacity=2)
+    m, n, w = 48, 40, 4
+    U, V = _int_mat(rng, (m, w)), _int_mat(rng, (n, w))
+    dep = _deploy(pool, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool)
+    qr, qc = rng.integers(0, m, 6), rng.integers(0, n, 6)
+    plan = faults.FaultPlan.scripted(
+        faults.FaultSpec(op="sddmm", kind="transient", round=0))
+    with faults.inject(plan) as ctl:
+        t = eng.submit_score(dep, qr, qc, "U", "V")
+        eng.tick()
+    assert len(ctl.fired) == 1
+    assert len(dep.elastic.recoveries) == 1
+    np.testing.assert_array_equal(
+        t.result(), np.einsum("ij,ij->i", U[qr], V[qc]))
+
+
+def test_tick_fails_tickets_when_retries_exhausted():
+    pool = serving.SessionPool(
+        capacity=2, policy=api.RetryPolicy(max_retries=1))
+    dep = _deploy(pool, operands={"U": np.ones((48, 4), np.float32),
+                                  "V": np.ones((40, 4), np.float32)})
+    eng = serving.ServingEngine(pool)
+    plan = faults.FaultPlan.scripted(
+        *[faults.FaultSpec(op="sddmm", kind="transient", round=i)
+          for i in range(3)])
+    with faults.inject(plan):
+        t = eng.submit_score(dep, [0], [0], "U", "V")
+        eng.tick()
+    assert t.done and eng.failed == 1
+    with pytest.raises(api.FaultRecoveryError):
+        t.result()
+    # the engine survives: the next fault-free tick serves normally
+    t2 = eng.submit_score(dep, [1], [1], "U", "V")
+    eng.tick()
+    assert t2.result().shape == (1,)
+
+
+# -- deterministic replay (latency methodology) ----------------------------
+
+def test_replay_trace_latency_accounting():
+    rng = np.random.default_rng(8)
+    pool = serving.SessionPool(capacity=2)
+    m, n, w = 48, 40, 4
+    U, V = _int_mat(rng, (m, w)), _int_mat(rng, (n, w))
+    dep = _deploy(pool, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool, max_batch=4)
+
+    def make_submit(seed):
+        def submit(engine, arrival):
+            r2 = np.random.default_rng(seed)
+            return engine.submit_score(
+                dep, r2.integers(0, m, 4), r2.integers(0, n, 4),
+                "U", "V", arrival=arrival)
+        return submit
+
+    trace = [(0.001 * i, make_submit(i)) for i in range(8)]
+    out = serving.replay_trace(eng, trace)
+    assert out["served"] == 8 and out["shed"] == 0
+    assert out["p50"] > 0 and out["p99"] >= out["p50"]
+    assert out["throughput"] > 0
+    for t in out["tickets"]:
+        assert t.completion is not None and t.latency > 0
+
+
+# -- served app query modes ------------------------------------------------
+
+def test_als_predict_scores_served():
+    rng = np.random.default_rng(9)
+    m, n, r = 48, 40, 8
+    rows, cols, vals = _graph(m, n, 260, seed=9)
+    U, V = _int_mat(rng, (m, r)), _int_mat(rng, (n, r))
+    pool = serving.SessionPool(capacity=2)
+    dep = als.deploy_factors(pool, rows, cols, vals, (m, n), U, V,
+                             algorithm="d15", devices=_dev1())
+    eng = serving.ServingEngine(pool)
+    users, items = rng.integers(0, m, 6), rng.integers(0, n, 6)
+    t1 = als.predict_scores(eng, dep, users, items)
+    W = _int_mat(rng, (n, 3))
+    t2 = als.lookup_embeddings(eng, dep, W)
+    eng.tick()
+    np.testing.assert_array_equal(
+        t1.result(), np.einsum("ij,ij->i", U[users], V[items]))
+    dense = np.zeros((m, n), np.float32)
+    dense[rows, cols] = vals
+    np.testing.assert_array_equal(t2.result(), dense @ W)
+
+
+def test_gat_layer_served_matches_distributed():
+    """The served GAT query path == the full distributed layer, bitwise
+    on the queried rows (one head)."""
+    rng = np.random.default_rng(10)
+    n, d = 64, 8
+    H = _int_mat(rng, (n, d))
+    p = gat.init_gat_layer(jax.random.PRNGKey(3), d, d)
+    rows, cols, vals = gat.graph_coo(n, 6, seed=10)
+    pool = serving.SessionPool(capacity=2)
+    dep = gat.gat_deploy_layer(pool, rows, cols, n, H, p,
+                               algorithm="d15", devices=_dev1())
+    eng = serving.ServingEngine(pool)
+    node_ids = np.array([3, 17, 50])
+    out = gat.gat_layer_served(eng, dep, node_ids)
+    graphP = api.make_problem(rows, cols, vals, (n, n), d,
+                              algorithm="d15", devices=_dev1())
+    ref = gat.gat_layer_distributed(graphP, H, p, n_heads=1)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref)[node_ids])
+
+
+# -- batcher unit planning -------------------------------------------------
+
+def test_score_unit_planning_rules():
+    rng = np.random.default_rng(11)
+    pool = serving.SessionPool(capacity=2)
+    m, n, w = 48, 40, 4
+    U, V = _int_mat(rng, (m, w)), _int_mat(rng, (n, w))
+    dep = _deploy(pool, operands={"U": U, "V": V})
+    eng = serving.ServingEngine(pool)
+    # same X, overlapping rows: one unit
+    t_a = eng.submit_score(dep, [1, 2], [0, 1], "U", "V")
+    t_b = eng.submit_score(dep, [2, 3], [1, 2], "U", "V")
+    # different X, rows disjoint from everything above: joins via scatter
+    X2 = _int_mat(rng, (m, w))
+    t_c = eng.submit_score(dep, [30, 31], [0, 1], X2, "V")
+    # different X, rows OVERLAP the scatter unit: must start a new unit
+    X3 = _int_mat(rng, (m, w))
+    t_d = eng.submit_score(dep, [31, 40], [2, 3], X3, "V")
+    tickets = eng.queue.drain()
+    units = batcher.plan_score_units(tickets)
+    assert len(units) == 2
+    assert sorted(len(u.tickets) for u in units) == [1, 3]
+    for u in units:
+        batcher.execute_score_unit(u)
+    for t, ref in zip((t_a, t_b, t_c, t_d),
+                      _solo_results((t_a, t_b, t_c, t_d))):
+        np.testing.assert_array_equal(t.result(), ref)
