@@ -13,6 +13,7 @@ layer is machine-readable from PR to PR.
 import numpy as np
 
 from benchmarks import common
+from repro import obs
 from repro.core import api, costmodel, sparse
 
 JSON_PATH = "BENCH_dist.json"
@@ -26,6 +27,11 @@ def run(out, json_path=JSON_PATH):
     rows, cols, vals, X, Y = sparse.random_problem(M, N, R, NNZ_ROW,
                                                    seed=0)
     records = []
+    # one sweep-wide registry + tracer: every timed cell also runs one
+    # traced round, so each row carries its live cost-model drift
+    # (schedule_words vs compiled-HLO wire words; docs/observability.md)
+    metrics_reg = obs.MetricsRegistry()
+    tracer = obs.Tracer(registry=metrics_reg)
 
     for name in sorted(api.ALGORITHMS):
         prob = api.make_problem(rows, cols, vals, (M, N), R,
@@ -54,25 +60,46 @@ def run(out, json_path=JSON_PATH):
                 f"dist.{name}.{elision}", t_plain,
                 f"c={prob.c};cached_ratio={t_cached / t_plain:.2f}"))
             for cached, t in ((False, t_plain), (True, t_cached)):
+                with obs.trace(tracer):
+                    prob.fusedmm(X, Y, elision=elision,
+                                 session=sess if cached else None)
+                rnd = tracer.rounds[-1]
+                metrics_reg.gather("session", sess.stats(), family=name,
+                                   elision=elision)
+                hits = metrics_reg.value("session.hits", family=name,
+                                         elision=elision) or 0.0
+                miss = metrics_reg.value("session.misses", family=name,
+                                         elision=elision) or 0.0
                 records.append(dict(
                     name=name, elision=elision, session_cached=cached,
                     c=prob.c, m=M, n=N, r=R, nnz=prob.nnz,
                     phi=prob.phi, seconds=t,
-                    model_words=model_words[cached]))
+                    model_words=model_words[cached],
+                    schedule_words=rnd.modeled_words,
+                    measured_words=(rnd.measured_words or {}).get(
+                        "total"),
+                    drift=rnd.drift,
+                    session_hit_rate=hits / max(hits + miss, 1.0)))
 
         t_sddmm = common.timeit(lambda: prob.sddmm(X, Y).to_dense(),
                                 iters=2)
         t_spmm = common.timeit(lambda: prob.spmm(Y), iters=2)
         out(common.csv_line(f"dist.{name}.sddmm", t_sddmm, f"c={prob.c}"))
         out(common.csv_line(f"dist.{name}.spmm", t_spmm, f"c={prob.c}"))
+        drifts = {}
+        with obs.trace(tracer):
+            prob.sddmm(X, Y)
+            drifts["sddmm"] = tracer.rounds[-1].drift
+            prob.spmm(Y)
+            drifts["spmm"] = tracer.rounds[-1].drift
         records.append(dict(name=name, elision=None, kernel="sddmm",
                             session_cached=False, c=prob.c, m=M, n=N,
                             r=R, nnz=prob.nnz, phi=prob.phi,
-                            seconds=t_sddmm))
+                            seconds=t_sddmm, drift=drifts["sddmm"]))
         records.append(dict(name=name, elision=None, kernel="spmm",
                             session_cached=False, c=prob.c, m=M, n=N,
                             r=R, nnz=prob.nnz, phi=prob.phi,
-                            seconds=t_spmm))
+                            seconds=t_spmm, drift=drifts["spmm"]))
 
     # --- training-step rows: fwd-only vs fwd+bwd vs session-reused ---
     # Per registry cell, the extended cost model's per-step words
@@ -194,6 +221,10 @@ def run(out, json_path=JSON_PATH):
                             meta=dict(bench="dist", m=M, n=N, r=R,
                                       nnz_row=NNZ_ROW))
     out(f"# wrote {path}")
+    arts = obs.write_artifacts(".", "dist", tracer=tracer,
+                               registry=metrics_reg)
+    out(f"# wrote {arts['trace']}")
+    out(f"# wrote {arts['metrics']}")
 
 
 if __name__ == "__main__":

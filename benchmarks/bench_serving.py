@@ -26,7 +26,7 @@ beats the per-request baseline.
 import numpy as np
 
 from benchmarks import common
-from repro import serving
+from repro import obs, serving
 from repro.apps import als
 
 JSON_PATH = "BENCH_serving.json"
@@ -78,6 +78,7 @@ def run(out, json_path=JSON_PATH):
     catalog = [(rng.integers(0, M, QUERY_LEN),
                 rng.integers(0, N, QUERY_LEN)) for _ in range(CATALOG)]
     records = []
+    metrics_reg = obs.MetricsRegistry()   # sweep-wide METRICS_serving.json
 
     for conc in CONCURRENCY:
         results = {}
@@ -90,10 +91,16 @@ def run(out, json_path=JSON_PATH):
             # level will see, so the measured replay is steady-state
             serving.replay_trace(
                 eng, _make_trace(dep, conc, 2, catalog))
-            res = serving.replay_trace(
-                eng, _make_trace(dep, conc, BURSTS, catalog))
+            # each measured replay collects into its own registry, so
+            # the per-row pool/session/latency fields are the obs
+            # surface's numbers, not hand-maintained counters
+            with obs.metrics.collect() as reg:
+                res = serving.replay_trace(
+                    eng, _make_trace(dep, conc, BURSTS, catalog))
             results[mode] = res
-            sess = dep.session.stats()
+            tick_h = reg.histogram("serving.tick_seconds") or {}
+            sh = reg.value("serving.pool.session.hits") or 0.0
+            sm = reg.value("serving.pool.session.misses") or 0.0
             records.append(dict(
                 kind="serving", mode=mode, concurrency=conc,
                 m=M, n=N, r=R, nnz=len(vals),
@@ -101,9 +108,15 @@ def run(out, json_path=JSON_PATH):
                 p50=res["p50"], p99=res["p99"], mean=res["mean"],
                 throughput=res["throughput"],
                 rounds=eng.rounds,
-                pool_hit_rate=pool.stats()["hit_rate"],
-                session_hits=sess["hits"],
-                session_misses=sess["misses"]))
+                ticks=reg.value("serving.ticks"),
+                tick_seconds_mean=tick_h.get("mean"),
+                batch_occupancy_mean=(
+                    reg.histogram("serving.batch_occupancy") or {}
+                ).get("mean"),
+                pool_hit_rate=reg.value("serving.pool.hit_rate"),
+                session_hits=sh, session_misses=sm,
+                session_hit_rate=sh / max(sh + sm, 1.0)))
+            metrics_reg.merge(reg, conc=conc, mode=mode)
             out(common.csv_line(
                 f"serving.score.c{conc}.{mode}", res["p50"],
                 f"p99={res['p99'] * 1e6:.0f}us;"
@@ -139,6 +152,8 @@ def run(out, json_path=JSON_PATH):
                   catalog=CATALOG, query_len=QUERY_LEN, bursts=BURSTS,
                   period=PERIOD, pool=pool.stats()))
     out(f"# wrote {path}")
+    arts = obs.write_artifacts(".", "serving", registry=metrics_reg)
+    out(f"# wrote {arts['metrics']}")
 
 
 if __name__ == "__main__":

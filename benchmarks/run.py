@@ -7,6 +7,12 @@ os.environ.setdefault(
 
 Prints ``name,us_per_call,derived`` CSV.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig4,fig7]
+
+Artifacts land in the working directory: ``BENCH_<key>.json`` (perf
+records) and, from the obs-instrumented benches (dist, serving), the
+``TRACE_<key>.json`` / ``METRICS_<key>.json`` pair described in
+docs/observability.md — Perfetto-loadable spans with per-row cost-model
+drift, and the metrics-registry snapshot.
 """
 import argparse
 import sys

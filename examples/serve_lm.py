@@ -28,13 +28,13 @@ def decode_demo():
     from repro.config import ParallelConfig
     from repro.configs import llama32_1b
     from repro.models import model as M
-    from repro.serving import engine
+    from repro.serving import decode
     cfg = llama32_1b.reduced()
     pcfg = ParallelConfig(compute_dtype="float32")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
-    out = engine.greedy_generate(cfg, pcfg, params, {"tokens": prompts},
+    out = decode.greedy_generate(cfg, pcfg, params, {"tokens": prompts},
                                  steps=16)
     print("generated:", out.shape)
     print(np.asarray(out[:2]))

@@ -57,6 +57,8 @@ import numpy as np
 from repro.core import costmodel, d15, d25, s15, s25
 from repro.core.grid import make_grid15, make_grid25
 from repro.distributed import faults
+from repro.obs import tracer as obs_tracer
+from repro.obs import metrics as obs_metrics
 
 __all__ = [
     "ALGORITHMS", "Algorithm", "DistProblem", "Session", "SparseResult",
@@ -172,6 +174,30 @@ class Algorithm:
         scripts failures at (each family module exports its own)."""
         return self._sched_mod.schedule_events(prob.grid, op, elision)
 
+    def schedule_words(self, prob, op: str, elision: str = "none",
+                       session: Optional["Session"] = None):
+        """Modeled per-device wire words for each schedule event.
+
+        Returns ``(point, phase, kind, words)`` tuples aligned 1:1 with
+        :meth:`schedule_events` — the live cost-model side of the obs
+        tracer (``repro.obs``).  The formulas are impl-exact for dense
+        wire formats (including XLA's dead-code elimination of unread
+        cycle-closing shifts); ``session`` models the pre-gathered
+        (replay) program the executors compile when one is passed.
+        Returns None for support-pruned (``comm="sparse"``) packs, whose
+        volume is data-dependent — drift is undefined there."""
+        plan, pre = self._words_plan(prob, op, elision, session)
+        if plan.smeta is not None:
+            return None
+        return self._sched_mod.schedule_words(prob.grid, plan, op,
+                                              elision=elision,
+                                              pre_gathered=pre)
+
+    def _words_plan(self, prob, op, elision, session):
+        """(plan, pre_gathered) mirroring this family's ``_*_call``
+        orientation and Session behavior for one op."""
+        raise NotImplementedError
+
     # -- layouts -------------------------------------------------------------
     def shard_x(self, prob, X):
         """Place an (m, r) operand in this family's X input layout."""
@@ -191,6 +217,10 @@ class Algorithm:
         """R = S * (X Y^T) sampled at nnz(S).  ``session`` serves the
         family's fiber replication of the dense operand(s) from the
         across-call cache (d15/s15/d25; s25 replicates nothing)."""
+        fn, args, kwargs, post = self._sddmm_call(prob, X, Y, session)
+        return post(fn(*args, **kwargs))
+
+    def _sddmm_call(self, prob, X, Y, session):
         raise NotImplementedError
 
     def spmm(self, prob, Y, vals=None, session=None) -> np.ndarray:
@@ -199,7 +229,25 @@ class Algorithm:
         (:meth:`DistProblem.injected_plan`); ``session`` serves the
         dense gather where the family has one (s15 only — the other
         families' SpMM replicates nothing inbound)."""
+        fn, args, kwargs, post = self._spmm_call(prob, Y, vals, session)
+        return post(fn(*args, **kwargs))
+
+    def _spmm_call(self, prob, Y, vals, session):
         raise NotImplementedError
+
+    def lower_sddmm(self, prob, session: Optional["Session"] = None):
+        """Lower the family's jitted SDDMM for HLO/wire-word analysis;
+        with a ``session``, the pre-gathered (replay) variant."""
+        X = np.zeros((prob.m, prob.r), np.float32)
+        Y = np.zeros((prob.n, prob.r), np.float32)
+        fn, args, kwargs, _ = self._sddmm_call(prob, X, Y, session)
+        return fn.lower(*args, **kwargs)
+
+    def lower_spmm(self, prob, session: Optional["Session"] = None):
+        """Lower the family's jitted SpMM for HLO/wire-word analysis."""
+        Y = np.zeros((prob.n, prob.r), np.float32)
+        fn, args, kwargs, _ = self._spmm_call(prob, Y, None, session)
+        return fn.lower(*args, **kwargs)
 
     def spmm_t(self, prob, A, vals=None, session=None) -> np.ndarray:
         """out = S(vals)^T @ A on the SAME grid — the dual of spmm.
@@ -291,25 +339,38 @@ class _D15(Algorithm):
         g = prob.grid
         return _put(arr, g.sharding(g.layer))
 
-    def sddmm(self, prob, X, Y, session=None):
+    def _words_plan(self, prob, op, elision, session):
+        pre = session is not None
+        if op == "spmm":
+            return prob.plan("normal"), False   # nothing inbound replicated
+        if op == "spmm_t":
+            return prob.transposed().plan("transpose"), pre
+        if op == "fusedmm" and elision == "reuse":
+            return prob.plan("transpose"), pre
+        return prob.plan("normal"), pre
+
+    def _sddmm_call(self, prob, X, Y, session):
         plan = prob.plan("normal")
         if session is not None:
             a, pre = session.replicate(prob, X, "x"), True
         else:
             a, pre = self.shard_x(prob, X), False
-        rv = d15.sddmm_d15(prob.grid, plan, a, self.shard_y(prob, Y),
-                           pre_gathered=pre)
-        return SparseResult(prob, rv,
-                            lambda: plan.meta.block_meta.to_triples(
-                                plan.rows_local, plan.cols, rv,
-                                plan.tile_base))
 
-    def spmm(self, prob, Y, vals=None, session=None):
+        def post(rv):
+            return SparseResult(prob, rv,
+                                lambda: plan.meta.block_meta.to_triples(
+                                    plan.rows_local, plan.cols, rv,
+                                    plan.tile_base))
+
+        return (d15.sddmm_d15, (prob.grid, plan, a, self.shard_y(prob, Y)),
+                dict(pre_gathered=pre), post)
+
+    def _spmm_call(self, prob, Y, vals, session):
         # B shifts and the output reduce-scatters: nothing inbound is
         # replicated, so there is no gather for a session to serve
         plan = prob.injected_plan("normal", vals)
-        return np.asarray(d15.spmma_d15(prob.grid, plan,
-                                        self.shard_y(prob, Y)))
+        return (d15.spmma_d15, (prob.grid, plan, self.shard_y(prob, Y)),
+                {}, np.asarray)
 
     def _spmm_t_call(self, prob, A, vals, session):
         # native FusedMMB-half: spmmb on S's transpose pack — which is
@@ -392,7 +453,17 @@ class _S15(Algorithm):
         return lambda: plan.meta.block_meta.to_triples(
             plan.rows_local, plan.cols, np.asarray(rv), plan.tile_base)
 
-    def sddmm(self, prob, X, Y, session=None):
+    def _words_plan(self, prob, op, elision, session):
+        pre = session is not None
+        if op == "spmm_t":
+            # the A gather lands in the single-gather (B) slot of the
+            # transposed problem's plan, same as _spmm_t_call
+            return prob.transposed().plan("normal"), (False, pre)
+        if op == "spmm":
+            return prob.plan("normal"), (False, pre)
+        return prob.plan("normal"), (pre, pre)
+
+    def _sddmm_call(self, prob, X, Y, session):
         plan = prob.plan("normal")
         if session is not None:
             a = session.replicate(prob, X, "x")
@@ -401,17 +472,23 @@ class _S15(Algorithm):
         else:
             a, b = self.shard_x(prob, X), self.shard_y(prob, Y)
             pre = (False, False)
-        rv = s15.sddmm_s15(prob.grid, plan, a, b, pre_gathered=pre)
-        return SparseResult(prob, rv, self._rvals_triples(prob, plan, rv))
 
-    def spmm(self, prob, Y, vals=None, session=None):
+        def post(rv):
+            return SparseResult(prob, rv,
+                                self._rvals_triples(prob, plan, rv))
+
+        return (s15.sddmm_s15, (prob.grid, plan, a, b),
+                dict(pre_gathered=pre), post)
+
+    def _spmm_call(self, prob, Y, vals, session):
         plan = prob.injected_plan("normal", vals)
         if session is not None:
             b, pre = session.replicate(prob, Y, "y"), True
         else:
             b, pre = self.shard_y(prob, Y), False
-        slabs = s15.spmma_s15(prob.grid, plan, b, pre_gathered=pre)
-        return s15.assemble_spmm_out(prob.grid, plan, slabs)
+        return (s15.spmma_s15, (prob.grid, plan, b),
+                dict(pre_gathered=pre),
+                lambda slabs: s15.assemble_spmm_out(prob.grid, plan, slabs))
 
     def _spmm_t_call(self, prob, A, vals, session):
         # S stays stationary-by-row, so the transpose runs on the S^T
@@ -483,27 +560,42 @@ class _D25(Algorithm):
         g = prob.grid
         return _put(arr, g.sharding(g.row, g.col))
 
-    def sddmm(self, prob, X, Y, session=None):
+    def _words_plan(self, prob, op, elision, session):
+        pre = session is not None
+        if op == "spmm":
+            return prob.plan("normal"), False   # Cannon-shifts, no gather
+        if op == "spmm_t":
+            return prob.transposed().plan("transpose"), pre
+        if op == "fusedmm" and elision == "reuse":
+            return prob.plan("transpose"), pre
+        return prob.plan("normal"), pre
+
+    def _sddmm_call(self, prob, X, Y, session):
         plan = prob.plan("normal")
         if session is not None:
             a, pre = session.replicate(prob, X, "x"), True
         else:
             a, pre = self.shard_x(prob, X), False
-        rv = d25.sddmm_d25(prob.grid, plan, a,
-                           d25.skew_b(prob.grid, np.asarray(Y, np.float32)),
-                           pre_gathered=pre)
-        return SparseResult(prob, rv,
-                            lambda: plan.meta.block_meta.to_triples(
-                                plan.rows_local, plan.cols,
-                                np.asarray(rv), plan.tile_base))
 
-    def spmm(self, prob, Y, vals=None, session=None):
+        def post(rv):
+            return SparseResult(prob, rv,
+                                lambda: plan.meta.block_meta.to_triples(
+                                    plan.rows_local, plan.cols,
+                                    np.asarray(rv), plan.tile_base))
+
+        return (d25.sddmm_d25,
+                (prob.grid, plan, a,
+                 d25.skew_b(prob.grid, np.asarray(Y, np.float32))),
+                dict(pre_gathered=pre), post)
+
+    def _spmm_call(self, prob, Y, vals, session):
         # B Cannon-shifts and the output reduce-scatters: no inbound
         # replication for a session to serve
         plan = prob.injected_plan("normal", vals)
-        out = d25.spmma_d25(prob.grid, plan,
-                            d25.skew_b(prob.grid, np.asarray(Y, np.float32)))
-        return np.asarray(out)
+        return (d25.spmma_d25,
+                (prob.grid, plan,
+                 d25.skew_b(prob.grid, np.asarray(Y, np.float32))),
+                {}, np.asarray)
 
     def _spmm_t_call(self, prob, A, vals, session):
         # native FusedMMB-half on the Cannon grid (see _D15._spmm_t_call
@@ -598,17 +690,28 @@ class _S25(Algorithm):
                 np.asarray(plan.tile_base)[:, :, 0])
         return triples
 
-    def sddmm(self, prob, X, Y, session=None):
+    def _words_plan(self, prob, op, elision, session):
+        del elision, session            # Session-inert, values-only fiber
+        if op == "spmm_t":
+            return prob.transposed().plan("normal"), False
+        return prob.plan("normal"), False
+
+    def _sddmm_call(self, prob, X, Y, session):
         # nothing dense is replicated: session accepted and ignored
         plan = prob.plan("normal")
-        rv = s25.sddmm_s25(prob.grid, plan, self.shard_x(prob, X),
-                           self.shard_y(prob, Y))
-        return SparseResult(prob, rv, self._rvals_triples(prob, plan, rv))
 
-    def spmm(self, prob, Y, vals=None, session=None):
+        def post(rv):
+            return SparseResult(prob, rv,
+                                self._rvals_triples(prob, plan, rv))
+
+        return (s25.sddmm_s25,
+                (prob.grid, plan, self.shard_x(prob, X),
+                 self.shard_y(prob, Y)), {}, post)
+
+    def _spmm_call(self, prob, Y, vals, session):
         plan = prob.injected_plan("normal", vals)
-        out = s25.spmma_s25(prob.grid, plan, self.shard_y(prob, Y))
-        return s25.unskew_out(prob.grid, plan, out)
+        return (s25.spmma_s25, (prob.grid, plan, self.shard_y(prob, Y)),
+                {}, lambda out: s25.unskew_out(prob.grid, plan, out))
 
     def _spmm_t_call(self, prob, A, vals, session):
         # spmm on the transposed problem (structure re-replicated on the
@@ -1001,7 +1104,11 @@ class DistProblem:
         the across-call cache (bitwise-identical; d15/d25 gather X,
         s15 gathers both, s25 nothing)."""
         faults.guard("sddmm", self)
-        return self.alg.sddmm(self, X, Y, session=session)
+        tr = obs_tracer.active()
+        if tr is None:
+            return self.alg.sddmm(self, X, Y, session=session)
+        with tr.round(self, "sddmm", session=session):
+            return self.alg.sddmm(self, X, Y, session=session)
 
     def spmm(self, Y, vals=None,
              session: Optional["Session"] = None) -> np.ndarray:
@@ -1013,7 +1120,11 @@ class DistProblem:
         serves s15's column-slab gather of Y; the other families' SpMM
         replicates nothing inbound."""
         faults.guard("spmm", self)
-        return self.alg.spmm(self, Y, vals=vals, session=session)
+        tr = obs_tracer.active()
+        if tr is None:
+            return self.alg.spmm(self, Y, vals=vals, session=session)
+        with tr.round(self, "spmm", session=session):
+            return self.alg.spmm(self, Y, vals=vals, session=session)
 
     def spmm_t(self, A, vals=None, session: Optional["Session"] = None
                ) -> np.ndarray:
@@ -1027,8 +1138,12 @@ class DistProblem:
         faults.guard("spmm_t", self)
         if vals is not None:
             vals = np.asarray(vals, np.float32)
-        return self.alg.spmm_t(self, np.asarray(A, np.float32),
-                               vals=vals, session=session)
+        A = np.asarray(A, np.float32)
+        tr = obs_tracer.active()
+        if tr is None:
+            return self.alg.spmm_t(self, A, vals=vals, session=session)
+        with tr.round(self, "spmm_t", session=session):
+            return self.alg.spmm_t(self, A, vals=vals, session=session)
 
     def fusedmm(self, X, Y, elision: str = "auto",
                 session: Optional["Session"] = None):
@@ -1040,7 +1155,11 @@ class DistProblem:
         matrix and docs/algorithms.md for the per-cell word counts."""
         el = self.resolve_elision(elision, session)
         faults.guard("fusedmm", self, elision=el)
-        return self.alg.fusedmm(self, X, Y, el, session)
+        tr = obs_tracer.active()
+        if tr is None:
+            return self.alg.fusedmm(self, X, Y, el, session)
+        with tr.round(self, "fusedmm", elision=el, session=session):
+            return self.alg.fusedmm(self, X, Y, el, session)
 
     def lower_fusedmm(self, elision: str = "auto",
                       session: Optional["Session"] = None):
@@ -1051,6 +1170,24 @@ class DistProblem:
         """Lower the dual SpMM-transpose program (the VJP's Ybar kernel);
         with a ``session``, the pre-gathered (replay) variant."""
         return self.alg.lower_spmm_t(self, session=session)
+
+    def lower_sddmm(self, session: Optional["Session"] = None):
+        """Lower the jitted SDDMM program (wire-word measurement)."""
+        return self.alg.lower_sddmm(self, session=session)
+
+    def lower_spmm(self, session: Optional["Session"] = None):
+        """Lower the jitted SpMM program (wire-word measurement)."""
+        return self.alg.lower_spmm(self, session=session)
+
+    def schedule_words(self, op: str, elision: str = "auto",
+                       session: Optional["Session"] = None):
+        """Modeled per-device wire words for each of :func:`schedule_events`'
+        (point, phase) boundaries of one ``op`` round — the live
+        cost-model side of ``repro.obs`` span drift.  None for
+        support-pruned wire formats (data-dependent volume)."""
+        el = (self.resolve_elision(elision, session)
+              if op == "fusedmm" else "none")
+        return self.alg.schedule_words(self, op, el, session=session)
 
 
 # ---------------------------------------------------------------------------
@@ -1491,9 +1628,16 @@ class ElasticProblem:
                            p=self.problem.p,
                            coord=getattr(e, "coord", None))
                 self.recoveries.append(rec)
+                reg = obs_metrics.active()
+                if reg is not None:
+                    reg.inc("elastic.faults", 1, op=label,
+                            kind=type(e).__name__)
+                    reg.inc("elastic.retries", 1, op=label)
                 if self.session is not None:
                     rec["evicted"] = self.session.invalidate(self.problem)
                 if attempt > self.policy.max_retries:
+                    if reg is not None:
+                        reg.inc("elastic.exhausted", 1, op=label)
                     raise FaultRecoveryError(
                         f"{label} failed after {attempt} attempts "
                         f"(budget {self.policy.max_retries}): {e}",
@@ -1502,6 +1646,9 @@ class ElasticProblem:
                     self.problem = degrade(self.problem, e.rank)
                     rec["remeshed_to_p"] = self.problem.p
                     rec["family_after"] = self.problem.alg.name
+                    if reg is not None:
+                        reg.inc("elastic.degrades", 1, op=label)
+                        reg.gauge("elastic.p", self.problem.p)
                 delay = next(delays, self.policy.max_delay)
                 if delay:
                     self.policy.sleep(delay)

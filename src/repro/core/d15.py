@@ -355,6 +355,49 @@ def schedule_events(grid: Grid15, op: str, elision: str = "none"):
     raise ValueError(f"unknown op {op!r}")
 
 
+def schedule_words(grid: Grid15, plan: PlanD15, op: str,
+                   elision: str = "none", pre_gathered: bool = False):
+    """Impl-exact per-device wire words for each schedule event.
+
+    Returns ``(point, phase, kind, words)`` tuples aligned 1:1 with
+    :func:`schedule_events` — ``kind`` names the HLO collective the
+    event compiles to (None for compute phases).  The formulas mirror
+    the executors exactly, including XLA's dead-code elimination: a
+    cycle-closing shift whose result no consumer reads costs 0 words.
+    Dense-wire plans only (the obs layer defines cost-model drift for
+    comm="dense"); per-event sums are asserted at 1.00x against the
+    compiled HLO by tests/dist_scripts/check_obs.py.
+    """
+    L, c, p = grid.L, grid.c, grid.p
+    ag = 0.0 if pre_gathered else float((c - 1) * (plan.m // p) * plan.r)
+    rs = float((c - 1) * (plan.m // p) * plan.r)
+    sh = float((plan.n // p) * plan.r)
+    if op in ("sddmm", "spmm"):
+        dead = {L - 1}              # result of the cycle-closing shift
+    elif op == "spmm_t":
+        dead = set()                # the traveling buffer IS the output
+    elif op == "fusedmm":
+        el = resolve_elision(elision, plan.transpose)
+        # "none": round-1's last shift feeds round 2; only the very last
+        # dies.  "reuse"/"fused": round 1 (or the single round) discards
+        # its final B position; reuse's round-2 output travels home live.
+        dead = {2 * L - 1} if el == "none" else {L - 1}
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    out = []
+    for point, t in schedule_events(grid, op, elision):
+        if point == "gather":
+            out.append((point, t, "all-gather", ag))
+        elif point == "reduce":
+            out.append((point, t, "reduce-scatter", rs))
+        elif point == "shift":
+            out.append((point, t, "collective-permute",
+                        0.0 if t in dead else sh))
+        else:
+            out.append((point, t, None, 0.0))
+    return out
+
+
 def resolve_elision(elision: str, transpose: bool) -> str:
     """Resolve the uniform ``"auto"`` default *for the pack in hand*.
 

@@ -307,6 +307,71 @@ def schedule_events(grid: Grid25, op: str, elision: str = "none"):
     raise ValueError(f"unknown op {op!r}")
 
 
+def schedule_words(grid: Grid25, plan: PlanD25, op: str,
+                   elision: str = "none", pre_gathered: bool = False):
+    """Impl-exact per-device wire words for each schedule event.
+
+    Aligned 1:1 with :func:`schedule_events`; see d15.schedule_words for
+    the contract.  A Cannon shift event multiplexes up to three channels
+    — the partial/value payload (nb*k), the coordinate structure
+    (2*nb*k + tile map), and the dense B chunk (nS*rW) — whose liveness
+    differs per cell (an accumulating buffer always travels; a carry
+    whose final position nothing reads is DCE'd).
+    """
+    G, c = grid.G, grid.c
+    meta = plan.meta
+    nb, k = plan.rows_local.shape[-2:]
+    e = float(nb * k)
+    b = float(nb) if plan.row_tile < plan.block_shape[0] else 0.0
+    chunk = float(meta.nS * meta.rW)
+    ag = 0.0 if pre_gathered else float((c - 1) * meta.mA * meta.rW)
+    rs = float((c - 1) * meta.mS * meta.rW / c)
+    if op == "sddmm":
+        # traveling partial always moves; struct + B die on the last hop
+        def shift_w(t):
+            return e + ((2 * e + b + chunk) if t < G - 1 else 0.0)
+    elif op == "spmm":
+        def shift_w(t):
+            return (3 * e + b + chunk) if t < G - 1 else 0.0
+    elif op == "spmm_t":
+        # spmmb: the output chunk travels every hop; the structure carry
+        # dies after feeding the last contribution
+        def shift_w(t):
+            return chunk + ((3 * e + b) if t < G - 1 else 0.0)
+    elif op == "fusedmm":
+        el = resolve_elision(elision, plan.transpose)
+        if el == "none":
+            # round 1 hands struct AND B to round 2 (all hops live)
+            def shift_w(t):
+                if t < G:
+                    return 3 * e + b + chunk
+                return (3 * e + b + chunk) if t < 2 * G - 1 else 0.0
+        elif el == "fused":
+            # single structure pass: partial, ORIGINAL values, structure
+            # and the B chunk all travel; the final hop brings the
+            # partial home alone
+            def shift_w(t):
+                return e + ((3 * e + b + chunk) if t < G - 1 else 0.0)
+        else:   # reuse: struct feeds round 2; output travels home live
+            def shift_w(t):
+                if t < G:
+                    return 3 * e + b + (chunk if t < G - 1 else 0.0)
+                return chunk + ((3 * e + b) if t - G < G - 1 else 0.0)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    out = []
+    for point, t in schedule_events(grid, op, elision):
+        if point == "gather":
+            out.append((point, t, "all-gather", ag))
+        elif point == "reduce":
+            out.append((point, t, "reduce-scatter", rs))
+        elif point == "shift":
+            out.append((point, t, "collective-permute", float(shift_w(t))))
+        else:
+            out.append((point, t, None, 0.0))
+    return out
+
+
 def resolve_elision(elision: str, transpose: bool) -> str:
     """Resolve the uniform ``"auto"`` default *for the pack in hand*:
     reuse iff transpose-packed (FusedMMB), the one-structure-pass

@@ -229,6 +229,65 @@ def schedule_events(grid: Grid15, op: str, elision: str = "none"):
     raise ValueError(f"unknown op {op!r}")
 
 
+def schedule_words(grid: Grid15, plan: PlanS15, op: str,
+                   elision: str = "none",
+                   pre_gathered=(False, False)):
+    """Impl-exact per-device wire words for each schedule event.
+
+    Aligned 1:1 with :func:`schedule_events`; see d15.schedule_words for
+    the contract.  The COO propagation decomposes per shift event into a
+    partial/value payload (nb*k words) and a structure payload
+    (2*nb*k + tile-map words); ``tile_base`` only travels when the pack
+    has more than one row tile per block (row_tile < mS) — with a single
+    tile the kernels never read it and XLA prunes its shift chain.
+    """
+    L, c, p = grid.L, grid.c, grid.p
+    nb, k = plan.rows_local.shape[-2:]
+    e = float(nb * k)
+    b = float(nb) if plan.row_tile < plan.mS else 0.0
+    ga = float((c - 1) * plan.m * (plan.r // p))
+    gb = float((c - 1) * plan.n * (plan.r // p))
+    pre_a, pre_b = pre_gathered
+    if op == "sddmm":
+        gathers = [0.0 if pre_a else ga, 0.0 if pre_b else gb]
+
+        def shift_w(t):
+            return e + ((2 * e + b) if t < L - 1 else 0.0)
+    elif op in ("spmm", "spmm_t"):
+        gathers = [0.0 if pre_b else gb]
+
+        def shift_w(t):
+            return (3 * e + b) if t < L - 1 else 0.0
+    elif op == "fusedmm":
+        el = "fused" if elision == "auto" else elision
+        gathers = [0.0 if pre_a else ga, 0.0 if pre_b else gb]
+        if el == "none":
+            gathers.append(gb)   # honest re-gather, never session-elided
+        if el == "fused":
+            # single structure pass: the partial, the ORIGINAL values
+            # (the SpMM half samples R = vals * partial in-flight) and
+            # the structure all travel together; the final shift brings
+            # the partial home alone
+            def shift_w(t):
+                return e + ((3 * e + b) if t < L - 1 else 0.0)
+        else:
+            # none/reuse: round-1's final struct shift feeds round 2's
+            # full-pack propagation, so only the very last shift dies
+            def shift_w(t):
+                return (3 * e + b) if t < 2 * L - 1 else 0.0
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    out, gi = [], iter(gathers)
+    for point, t in schedule_events(grid, op, elision):
+        if point == "gather":
+            out.append((point, t, "all-gather", next(gi)))
+        elif point == "shift":
+            out.append((point, t, "collective-permute", float(shift_w(t))))
+        else:
+            out.append((point, t, None, 0.0))
+    return out
+
+
 def _sddmm_round(grid, plan, T_A, T_B, s, L, lay):
     """One propagation round accumulating partial sampled dots.
 

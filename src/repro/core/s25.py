@@ -456,6 +456,61 @@ def schedule_events(grid: Grid25, op: str, elision: str = "none"):
     raise ValueError(f"unknown op {op!r}")
 
 
+def schedule_words(grid: Grid25, plan: PlanS25, op: str,
+                   elision: str = "none", pre_gathered: bool = False):
+    """Impl-exact per-device wire words for each schedule event.
+
+    Aligned 1:1 with :func:`schedule_events`; see d15.schedule_words for
+    the contract.  s25 replicates no dense operand, so ``pre_gathered``
+    changes nothing; the fiber traffic is values-only.  SpMM's opening
+    value all-gather has no event of its own in the fault schedule — its
+    words ride the first phase span; FusedMM's reduce event carries both
+    the partial-sum reduce-scatter AND the value re-broadcast (RS + AG).
+    """
+    del pre_gathered   # nothing dense is replicated here (Session-inert)
+    G, c = grid.G, grid.c
+    nb, k = plan.rows_local.shape[-2:]
+    fiber = float((c - 1) * (nb // c) * k)
+    a_ch = float(plan.mS * plan.rc)    # A chunk / traveling output chunk
+    b_ch = float(plan.nS * plan.rc)
+    if op == "sddmm":
+        # both dense chunks die on the cycle-closing hop
+        def shift_w(t):
+            return (a_ch + b_ch) if t < G - 1 else 0.0
+    elif op in ("spmm", "spmm_t"):
+        # the output chunk accumulates (always travels); B's last hop dies
+        def shift_w(t):
+            return a_ch + (b_ch if t < G - 1 else 0.0)
+    elif op == "fusedmm":
+        el = resolve_elision(elision)
+        if el == "none":
+            # round 1: B home feeds round 2 (all hops live), A's last dies;
+            # round 2: output always travels, B's last hop dies
+            def shift_w(t):
+                if t < G:
+                    return b_ch + (a_ch if t < G - 1 else 0.0)
+                return a_ch + (b_ch if t - G < G - 1 else 0.0)
+        else:   # reuse: round 2 replays cached B chunks — output only
+            def shift_w(t):
+                if t < G:
+                    return (a_ch + b_ch) if t < G - 1 else 0.0
+                return a_ch
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    out = []
+    for point, t in schedule_events(grid, op, elision):
+        if point == "reduce":
+            out.append((point, t, "reduce-scatter",
+                        2 * fiber if op == "fusedmm" else fiber))
+        elif point == "phase" and t == 0 and op in ("spmm", "spmm_t"):
+            out.append((point, t, "all-gather", fiber))
+        elif point == "shift":
+            out.append((point, t, "collective-permute", float(shift_w(t))))
+        else:
+            out.append((point, t, None, 0.0))
+    return out
+
+
 @functools.partial(jax.jit, static_argnums=(0,),
                    static_argnames=("elision",))
 def fusedmm_s25(grid: Grid25, plan: PlanS25, A_sk, B_sk,

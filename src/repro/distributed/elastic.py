@@ -36,6 +36,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.distributed.faults import TransientFault
+from repro.obs import metrics as obs_metrics
 
 
 def _runtime_error_types():
@@ -92,8 +93,13 @@ class StepMonitor:
         self._times.append(seconds)
         if len(self._times) > self.window:
             self._times.pop(0)
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.observe("train.step_seconds", seconds)
         if med is not None and seconds > self.straggler_factor * med:
             self.flagged.append(step)
+            if reg is not None:
+                reg.inc("train.stragglers")
             if self.on_straggler:
                 self.on_straggler(step, seconds, med)
             return True

@@ -91,7 +91,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
                overrides: dict | None = None, microbatch: int = 4):
     """Returns (lowered, meta) for one cell."""
     from repro.models import model as M
-    from repro.serving import engine
+    from repro.serving import decode
     from repro.training import optimizer as opt
     from repro.training import train_step as ts
 
@@ -140,7 +140,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
                                              axis_sizes))
 
         def step(params, batch):
-            return engine.prefill(cfg, pcfg, params, batch)
+            return decode.prefill(cfg, pcfg, params, batch)
 
         fn = jax.jit(step, in_shardings=(psh, bsh),
                      out_shardings=(None, csh))
@@ -153,7 +153,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
                                              axis_sizes))
 
         def step(params, batch, cache):
-            return engine.decode_step(cfg, pcfg, params, batch, cache)
+            return decode.decode_step(cfg, pcfg, params, batch, cache)
 
         fn = jax.jit(step, in_shardings=(psh, bsh, csh),
                      out_shardings=(None, csh), donate_argnums=(2,))

@@ -23,7 +23,7 @@ from repro.distributed.elastic import StepMonitor
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import resolve_config
 from repro.models import model as M
-from repro.serving import engine
+from repro.serving import decode
 
 
 def main(argv=None):
@@ -50,16 +50,16 @@ def main(argv=None):
             rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
             jnp.int32)
         t0 = time.perf_counter()
-        logits, cache = engine.prefill(cfg, pcfg, params,
+        logits, cache = decode.prefill(cfg, pcfg, params,
                                        {"tokens": prompts})
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
-        cache = engine.extend_cache(cache, args.gen)
+        cache = decode.extend_cache(cache, args.gen)
         tok = jnp.argmax(logits[:, -1], -1)
         lat = []
         for i in range(args.gen - 1):
             t0 = time.perf_counter()
-            logits, cache = engine.decode_step(
+            logits, cache = decode.decode_step(
                 cfg, pcfg, params, {"tokens": tok[:, None]}, cache)
             jax.block_until_ready(logits)
             lat.append(time.perf_counter() - t0)

@@ -321,6 +321,31 @@ def program_totals(hlo_text: str) -> Dict[str, float]:
     return visit(entry)
 
 
+def wire_words(hlo_text: str, *, word_bytes: int = 4) -> Dict[str, float]:
+    """Loop-aware per-device wire traffic in ELEMENT counts per collective.
+
+    The cost model (``repro.core.costmodel``) and the tracing layer
+    (``repro.obs``) both speak *words* — float32 elements — while the HLO
+    walk naturally yields bytes.  This converts the loop-aware
+    ``collective_totals`` to element counts so measured traffic and the
+    Table-III formulas compare in the same unit: ``{"total": words,
+    "count": collectives, "<kind>": words, "<kind>_count": n}`` with one
+    entry per collective kind that actually occurs.  ``word_bytes``
+    rescales for non-f32 payloads (e.g. 2 for a bf16-compressed wire).
+    """
+    totals = collective_totals(hlo_text)
+    out: Dict[str, float] = {
+        "total": totals.get("wire_bytes", 0.0) / word_bytes,
+        "count": totals.get("count", 0.0),
+    }
+    for kind in _COLLECTIVES:
+        wb = totals.get(f"{kind}_wire_bytes")
+        if wb is not None:
+            out[kind] = wb / word_bytes
+            out[f"{kind}_count"] = totals.get(f"{kind}_count", 0.0)
+    return out
+
+
 def collective_summary(hlo_text: str) -> Dict[str, float]:
     """Aggregate per-device collective traffic from an HLO module.
 

@@ -4,10 +4,12 @@ Two sub-stacks share this package:
 
 * the distributed serving engine (requests/pool/batcher/server) —
   coalesced SDDMM/SpMM rounds over pooled graph deployments, the
-  docs/serving.md subsystem;
-* the local LM decode path (:mod:`repro.serving.engine`) — prefill +
+  docs/serving.md subsystem.  :class:`ServingEngine` (``server.py``) is
+  the one canonical engine export;
+* the local LM decode path (:mod:`repro.serving.decode`) — prefill +
   greedy decode on the single-process model, imported explicitly so
-  this package does not pull the model stack in for graph serving.
+  this package does not pull the model stack in for graph serving
+  (``repro.serving.engine`` remains as a back-compat alias).
 """
 from repro.serving.pool import Deployment, SessionPool, content_key
 from repro.serving.requests import (AdmissionError, AggregateRequest,

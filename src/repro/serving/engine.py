@@ -1,65 +1,14 @@
-"""Serving steps: prefill (build KV cache) and decode (one token).
+"""Back-compat alias for :mod:`repro.serving.decode`.
 
-``serve_step`` is the function the decode_* / long_* dry-run shapes lower:
-one new token against a KV cache of ``seq_len``, returning next-token
-logits and the updated cache.  Cache shardings come from
-``model.cache_specs`` (batch over data/pod, optional sequence sharding for
-the long-context path).
+This module historically held the local LM decode path under a name
+that collided with the distributed :class:`repro.serving.ServingEngine`
+(``server.py``) — two unrelated things both called "engine".  The decode
+path now lives in :mod:`repro.serving.decode`; this alias re-exports it
+unchanged so existing imports keep working.  New code should import
+``repro.serving.decode`` (LM prefill/decode) or ``repro.serving``
+(the distributed ServingEngine) directly.
 """
-from __future__ import annotations
+from repro.serving.decode import (decode_step, extend_cache,
+                                  greedy_generate, prefill)
 
-import jax
-import jax.numpy as jnp
-
-from repro.config import ModelConfig, ParallelConfig
-from repro.models import model as M
-
-
-def prefill(cfg: ModelConfig, pcfg: ParallelConfig, params, batch):
-    """Full-sequence forward returning (last_logits, cache).
-
-    Only the final position is projected through the LM head — the full
-    (B, S, vocab) logits tensor is never materialized."""
-    hidden, cache, _ = M.forward(cfg, pcfg, params, batch, want_cache=True,
-                                 return_hidden=True)
-    head = (params["embed"].T if cfg.tie_embeddings
-            else params["head"]).astype(hidden.dtype)
-    logits = jnp.einsum("bsd,dv->bsv", hidden[:, -1:], head).astype(
-        jnp.float32)
-    return logits, cache
-
-
-def decode_step(cfg: ModelConfig, pcfg: ParallelConfig, params, token_batch,
-                cache):
-    """One decode step.  token_batch: {"tokens": (B, 1)} (or embeds)."""
-    logits, cache, _ = M.forward(cfg, pcfg, params, token_batch, cache=cache,
-                                 want_cache=True)
-    return logits, cache
-
-
-def extend_cache(cache, extra: int):
-    """Pad the sequence axis of attention caches by `extra` slots."""
-    def pad(path, x):
-        names = [str(getattr(k, "key", "")) for k in path]
-        if names[-1] in ("k", "v"):          # (..., B, S, Kv, hd)
-            cfgpad = [(0, 0)] * x.ndim
-            cfgpad[-3] = (0, extra)
-            return jnp.pad(x, cfgpad)
-        if names[-1] in ("c_kv", "k_pe"):    # (..., B, S, l)
-            cfgpad = [(0, 0)] * x.ndim
-            cfgpad[-2] = (0, extra)
-            return jnp.pad(x, cfgpad)
-        return x
-    return jax.tree_util.tree_map_with_path(pad, cache)
-
-
-def greedy_generate(cfg, pcfg, params, prompt_batch, steps: int):
-    """Host-driven greedy loop (examples / tests; not the hot path)."""
-    logits, cache = prefill(cfg, pcfg, params, prompt_batch)
-    cache = extend_cache(cache, steps)
-    toks = [jnp.argmax(logits[:, -1], -1)]
-    for _ in range(steps - 1):
-        logits, cache = decode_step(
-            cfg, pcfg, params, {"tokens": toks[-1][:, None]}, cache)
-        toks.append(jnp.argmax(logits[:, -1], -1))
-    return jnp.stack(toks, axis=1)
+__all__ = ["decode_step", "extend_cache", "greedy_generate", "prefill"]

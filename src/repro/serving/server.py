@@ -29,6 +29,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.serving import batcher
 from repro.serving.pool import SessionPool
 from repro.serving.requests import (AdmissionError, AggregateRequest,
@@ -108,6 +109,20 @@ class ServingEngine:
         self.served += sum(1 for t in tickets
                            if t.done and t._error is None)
         report["wall"] = time.perf_counter() - t0
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.observe("serving.tick_seconds", report["wall"])
+            reg.observe("serving.batch_occupancy",
+                        len(tickets) / max(self.max_batch, 1))
+            reg.inc("serving.ticks")
+            reg.inc("serving.requests", len(tickets))
+            reg.gather("serving", dict(rounds=self.rounds,
+                                       served=self.served,
+                                       failed=self.failed))
+            reg.gather("serving.queue", self.queue.stats())
+            pstats = self.pool.stats()
+            reg.gather("serving.pool", pstats)
+            reg.gather("serving.pool.session", pstats["session"])
         return report
 
     def _run_batched(self, tickets: List[Ticket]) -> int:

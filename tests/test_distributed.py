@@ -155,3 +155,15 @@ def test_remesh_8_to_4_bitwise():
     device counts fail with the constraint trail."""
     out = run_script("check_remesh.py")
     assert "ALL REMESH OK" in out
+
+
+@pytest.mark.slow
+def test_obs_traced_smoke_8dev():
+    """Traced 8-device smoke across all four families: every dense
+    round's measured/modeled wire-word ratio inside [0.99, 1.01] (the
+    impl-exact model lands at 1.0000), per-event word sums equal the
+    round model, traced results bitwise vs untraced, and the
+    TRACE_smoke.json / METRICS_smoke.json CI artifacts written."""
+    out = run_script("check_obs.py")
+    assert "ALL OBS OK" in out
+    assert "drift=1.0000" in out

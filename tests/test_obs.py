@@ -1,0 +1,273 @@
+"""Observability layer: metrics registry, tracer spans, zero-cost off.
+
+Fast tier (1 device): the multi-device traced smoke with the drift gate
+lives in tests/dist_scripts/check_obs.py (slow tier).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import api, sparse
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracer as obs_tracer
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram():
+    reg = obs.MetricsRegistry()
+    reg.inc("a")
+    reg.inc("a", 2.5)
+    reg.gauge("g", 7.0, family="d15")
+    reg.gauge("g", 9.0, family="d15")
+    for v in (0.001, 0.01, 0.5, 2.0):
+        reg.observe("h", v)
+    assert reg.value("a") == 3.5
+    assert reg.value("g", family="d15") == 9.0
+    h = reg.histogram("h")
+    assert h["count"] == 4 and h["min"] == 0.001 and h["max"] == 2.0
+    assert h["mean"] == pytest.approx(2.511 / 4)
+
+
+def test_registry_labels_are_distinct_series():
+    reg = obs.MetricsRegistry()
+    reg.inc("rounds", op="sddmm")
+    reg.inc("rounds", op="spmm")
+    reg.inc("rounds", op="sddmm")
+    assert reg.value("rounds", op="sddmm") == 2
+    assert reg.value("rounds", op="spmm") == 1
+    assert reg.value("rounds") is None          # unlabeled series absent
+
+
+def test_registry_type_conflict_raises():
+    reg = obs.MetricsRegistry()
+    reg.inc("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x", 1.0)
+    with pytest.raises(TypeError):
+        reg.observe("x", 1.0)
+
+
+def test_registry_gather_skips_non_numeric():
+    reg = obs.MetricsRegistry()
+    reg.gather("s", dict(hits=3, rate=0.5, name="d15", nested=dict(a=1),
+                         flag=True))
+    assert reg.value("s.hits") == 3.0
+    assert reg.value("s.rate") == 0.5
+    assert reg.value("s.name") is None
+    assert reg.value("s.nested") is None
+    assert reg.value("s.flag") is None          # bools are identity, not data
+
+
+def test_registry_snapshot_json_round_trip():
+    reg = obs.MetricsRegistry()
+    reg.inc("c", 3, op="fusedmm")
+    reg.gauge("drift", 1.0, family="s25")
+    reg.observe("lat", 0.25)
+    reg.observe("lat", 4000.0)
+    reg.observe("empty_never", 1.0, tag="x")
+    blob = reg.to_json()
+    back = obs.MetricsRegistry.from_snapshot(json.loads(blob))
+    assert back.snapshot() == reg.snapshot()
+    assert back.to_json() == blob
+    # and a snapshot of a registry holding an EMPTY histogram round-trips
+    reg2 = obs.MetricsRegistry()
+    reg2._get("h", "histogram", {})
+    back2 = obs.MetricsRegistry.from_snapshot(reg2.snapshot())
+    assert back2.snapshot() == reg2.snapshot()
+
+
+def test_registry_merge_adds_counters_and_labels():
+    a, b = obs.MetricsRegistry(), obs.MetricsRegistry()
+    a.inc("n", 1, mode="x")
+    b.inc("n", 2, mode="x")
+    b.observe("h", 1.0)
+    out = obs.MetricsRegistry()
+    out.merge(a, run=0)
+    out.merge(b, run=0)
+    assert out.value("n", mode="x", run=0) == 3
+    assert out.histogram("h", run=0)["count"] == 1
+
+
+def test_collect_context_arms_and_restores():
+    assert obs_metrics.active() is None
+    with obs.collect() as reg:
+        assert obs_metrics.active() is reg
+        with obs.collect() as inner:
+            assert obs_metrics.active() is inner
+        assert obs_metrics.active() is reg
+    assert obs_metrics.active() is None
+
+
+# ---------------------------------------------------------------------------
+# schedule_words contract (1-device degenerate grids)
+# ---------------------------------------------------------------------------
+
+def _problem(**kw):
+    rows, cols, vals, X, Y = sparse.random_problem(64, 64, 8, 4, seed=0)
+    prob = api.make_problem(rows, cols, vals, (64, 64), 8,
+                            devices=jax.devices()[:1], **kw)
+    return prob, X, Y
+
+
+@pytest.mark.parametrize("name", sorted(api.ALGORITHMS))
+def test_schedule_words_aligns_with_schedule_events(name):
+    prob, _, _ = _problem(algorithm=name)
+    for op in ("sddmm", "spmm", "spmm_t"):
+        ev = prob.alg.schedule_events(prob, op)
+        words = prob.schedule_words(op)
+        assert words is not None
+        assert [(p, t) for p, t, _, _ in words] == ev
+        for _, _, kind, w in words:
+            assert w >= 0.0
+            assert kind in (None, "all-gather", "reduce-scatter",
+                            "collective-permute")
+    for el in prob.alg.elisions:
+        ev = prob.alg.schedule_events(prob, "fusedmm", el)
+        words = prob.schedule_words("fusedmm", el)
+        assert [(p, t) for p, t, _, _ in words] == ev
+
+
+def test_schedule_words_none_for_sparse_wire():
+    prob, _, _ = _problem(algorithm="d15", comm="sparse")
+    assert prob.schedule_words("sddmm") is None
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_trace_records_round_and_event_spans():
+    prob, X, Y = _problem(algorithm="d15")
+    with obs.collect() as reg, obs.trace(measure_wire=False) as tr:
+        prob.sddmm(X, Y)
+        prob.fusedmm(X, Y, elision="fused")
+    assert [r.op for r in tr.rounds] == ["sddmm", "fusedmm"]
+    r0 = tr.rounds[0]
+    assert r0.family == "d15" and r0.comm == "dense" and r0.p == 1
+    assert len(r0.events) == len(
+        prob.alg.schedule_events(prob, "sddmm"))
+    assert r0.dur >= 0 and all(e.dur >= 0 for e in r0.events)
+    # event spans tile the round span (modeled attribution)
+    assert sum(e.dur for e in r0.events) == pytest.approx(r0.dur)
+    # metrics fed live
+    assert reg.value("executor.rounds", op="sddmm", family="d15") == 1
+    assert reg.histogram("executor.round_seconds", op="fusedmm",
+                         family="d15")["count"] == 1
+
+
+def test_trace_is_bitwise_identical_and_counts_rounds():
+    prob, X, Y = _problem(algorithm="s15")
+    base = prob.fusedmm(X, Y, elision="none")
+    with obs.trace(measure_wire=False) as tr:
+        traced = prob.fusedmm(X, Y, elision="none")
+        traced2 = prob.fusedmm(X, Y, elision="none")
+    assert np.array_equal(base[0], traced[0])
+    assert np.array_equal(base[1].values(), traced[1].values())
+    assert [r.round for r in tr.rounds] == [0, 1]
+
+
+def test_trace_survives_unlowerable_measurement():
+    # measure_wire=True on a 1-device grid must not break tracing even
+    # if lowering fails — measurement errors degrade to measured=None
+    prob, X, Y = _problem(algorithm="d25")
+    with obs.trace() as tr:
+        prob.spmm(Y)
+    assert len(tr.rounds) == 1
+
+
+def test_traced_error_round_is_recorded_and_reraised():
+    prob, X, Y = _problem(algorithm="d15")
+    with obs.trace(measure_wire=False) as tr:
+        with pytest.raises(ValueError):
+            prob.fusedmm(X, Y, elision="nonsense")
+    # elision validation fails before the round hook: nothing recorded
+    assert tr.rounds == []
+    with obs.trace(measure_wire=False) as tr:
+        with pytest.raises(TypeError):
+            with tr.round(prob, "sddmm"):
+                raise TypeError("boom")
+    assert tr.rounds[0].error == "TypeError"
+    assert tr.rounds[0].drift is None
+
+
+# ---------------------------------------------------------------------------
+# Zero-cost when disabled (the faults.guard discipline)
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_is_never_touched(monkeypatch):
+    """With no tracer armed the executors must not construct spans,
+    call any Tracer method, or change results — the disabled path is
+    one `active() is None` check, like faults.guard."""
+    prob, X, Y = _problem(algorithm="d15")
+    base = prob.sddmm(X, Y).values()
+
+    def explode(*a, **kw):
+        raise AssertionError("obs hook ran while disabled")
+
+    monkeypatch.setattr(obs_tracer.Tracer, "round", explode)
+    monkeypatch.setattr(obs_tracer.Tracer, "_finish", explode)
+    assert obs_tracer.active() is None
+    got = prob.sddmm(X, Y).values()      # would raise if obs were touched
+    assert np.array_equal(base, got)
+
+
+def test_disabled_metrics_skip_instrumented_sites(monkeypatch):
+    from repro.distributed.elastic import StepMonitor
+    monkeypatch.setattr(obs.MetricsRegistry, "observe",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            AssertionError("metrics while disabled")))
+    assert obs_metrics.active() is None
+    mon = StepMonitor()
+    assert mon.observe(0, 1.0) is False  # no registry: no metric calls
+
+
+def test_trace_context_restores_previous():
+    assert obs_tracer.active() is None
+    with obs.trace(measure_wire=False) as tr:
+        assert obs_tracer.active() is tr
+    assert obs_tracer.active() is None
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_structure_and_artifacts(tmp_path):
+    prob, X, Y = _problem(algorithm="d15")
+    with obs.collect() as reg, obs.trace(measure_wire=False) as tr:
+        prob.sddmm(X, Y)
+    ct = obs.chrome_trace(tr)
+    evs = ct["traceEvents"]
+    names = {e["name"] for e in evs}
+    assert "d15.sddmm" in names and "rank 0" in str(evs)
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert xs and all(set(e) >= {"ts", "dur", "pid", "tid"} for e in xs)
+    # events nest inside their round span on the same track
+    rnd = next(e for e in xs if e["cat"] == "round")
+    for e in xs:
+        if e["cat"] == "event" and e["tid"] == rnd["tid"]:
+            assert e["ts"] >= rnd["ts"] - 1e-6
+            assert e["ts"] + e["dur"] <= rnd["ts"] + rnd["dur"] + 1e-6
+    paths = obs.write_artifacts(str(tmp_path), "t", tracer=tr,
+                                registry=reg)
+    trace_blob = json.load(open(paths["trace"]))
+    assert trace_blob["traceEvents"]
+    metrics_blob = json.load(open(paths["metrics"]))
+    assert obs.MetricsRegistry.from_snapshot(
+        metrics_blob).snapshot() == reg.snapshot()
+    assert paths["trace"].endswith("TRACE_t.json")
+    assert paths["metrics"].endswith("METRICS_t.json")
+
+
+def test_round_summary_renders():
+    prob, X, Y = _problem(algorithm="s25")
+    with obs.trace(measure_wire=False) as tr:
+        prob.fusedmm(X, Y, elision="reuse")
+    txt = obs.round_summary(tr)
+    assert "s25.fusedmm[reuse]" in txt and "drift" in txt

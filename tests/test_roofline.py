@@ -88,3 +88,37 @@ def test_useful_ratio():
     r = analyse_record(rec)
     d = 256 * 4096
     assert r.useful_ratio == pytest.approx(6 * 1e9 * d / (1e12 * 256))
+
+
+RS_HLO = """
+HloModule rs
+
+ENTRY %main (x: f32[16,8]) -> f32[8,8] {
+  %x = f32[16,8]{1,0} parameter(0)
+  %ar = f32[16,8]{1,0} all-reduce(%x), to_apply=%add
+  ROOT %rs = f32[8,8]{1,0} reduce-scatter(%ar), dimensions={0}
+}
+"""
+
+
+def test_wire_words_element_counts_per_kind():
+    # the obs tracing layer compares these against schedule_words, so
+    # the unit must be ELEMENTS (wire bytes / word_bytes), per kind
+    w = hlo_parse.wire_words(HLO)
+    assert w["all-gather"] == 4096 / 4          # out - in
+    assert w["all-gather_count"] == 1
+    assert w["collective-permute"] == 5 * 4096 / 4   # x trip count
+    assert w["collective-permute_count"] == 5
+    assert w["total"] == w["all-gather"] + w["collective-permute"]
+    assert w["count"] == 6
+    assert "reduce-scatter" not in w            # only kinds that occur
+
+
+def test_wire_words_reduce_scatter_all_reduce_and_word_bytes():
+    w = hlo_parse.wire_words(RS_HLO)
+    assert w["reduce-scatter"] == (16 * 8 - 8 * 8) * 4 / 4   # in - out
+    assert w["all-reduce"] == 2 * 16 * 8                     # ring RS+AG
+    assert w["total"] == w["reduce-scatter"] + w["all-reduce"]
+    half = hlo_parse.wire_words(RS_HLO, word_bytes=2)
+    assert half["total"] == 2 * w["total"]      # bf16 wire: same bytes,
+    assert half["count"] == w["count"]          # twice the elements

@@ -27,7 +27,7 @@ from repro.apps import als, gat
 from repro.core import api
 from repro.distributed import faults
 from repro.serving import batcher
-from repro.serving import engine
+from repro.serving import decode
 from repro.config import ParallelConfig
 from repro.models import model as M
 
@@ -51,14 +51,14 @@ def test_decode_matches_teacher_forcing(name):
     full_logits, _, _ = M.forward(cfg, PCFG, params, {"tokens": toks},
                                   want_cache=False)
     half = S // 2
-    logits_p, cache = engine.prefill(cfg, PCFG, params,
+    logits_p, cache = decode.prefill(cfg, PCFG, params,
                                      {"tokens": toks[:, :half]})
-    cache = engine.extend_cache(cache, S - half)
+    cache = decode.extend_cache(cache, S - half)
     np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
                                np.asarray(full_logits[:, half - 1]),
                                rtol=2e-4, atol=2e-4)
     for t in range(half, S):
-        logits_d, cache = engine.decode_step(
+        logits_d, cache = decode.decode_step(
             cfg, PCFG, params, {"tokens": toks[:, t:t + 1]}, cache)
         np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
                                    np.asarray(full_logits[:, t]),
@@ -71,8 +71,8 @@ def test_greedy_generate_deterministic():
     rng = np.random.default_rng(1)
     prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)),
                                     jnp.int32)}
-    out1 = engine.greedy_generate(cfg, PCFG, params, prompt, steps=6)
-    out2 = engine.greedy_generate(cfg, PCFG, params, prompt, steps=6)
+    out1 = decode.greedy_generate(cfg, PCFG, params, prompt, steps=6)
+    out2 = decode.greedy_generate(cfg, PCFG, params, prompt, steps=6)
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
     assert out1.shape == (2, 6)
 
