@@ -1,0 +1,25 @@
+"""Static analysis: invariant linter + schedule-conformance verifier.
+
+``python -m repro.analysis`` runs the linter (rules R1-R5) over
+``src/repro`` and exits nonzero on violations;
+``python -m repro.analysis conformance`` lowers every registry cell to
+HLO and verifies its collective sequence against the published
+schedule (docs/static_analysis.md).
+
+This package root stays jax-free so pure-AST callers (editors, CI
+lint-only steps) can import it without pulling the numeric stack:
+``conformance`` is a submodule import away, and rule R5 imports the
+registry only when it actually runs.
+"""
+from repro.analysis.findings import (AllowEntry, Finding, apply_allowlist,
+                                     load_report, parse_allowlist,
+                                     violations, write_report)
+from repro.analysis.lint import (default_src_root, iter_sources, lint_file,
+                                 render_findings, run_lint)
+
+__all__ = [
+    "AllowEntry", "Finding", "apply_allowlist", "parse_allowlist",
+    "violations", "load_report", "write_report",
+    "default_src_root", "iter_sources", "lint_file", "render_findings",
+    "run_lint",
+]

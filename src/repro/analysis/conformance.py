@@ -1,0 +1,452 @@
+"""Static schedule-conformance verifier (docs/static_analysis.md).
+
+For every registry cell (family x op x elision x comm x session) this
+lowers the executor to partitioned HLO *without executing it* and
+checks that the backend will communicate exactly what the family's
+published schedule promises:
+
+1. **Sequence** (dense cells) - the ordered collective instructions
+   (sorted by XLA ``channel_id``) match the ``schedule_words`` event
+   list one-to-one after collapsing both sides into maximal same-kind
+   runs: same run kinds in the same order, identical per-run wire-word
+   totals (the model is impl-exact, so comparison is exact up to
+   float round-off), and for all-gather/reduce-scatter runs the exact
+   instruction count.  Collective-permutes may legalize one schedule
+   shift into several instructions (one per traveling array / ring), so
+   only their run totals are pinned, plus a lower bound of one
+   instruction per live shift event.
+2. **Replica groups** - every all-gather/reduce-scatter partitions the
+   mesh exactly: disjoint, equal-sized groups whose union is
+   ``{0..p-1}``; every collective-permute's source-target pairs form a
+   partial permutation (no duplicated source or target, all in range).
+3. **Rendezvous** - an SPMD simulation over per-rank event queues: each
+   rank posts its collectives in channel order; a collective fires only
+   when *all* declared group members have it at the head of their
+   queue.  The cell passes only if the simulation drains every queue -
+   any omission, duplication, or cross-rank reordering deadlocks.
+
+``comm="sparse"`` cells have data-dependent wire volume
+(``schedule_words`` returns None by contract), so they get the
+structural checks (2)+(3) only - their verdict rows carry
+``mode="structural"``.
+
+This is the static complement of the dynamic drift gate in
+``repro.obs`` (PR 9): the tracer proves the *measured words* of an
+executed round match the model; this proves the *structure* - kind,
+order, group soundness, deadlock-freedom - before anything runs.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["ExpectedEvent", "CellVerdict", "expected_collectives",
+           "match_sequence", "check_groups", "rank_programs",
+           "simulate_rendezvous", "verify_cell", "conformance_cells",
+           "run_conformance", "write_report", "load_report"]
+
+WORD_BYTES = 4            # f32 wire words, the repo-wide unit
+GATHERLIKE = ("all-gather", "reduce-scatter", "all-reduce")
+
+
+# ---------------------------------------------------------------------------
+# Expected sequence from the family's published schedule
+# ---------------------------------------------------------------------------
+
+class ExpectedEvent(tuple):
+    """(point, phase, kind, words) of one wire-visible schedule event."""
+
+    __slots__ = ()
+
+    def __new__(cls, point: str, phase: int, kind: str, words: float):
+        return tuple.__new__(cls, (point, phase, kind, words))
+
+    point = property(lambda self: self[0])
+    phase = property(lambda self: self[1])
+    kind = property(lambda self: self[2])
+    words = property(lambda self: self[3])
+
+
+def expected_collectives(prob, op: str, elision: str = "none",
+                         session=None) -> Optional[List[ExpectedEvent]]:
+    """Wire-visible events of one cell, in schedule order.
+
+    Derived from ``Algorithm.schedule_words``: events with ``kind=None``
+    (compute phases) or zero words (shifts XLA dead-code-eliminates)
+    emit no HLO instruction and are dropped.  Family modules may declare
+    ``WIRE_EXPANSIONS`` mapping ``(op, point)`` to a kind tuple for
+    schedule events that legalize into several collectives (s25's
+    FusedMM reduce = reduce-scatter + value re-broadcast all-gather);
+    the event's words split evenly across the expansion.  Returns None
+    for support-pruned packs (``schedule_words`` contract).
+    """
+    words = prob.alg.schedule_words(prob, op, elision, session=session)
+    if words is None:
+        return None
+    expansions = getattr(prob.alg._sched_mod, "WIRE_EXPANSIONS", {})
+    out: List[ExpectedEvent] = []
+    for point, phase, kind, w in words:
+        if kind is None or w <= 0:
+            continue
+        kinds = expansions.get((op, point), (kind,))
+        for k in kinds:
+            out.append(ExpectedEvent(point, phase, k, w / len(kinds)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sequence matching (maximal same-kind runs)
+# ---------------------------------------------------------------------------
+
+def _runs(seq: Iterable[Tuple[str, float]]) -> List[Tuple[str, int, float]]:
+    """Collapse (kind, words) into maximal runs: (kind, count, words)."""
+    out: List[Tuple[str, int, float]] = []
+    for kind, words in seq:
+        if out and out[-1][0] == kind:
+            k, c, w = out[-1]
+            out[-1] = (k, c + 1, w + words)
+        else:
+            out.append((kind, 1, words))
+    return out
+
+
+def match_sequence(expected: Sequence[ExpectedEvent],
+                   instrs: Sequence,
+                   word_bytes: int = WORD_BYTES) -> List[str]:
+    """Errors from comparing the schedule to the ordered HLO collectives."""
+    errors: List[str] = []
+    exp = _runs((e.kind, e.words) for e in expected)
+    got = _runs((i.kind, i.wire_bytes / word_bytes) for i in instrs)
+    if [r[0] for r in exp] != [r[0] for r in got]:
+        errors.append(
+            f"collective kind sequence mismatch: schedule promises "
+            f"{[f'{k}x{c}' for k, c, _ in exp]}, HLO emits "
+            f"{[f'{k}x{c}' for k, c, _ in got]}")
+        return errors
+    for (kind, ecount, ewords), (_, gcount, gwords) in zip(exp, got):
+        if kind in GATHERLIKE and ecount != gcount:
+            errors.append(
+                f"{kind} run: schedule has {ecount} event(s), HLO has "
+                f"{gcount} instruction(s)")
+        if kind == "collective-permute" and gcount < ecount:
+            errors.append(
+                f"collective-permute run: {ecount} live shift event(s) "
+                f"but only {gcount} instruction(s)")
+        if abs(ewords - gwords) > 1e-6 * max(1.0, abs(ewords)):
+            errors.append(
+                f"{kind} run words: modeled {ewords:.1f} != measured "
+                f"{gwords:.1f}")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# Replica-group soundness
+# ---------------------------------------------------------------------------
+
+def check_groups(instrs: Sequence, p: int) -> List[str]:
+    """Mesh-partition errors of every collective's group structure."""
+    errors: List[str] = []
+    for ins in instrs:
+        if ins.kind in GATHERLIKE:
+            groups = ins.replica_groups
+            if not groups:
+                errors.append(f"{ins.name}: no replica_groups parsed")
+                continue
+            flat = [r for g in groups for r in g]
+            sizes = {len(g) for g in groups}
+            if len(sizes) != 1:
+                errors.append(f"{ins.name}: unequal group sizes {sizes}")
+            if len(flat) != len(set(flat)):
+                errors.append(f"{ins.name}: overlapping replica groups")
+            if set(flat) != set(range(p)):
+                errors.append(
+                    f"{ins.name}: groups cover {sorted(set(flat))}, "
+                    f"not the full mesh 0..{p - 1}")
+        elif ins.kind == "collective-permute":
+            pairs = ins.source_target_pairs
+            if not pairs:
+                errors.append(f"{ins.name}: no source_target_pairs parsed")
+                continue
+            srcs = [s for s, _ in pairs]
+            tgts = [t for _, t in pairs]
+            if len(srcs) != len(set(srcs)) or len(tgts) != len(set(tgts)):
+                errors.append(
+                    f"{ins.name}: source_target_pairs not a partial "
+                    f"permutation")
+            bad = [x for x in srcs + tgts if not 0 <= x < p]
+            if bad:
+                errors.append(
+                    f"{ins.name}: pair ranks {sorted(set(bad))} outside "
+                    f"mesh 0..{p - 1}")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# SPMD rendezvous simulation
+# ---------------------------------------------------------------------------
+
+def rank_programs(instrs: Sequence, p: int) -> Dict[int, List[tuple]]:
+    """Per-rank collective queues, in backend issue (channel) order.
+
+    Each queue entry is a collective id ``(index, group)`` shared by
+    exactly the declared participants: one id per replica group of a
+    gather-like collective (groups rendezvous independently), one id
+    per collective-permute covering the union of its pair endpoints.
+    """
+    prog: Dict[int, List[tuple]] = {r: [] for r in range(p)}
+    for idx, ins in enumerate(instrs):
+        if ins.kind in GATHERLIKE and ins.replica_groups:
+            parts = [tuple(sorted(g)) for g in ins.replica_groups]
+        elif ins.kind == "collective-permute" and ins.source_target_pairs:
+            members = sorted({x for pr in ins.source_target_pairs
+                              for x in pr})
+            parts = [tuple(members)]
+        else:
+            parts = [tuple(range(p))]     # conservative: global barrier
+        for group in parts:
+            cid = (idx, group)
+            for r in group:
+                if 0 <= r < p:
+                    prog[r].append(cid)
+    return prog
+
+
+def simulate_rendezvous(prog: Dict[int, List[tuple]]) -> Dict[str, object]:
+    """Drain per-rank queues under the SPMD rendezvous rule.
+
+    A collective id fires only when every rank in its declared group
+    (``cid[1]``) has that id at the head of its queue; firing pops it
+    everywhere at once.  Returns ``{"ok", "fired", "stuck"}`` where
+    ``stuck`` maps each undrained rank to its blocking head entry -
+    non-empty exactly when the schedule can deadlock (a rank that never
+    posts, posts twice, or posts out of order relative to a peer).
+    """
+    pos = {r: 0 for r in prog}
+    fired: List[tuple] = []
+    while True:
+        progressed = False
+        for r in sorted(prog):
+            if pos[r] >= len(prog[r]):
+                continue
+            cid = prog[r][pos[r]]
+            group = cid[1]
+            ready = all(
+                g in prog and pos[g] < len(prog[g])
+                and prog[g][pos[g]] == cid
+                for g in group)
+            if ready:
+                for g in group:
+                    pos[g] += 1
+                fired.append(cid)
+                progressed = True
+        if not progressed:
+            break
+    stuck = {r: repr(prog[r][pos[r]]) for r in sorted(prog)
+             if pos[r] < len(prog[r])}
+    return {"ok": not stuck, "fired": len(fired), "stuck": stuck}
+
+
+# ---------------------------------------------------------------------------
+# Per-cell verification
+# ---------------------------------------------------------------------------
+
+class CellVerdict(dict):
+    """Report row for one verified cell (plain dict, JSON-ready)."""
+
+    @property
+    def ok(self) -> bool:
+        return self["verdict"] == "pass"
+
+
+def _lower(prob, op: str, elision: str, session):
+    if op == "sddmm":
+        return prob.alg.lower_sddmm(prob, session)
+    if op == "spmm":
+        return prob.alg.lower_spmm(prob, session)
+    if op == "spmm_t":
+        return prob.alg.lower_spmm_t(prob, session)
+    if op == "fusedmm":
+        return prob.alg.lower_fusedmm(prob, elision, session)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def verify_cell(prob, op: str, elision: str = "none", session=None,
+                expected_override: Optional[Sequence[ExpectedEvent]] = None,
+                ) -> CellVerdict:
+    """Statically verify one registry cell; never executes the program.
+
+    ``expected_override`` substitutes the schedule-derived expectation
+    (tests corrupt it to prove the checker notices).
+    """
+    from repro.roofline.hlo_parse import ordered_collectives
+
+    p = int(prob.p)
+    comm = getattr(prob, "comm", "dense")
+    cell = (f"{prob.alg.name}.{op}"
+            + (f"[{elision}]" if op == "fusedmm" else "")
+            + f"[{comm}]" + ("+sess" if session is not None else ""))
+    checks: Dict[str, str] = {}
+    errors: List[str] = []
+
+    lowered = _lower(prob, op, elision, session)
+    hlo = lowered.compile().as_text()
+    instrs = ordered_collectives(hlo)
+
+    expected = expected_override
+    if expected is None:
+        expected = expected_collectives(prob, op, elision, session=session)
+    mode = "structural" if expected is None else "full"
+
+    if expected is not None:
+        seq_errors = match_sequence(expected, instrs)
+        checks["sequence"] = "fail" if seq_errors else "pass"
+        errors.extend(seq_errors)
+
+    group_errors = check_groups(instrs, p)
+    checks["replica_groups"] = "fail" if group_errors else "pass"
+    errors.extend(group_errors)
+
+    sim = simulate_rendezvous(rank_programs(instrs, p))
+    checks["rendezvous"] = "pass" if sim["ok"] else "fail"
+    if not sim["ok"]:
+        errors.append(f"rendezvous deadlock: stuck ranks {sim['stuck']}")
+
+    return CellVerdict(
+        cell=cell, family=prob.alg.name, op=op, elision=elision,
+        comm=comm, session=session is not None, p=p, mode=mode,
+        collectives=len(instrs),
+        modeled_words=(None if expected is None
+                       else round(sum(e.words for e in expected), 3)),
+        measured_words=round(sum(i.wire_bytes for i in instrs)
+                             / WORD_BYTES, 3),
+        rendezvous_fired=sim["fired"],
+        checks=checks, errors=errors,
+        verdict="fail" if errors else "pass")
+
+
+# ---------------------------------------------------------------------------
+# Registry sweep
+# ---------------------------------------------------------------------------
+
+def _make_problem(family: str, comm: str, *, m: int, n: int, r: int,
+                  c: int, nnz_row: int):
+    import numpy as np
+
+    from repro.core import api, sparse
+
+    rows, cols, _ = sparse.erdos_renyi(m, n, nnz_row, seed=0)
+    rng = np.random.default_rng(0)
+    vals = rng.integers(1, 5, rows.shape[0]).astype(np.float32)
+    return api.make_problem(rows, cols, vals, (m, n), r,
+                            algorithm=family, c=c, comm=comm)
+
+
+def conformance_cells(family_filter: Optional[str] = None,
+                      comms: Tuple[str, ...] = ("dense", "sparse"),
+                      ) -> List[dict]:
+    """Enumerate the registry cell grid as kwargs for :func:`verify_cell`.
+
+    The session axis is data-driven: a +session variant is emitted only
+    when the family's ``schedule_words`` actually changes with a session
+    (the pre-gathered program differs), so Session-inert cells (s25,
+    d15/d25 spmm) are not compiled twice for an identical program.
+    """
+    from repro.core import api
+
+    cells: List[dict] = []
+    for family in sorted(api.ALGORITHMS):
+        if family_filter and family != family_filter:
+            continue
+        alg = api.ALGORITHMS[family]
+        ops = [("sddmm", ("none",)), ("spmm", ("none",)),
+               ("spmm_t", ("none",)), ("fusedmm", alg.elisions)]
+        for comm in comms:
+            for op, elisions in ops:
+                for el in elisions:
+                    cells.append(dict(family=family, comm=comm, op=op,
+                                      elision=el, session=False))
+                    cells.append(dict(family=family, comm=comm, op=op,
+                                      elision=el, session=True))
+    return cells
+
+
+def _session_sensitive(prob, op: str, elision: str) -> bool:
+    from repro.core import api
+
+    base = prob.alg.schedule_words(prob, op, elision, session=None)
+    sess = prob.alg.schedule_words(prob, op, elision,
+                                   session=api.Session())
+    return base != sess
+
+
+def run_conformance(family: Optional[str] = None,
+                    comms: Tuple[str, ...] = ("dense", "sparse"),
+                    *, m: int = 64, n: int = 64, r: int = 16, c: int = 2,
+                    nnz_row: int = 4, progress=None) -> Dict[str, object]:
+    """Verify the whole registry grid; returns the report dict.
+
+    One problem per (family, comm) at the smoke shape (matching
+    check_obs.py); session sensitivity is probed on the *dense* problem
+    so the sparse grid keeps the same session axis.
+    """
+    import jax
+
+    from repro.core import api
+
+    p = len(jax.devices())
+    probs: Dict[Tuple[str, str], object] = {}
+    rows: List[CellVerdict] = []
+    for spec in conformance_cells(family, comms):
+        key = (spec["family"], spec["comm"])
+        if key not in probs:
+            probs[key] = _make_problem(*key, m=m, n=n, r=r, c=c,
+                                       nnz_row=nnz_row)
+        prob = probs[key]
+        dense_key = (spec["family"], "dense")
+        if dense_key not in probs:
+            probs[dense_key] = _make_problem(*dense_key, m=m, n=n, r=r,
+                                             c=c, nnz_row=nnz_row)
+        if spec["session"] and not _session_sensitive(
+                probs[dense_key], spec["op"], spec["elision"]):
+            continue   # identical program; the plain cell covers it
+        session = api.Session() if spec["session"] else None
+        try:
+            row = verify_cell(prob, spec["op"], spec["elision"], session)
+        except Exception as exc:   # noqa: BLE001 - recorded per cell
+            row = CellVerdict(
+                cell=(f"{spec['family']}.{spec['op']}"
+                      + (f"[{spec['elision']}]"
+                         if spec["op"] == "fusedmm" else "")
+                      + f"[{spec['comm']}]"
+                      + ("+sess" if spec["session"] else "")),
+                family=spec["family"], op=spec["op"],
+                elision=spec["elision"], comm=spec["comm"],
+                session=spec["session"], p=p, mode="error",
+                collectives=0, modeled_words=None, measured_words=None,
+                rendezvous_fired=0, checks={},
+                errors=[f"verification raised: {exc!r}"], verdict="fail")
+        rows.append(row)
+        if progress is not None:
+            progress(row)
+    report = {
+        "schema": 1,
+        "p": p,
+        "shape": {"m": m, "n": n, "r": r, "c": c, "nnz_row": nnz_row},
+        "cells": [dict(r) for r in rows],
+        "pass": sum(1 for r in rows if r.ok),
+        "fail": sum(1 for r in rows if not r.ok),
+        "structural": sum(1 for r in rows if r["mode"] == "structural"),
+    }
+    return report
+
+
+def write_report(report: Dict[str, object], path: str) -> str:
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def load_report(path: str) -> Dict[str, object]:
+    with open(path) as fh:
+        return json.load(fh)

@@ -1,0 +1,97 @@
+"""R3 - no dense full-shape materialization in hot paths.
+
+The paper's whole point is that the m x n sparse matrix never exists
+densely on any rank; an ``np.zeros((m, n))`` / ``.todense()`` in an
+executor or kernel hot path silently re-introduces the O(m*n) memory
+the 1.5D/2.5D decompositions exist to avoid, and scales catastrophically
+past toy sizes.  The rule flags, inside ``repro/core``,
+``repro/kernels`` and ``repro/serving``:
+
+* any ``.todense()`` / ``.toarray()`` call, and
+* ``zeros/ones/empty/full``-style allocations whose shape argument is a
+  2-tuple of one m-like and one n-like problem dimension (terminal
+  attribute or bare name ``m``/``n``, in either order) - the
+  ``np.zeros((prob.m, prob.n))`` idiom.
+
+Documented debug-only host views (e.g. ``SparseResult.to_dense``) are
+allowlisted with a reason rather than rewritten.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import Rule, dotted_name
+
+HOT_DIRS = ("repro/core/", "repro/kernels/", "repro/serving/")
+ALLOC_NAMES = ("zeros", "ones", "empty", "full")
+DENSIFY_ATTRS = ("todense", "toarray")
+
+
+def _applies(path: str) -> bool:
+    return any(seg in path for seg in HOT_DIRS)
+
+
+def _dim_letter(node: ast.expr) -> Optional[str]:
+    """'m' or 'n' when the expression is an m/n problem dimension."""
+    if isinstance(node, ast.Name) and node.id in ("m", "n"):
+        return node.id
+    if isinstance(node, ast.Attribute) and node.attr in ("m", "n"):
+        return node.attr
+    return None
+
+
+def _enclosing(tree: ast.Module, target: ast.AST) -> str:
+    """Dotted class/function context of a node (for the finding symbol)."""
+    path: List[str] = []
+
+    def visit(node: ast.AST, ctx: List[str]) -> bool:
+        if node is target:
+            path.extend(ctx)
+            return True
+        name = getattr(node, "name", None) if isinstance(
+            node, (ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef)
+        ) else None
+        nxt = ctx + [name] if name else ctx
+        return any(visit(c, nxt) for c in ast.iter_child_nodes(node))
+
+    visit(tree, [])
+    return ".".join(path)
+
+
+def _check(tree: ast.Module, path: str, source: str) -> List[Finding]:
+    del source
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func)
+        leaf = fname.split(".")[-1]
+        if leaf in DENSIFY_ATTRS and isinstance(node.func, ast.Attribute):
+            findings.append(Finding(
+                rule="R3", path=path, line=node.lineno,
+                symbol=_enclosing(tree, node),
+                message=(f".{leaf}() densifies a sparse operand to the "
+                         f"full problem shape in a hot path")))
+            continue
+        if leaf in ALLOC_NAMES and node.args:
+            shape = node.args[0]
+            if isinstance(shape, (ast.Tuple, ast.List)) \
+                    and len(shape.elts) == 2:
+                dims = {_dim_letter(e) for e in shape.elts}
+                if dims == {"m", "n"}:
+                    findings.append(Finding(
+                        rule="R3", path=path, line=node.lineno,
+                        symbol=_enclosing(tree, node),
+                        message=(f"{fname}((m, n)) materializes the full "
+                                 f"dense problem shape in a hot path")))
+    return findings
+
+
+RULE = Rule(
+    id="R3",
+    title="no dense full-shape materialization in executor/kernel hot paths",
+    applies=_applies,
+    check=_check,
+)

@@ -1,0 +1,125 @@
+"""R4 - pure_callback closures must not capture mutable module state.
+
+``jax.pure_callback`` promises XLA the bridged host function is pure:
+the compiler is free to cache, reorder, elide, or re-execute it.  A
+callback that reads a module-level mutable (a registry dict, a
+rebindable ``_ACTIVE``-style global) breaks that promise - the traced
+program bakes in whichever state existed at call time, and retraces vs
+cache hits silently diverge.  Closing over locals of the enclosing
+function (``prob``, ``ctx``) is fine: those are frozen per trace.
+
+The rule finds calls to ``pure_callback`` (or the repo's ``_callback``
+wrapper), resolves the callback argument when it is a lambda or a
+locally-defined function, and flags reads of module-level names that
+look mutable: assigned a list/dict/set literal or comprehension,
+re-assigned more than once at module scope, or named in any ``global``
+statement.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import Rule, dotted_name
+
+CALLBACK_NAMES = ("pure_callback", "_callback")
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+
+
+def _applies(path: str) -> bool:
+    return path.endswith(".py")
+
+
+def _mutable_module_names(tree: ast.Module) -> Set[str]:
+    assigned_count: dict = {}
+    mutable: Set[str] = set()
+    for stmt in tree.body:
+        targets: List[ast.expr] = []
+        value: Optional[ast.expr] = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        elif isinstance(stmt, ast.AugAssign):
+            targets, value = [stmt.target], None
+        for t in targets:
+            if isinstance(t, ast.Name):
+                assigned_count[t.id] = assigned_count.get(t.id, 0) + 1
+                if value is not None and isinstance(value,
+                                                    _MUTABLE_LITERALS):
+                    mutable.add(t.id)
+    mutable.update(n for n, c in assigned_count.items() if c > 1)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            mutable.update(node.names)
+    return mutable
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Names bound inside the callback (params + stores) - not captures."""
+    out: Set[str] = set()
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = fn.args
+        for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                    + ([a.vararg] if a.vararg else [])
+                    + ([a.kwarg] if a.kwarg else [])):
+            out.add(arg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not fn:
+                out.add(node.name)
+    return out
+
+
+def _resolve_callback(tree: ast.Module,
+                      arg: ast.expr) -> Optional[ast.AST]:
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Name):
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == arg.id:
+                return node
+    return None
+
+
+def _check(tree: ast.Module, path: str, source: str) -> List[Finding]:
+    del source
+    mutable = _mutable_module_names(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        if dotted_name(node.func).split(".")[-1] not in CALLBACK_NAMES:
+            continue
+        fn = _resolve_callback(tree, node.args[0])
+        if fn is None:
+            continue   # parameter-forwarded callable; analyzed at its def
+        locals_ = _local_names(fn)
+        body = fn.body if isinstance(fn, ast.Lambda) else fn
+        captured = set()
+        for sub in ast.walk(body):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                if sub.id in mutable and sub.id not in locals_:
+                    captured.add(sub.id)
+        cb = getattr(fn, "name", "<lambda>")
+        for name in sorted(captured):
+            findings.append(Finding(
+                rule="R4", path=path, line=node.lineno,
+                symbol=cb,
+                message=(f"pure_callback-bridged '{cb}' reads mutable "
+                         f"module state '{name}'; XLA may cache or replay "
+                         f"the callback with stale state")))
+    return findings
+
+
+RULE = Rule(
+    id="R4",
+    title="pure_callback closures must not capture mutable module state",
+    applies=_applies,
+    check=_check,
+)

@@ -48,7 +48,7 @@ import dataclasses
 import hashlib
 import time
 import weakref
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,8 +57,6 @@ import numpy as np
 from repro.core import costmodel, d15, d25, s15, s25
 from repro.core.grid import make_grid15, make_grid25
 from repro.distributed import faults
-from repro.obs import tracer as obs_tracer
-from repro.obs import metrics as obs_metrics
 
 __all__ = [
     "ALGORITHMS", "Algorithm", "DistProblem", "Session", "SparseResult",
@@ -66,6 +64,23 @@ __all__ = [
     "ElasticProblem", "RetryPolicy", "FaultRecoveryError",
     "RETRYABLE_ERRORS", "problem_from_meta", "degrade", "spmm_batched",
 ]
+
+
+def _tracer_active():
+    """The active obs tracer, or None.
+
+    Function-scoped import by design (lint rule R1): ``repro.core`` is
+    the foundation layer and must stay importable without the obs
+    stack; resolving through ``sys.modules`` per call also keeps the
+    tests' module-level monkeypatching visible."""
+    from repro.obs import tracer as obs_tracer
+    return obs_tracer.active()
+
+
+def _metrics_active():
+    """The active obs metrics registry, or None (lazy — see above)."""
+    from repro.obs import metrics as obs_metrics
+    return obs_metrics.active()
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +167,10 @@ class Algorithm:
     name: str = ""
     elisions: Tuple[str, ...] = ()       # strategies fusedmm accepts
     auto_elisions: Tuple[str, ...] = ()  # candidates for elision="auto"
+    #: the family schedule module (d15/s15/d25/s25) — set per subclass;
+    #: typed Any because each module exposes the schedule_* contract
+    #: structurally, not through a shared base.
+    _sched_mod: Any = None
 
     # -- grid / feasibility --------------------------------------------------
     def make_grid(self, c: int, devices):
@@ -753,7 +772,9 @@ class DistProblem:
     repeated kernel calls — ALS's CG loop, GAT's per-layer sweeps — pay
     planning once, exactly like the paper's preprocessing."""
     alg: Algorithm
-    grid: object
+    #: the family grid (Grid15/Grid25) — structural (``.p``/``.L``/
+    #: ``.G`` reads), no shared base class
+    grid: Any
     rows: np.ndarray
     cols: np.ndarray
     vals: np.ndarray
@@ -1104,7 +1125,7 @@ class DistProblem:
         the across-call cache (bitwise-identical; d15/d25 gather X,
         s15 gathers both, s25 nothing)."""
         faults.guard("sddmm", self)
-        tr = obs_tracer.active()
+        tr = _tracer_active()
         if tr is None:
             return self.alg.sddmm(self, X, Y, session=session)
         with tr.round(self, "sddmm", session=session):
@@ -1120,7 +1141,7 @@ class DistProblem:
         serves s15's column-slab gather of Y; the other families' SpMM
         replicates nothing inbound."""
         faults.guard("spmm", self)
-        tr = obs_tracer.active()
+        tr = _tracer_active()
         if tr is None:
             return self.alg.spmm(self, Y, vals=vals, session=session)
         with tr.round(self, "spmm", session=session):
@@ -1139,7 +1160,7 @@ class DistProblem:
         if vals is not None:
             vals = np.asarray(vals, np.float32)
         A = np.asarray(A, np.float32)
-        tr = obs_tracer.active()
+        tr = _tracer_active()
         if tr is None:
             return self.alg.spmm_t(self, A, vals=vals, session=session)
         with tr.round(self, "spmm_t", session=session):
@@ -1155,7 +1176,7 @@ class DistProblem:
         matrix and docs/algorithms.md for the per-cell word counts."""
         el = self.resolve_elision(elision, session)
         faults.guard("fusedmm", self, elision=el)
-        tr = obs_tracer.active()
+        tr = _tracer_active()
         if tr is None:
             return self.alg.fusedmm(self, X, Y, el, session)
         with tr.round(self, "fusedmm", elision=el, session=session):
@@ -1476,7 +1497,8 @@ def _runtime_error_types():
 #: Errors worth retrying: scripted faults from the injection harness and
 #: the runtime's own device-failure surface.  Caller bugs (TypeError,
 #: ValueError, ...) are NOT in this set and propagate immediately.
-RETRYABLE_ERRORS: tuple = (faults.TransientFault,) + _runtime_error_types()
+RETRYABLE_ERRORS: Tuple[type, ...] = (
+    (faults.TransientFault,) + _runtime_error_types())
 
 
 class FaultRecoveryError(RuntimeError):
@@ -1628,7 +1650,7 @@ class ElasticProblem:
                            p=self.problem.p,
                            coord=getattr(e, "coord", None))
                 self.recoveries.append(rec)
-                reg = obs_metrics.active()
+                reg = _metrics_active()
                 if reg is not None:
                     reg.inc("elastic.faults", 1, op=label,
                             kind=type(e).__name__)

@@ -355,6 +355,12 @@ def schedule_events(grid: Grid15, op: str, elision: str = "none"):
     raise ValueError(f"unknown op {op!r}")
 
 
+# Every d15 schedule event legalizes to at most one collective kind —
+# no multi-collective expansions (contract read by the static
+# conformance verifier; s25 declares the one real entry).
+WIRE_EXPANSIONS: dict = {}
+
+
 def schedule_words(grid: Grid15, plan: PlanD15, op: str,
                    elision: str = "none", pre_gathered: bool = False):
     """Impl-exact per-device wire words for each schedule event.

@@ -307,6 +307,13 @@ def schedule_events(grid: Grid25, op: str, elision: str = "none"):
     raise ValueError(f"unknown op {op!r}")
 
 
+# A d25 Cannon shift multiplexes several channels but they are all
+# collective-permutes — no schedule event legalizes to more than one
+# collective kind (contract read by the static conformance verifier;
+# s25 declares the one real entry).
+WIRE_EXPANSIONS: dict = {}
+
+
 def schedule_words(grid: Grid25, plan: PlanD25, op: str,
                    elision: str = "none", pre_gathered: bool = False):
     """Impl-exact per-device wire words for each schedule event.

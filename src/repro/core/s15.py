@@ -211,9 +211,9 @@ def schedule_events(grid: Grid15, op: str, elision: str = "none"):
     """
     L = grid.L
 
-    def passes(n):
+    def passes(n, start=0):
         out = []
-        for t in range(n * L):
+        for t in range(start, start + n * L):
             out += [("phase", t), ("shift", t)]
         return out
 
@@ -222,11 +222,24 @@ def schedule_events(grid: Grid15, op: str, elision: str = "none"):
     if op in ("spmm", "spmm_t"):     # spmm_t = spmm on the S^T problem
         return [("gather", 0)] + passes(1)
     if op == "fusedmm":
-        gathers = [("gather", 0), ("gather", 1)]
-        if elision == "none":        # B re-gathered between the rounds
-            gathers.append(("gather", 2))
-        return gathers + passes(1 if elision == "fused" else 2)
+        head = [("gather", 0), ("gather", 1)]
+        if elision == "fused":
+            return head + passes(1)
+        if elision == "none":
+            # B's honest re-gather happens BETWEEN the propagation
+            # rounds (the SpMM half gathers afresh), so its event sits
+            # there — the emitted HLO order, which the static
+            # conformance verifier pins (repro.analysis.conformance)
+            return (head + passes(1) + [("gather", 2)]
+                    + passes(1, start=L))
+        return head + passes(2)      # reuse: replayed, no re-gather
     raise ValueError(f"unknown op {op!r}")
+
+
+# No s15 schedule event legalizes to more than one collective kind —
+# a shift's three payloads are all collective-permutes (contract read
+# by the static conformance verifier; s25 declares the one real entry).
+WIRE_EXPANSIONS: dict = {}
 
 
 def schedule_words(grid: Grid15, plan: PlanS15, op: str,

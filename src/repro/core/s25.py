@@ -456,6 +456,16 @@ def schedule_events(grid: Grid25, op: str, elision: str = "none"):
     raise ValueError(f"unknown op {op!r}")
 
 
+# FusedMM's reduce event carries the partial-sum reduce-scatter AND the
+# value re-broadcast: it legalizes to two HLO collectives (RS + AG),
+# splitting the event's 2*fiber words evenly.  The static conformance
+# verifier (repro.analysis.conformance) reads this to expand the event
+# before matching the compiled collective sequence.
+WIRE_EXPANSIONS: dict = {
+    ("fusedmm", "reduce"): ("reduce-scatter", "all-gather"),
+}
+
+
 def schedule_words(grid: Grid25, plan: PlanS25, op: str,
                    elision: str = "none", pre_gathered: bool = False):
     """Impl-exact per-device wire words for each schedule event.

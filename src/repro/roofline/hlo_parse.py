@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -117,6 +117,107 @@ def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
             elif _SHAPE_RE.search(a):       # inline-typed operand
                 op_bytes += shape_bytes(a)
         out.append(CollectiveOp(op, name, op_bytes, shape_bytes(out_shape)))
+    return out
+
+
+# --- ordered collectives (schedule-conformance view) -----------------------
+#
+# ``parse_collectives`` aggregates traffic; the conformance verifier
+# (repro.analysis.conformance) additionally needs the *issue order* and
+# the group structure of each instruction.  XLA assigns collectives a
+# monotonically increasing ``channel_id`` in lowering order (gaps mark
+# DCE'd instructions), so sorting on it recovers the schedule the
+# backend will rendezvous in.
+
+_CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+_GROUPSET_RE = re.compile(r"replica_groups=\{((?:\{[\d,]*\},?)*)\}")
+_GROUP_RE = re.compile(r"\{([\d,]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+@dataclasses.dataclass
+class OrderedCollective:
+    """One collective instruction with its schedule position and groups."""
+
+    kind: str
+    name: str
+    channel_id: int                       # -1 when the attr is absent
+    operand_bytes: int
+    output_bytes: int
+    replica_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+    source_target_pairs: Optional[Tuple[Tuple[int, int], ...]] = None
+
+    @property
+    def wire_bytes(self) -> int:
+        return CollectiveOp(self.kind, self.name, self.operand_bytes,
+                            self.output_bytes).wire_bytes
+
+
+def _parse_groups(line: str) -> Optional[Tuple[Tuple[int, ...], ...]]:
+    m = _GROUPSET_RE.search(line)
+    if m:
+        groups = []
+        for g in _GROUP_RE.finditer(m.group(1)):
+            ids = tuple(int(x) for x in g.group(1).split(",") if x)
+            if ids:
+                groups.append(ids)
+        return tuple(groups) if groups else None
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:   # iota form [g,s]<=[n]: reshape(arange(n), (g, s)) rows
+        g, s, n = (int(m.group(i)) for i in (1, 2, 3))
+        if g * s == n:
+            return tuple(tuple(range(i * s, (i + 1) * s))
+                         for i in range(g))
+    return None
+
+
+def _parse_pairs(line: str) -> Optional[Tuple[Tuple[int, int], ...]]:
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return None
+    pairs = []
+    for g in _GROUP_RE.finditer(m.group(1)):
+        ids = [int(x) for x in g.group(1).split(",") if x]
+        if len(ids) == 2:
+            pairs.append((ids[0], ids[1]))
+    return tuple(pairs) if pairs else None
+
+
+def ordered_collectives(hlo_text: str) -> List[OrderedCollective]:
+    """Every collective instruction sorted into backend issue order.
+
+    Sort key is (channel_id, appearance); instructions without a
+    channel_id (not SPMD-partitioned) sort after those with one, in
+    textual order.  Async ``-start``/``-done`` pairs are collapsed onto
+    the ``-start`` line (the one carrying the attributes); the CPU
+    backend this repo verifies on emits only the sync forms.
+    """
+    flat = parse_collectives(hlo_text)
+    byte_table = {c.name: c for c in flat}
+    out: List[OrderedCollective] = []
+    seen: set = set()
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, op = m.group(1), m.group(2), m.group(3)
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        if name in seen:
+            continue
+        seen.add(name)
+        cm = _CHANNEL_RE.search(line)
+        ref = byte_table.get(name)
+        out.append(OrderedCollective(
+            kind=base, name=name,
+            channel_id=int(cm.group(1)) if cm else -1,
+            operand_bytes=ref.operand_bytes if ref else 0,
+            output_bytes=ref.output_bytes if ref else shape_bytes(out_shape),
+            replica_groups=_parse_groups(line),
+            source_target_pairs=_parse_pairs(line)))
+    out.sort(key=lambda c: (c.channel_id < 0, c.channel_id))
     return out
 
 

@@ -9,7 +9,8 @@ Two sub-stacks share this package:
 * the local LM decode path (:mod:`repro.serving.decode`) — prefill +
   greedy decode on the single-process model, imported explicitly so
   this package does not pull the model stack in for graph serving
-  (``repro.serving.engine`` remains as a back-compat alias).
+  (``repro.serving.engine`` is a deprecated alias that warns on
+  import; see docs/static_analysis.md for the removal note).
 """
 from repro.serving.pool import Deployment, SessionPool, content_key
 from repro.serving.requests import (AdmissionError, AggregateRequest,

@@ -1,14 +1,23 @@
-"""Back-compat alias for :mod:`repro.serving.decode`.
+"""Deprecated alias for :mod:`repro.serving.decode` — will be removed.
 
 This module historically held the local LM decode path under a name
 that collided with the distributed :class:`repro.serving.ServingEngine`
 (``server.py``) — two unrelated things both called "engine".  The decode
-path now lives in :mod:`repro.serving.decode`; this alias re-exports it
-unchanged so existing imports keep working.  New code should import
-``repro.serving.decode`` (LM prefill/decode) or ``repro.serving``
-(the distributed ServingEngine) directly.
+path now lives in :mod:`repro.serving.decode`; this shim re-exports it
+unchanged but warns on import, and is scheduled for removal once no
+caller trips the warning (tracked in docs/static_analysis.md's stale-
+export note).  Import ``repro.serving.decode`` (LM prefill/decode) or
+``repro.serving`` (the distributed ServingEngine) instead.
 """
+import warnings
+
 from repro.serving.decode import (decode_step, extend_cache,
                                   greedy_generate, prefill)
+
+warnings.warn(
+    "repro.serving.engine is a deprecated alias; import "
+    "repro.serving.decode instead (removal tracked in "
+    "docs/static_analysis.md)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["decode_step", "extend_cache", "greedy_generate", "prefill"]

@@ -1,0 +1,111 @@
+"""8-device schedule-conformance sweep (docs/static_analysis.md).
+
+Four guarantees:
+
+1. **Full-grid verdicts** — every registry cell (family x op x elision
+   x comm x session) lowers to HLO and passes verification: dense cells
+   match their ``schedule_words`` sequence (kind, order, per-run words,
+   gather/reduce instruction counts), every cell's replica groups
+   partition the mesh, and the SPMD rendezvous simulation drains.
+
+2. **Corruption is caught** — corrupting a cell's expected event list
+   (dropping the gather, mislabeling the reduce, inflating shift words)
+   flips its verdict to fail with a sequence error; corrupting one
+   rank's queue in the real HLO-derived program deadlocks the
+   rendezvous simulation.
+
+3. **Registry coverage** — the verdict table contains every declared
+   (family x op x elision) cell in both wire formats; dense cells are
+   all mode="full" (the model is defined there), sparse cells
+   mode="structural" (data-dependent volume by contract).
+
+4. **Artifact** — ANALYSIS_report.json (the CI artifact schema) is
+   written and JSON-round-trips.
+
+Prints ALL ANALYSIS OK.
+"""
+import json
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import jax
+
+from repro.analysis import conformance
+from repro.core import api
+
+assert len(jax.devices()) == 8
+
+# --- 1+3. full grid green --------------------------------------------------
+report = conformance.run_conformance(
+    progress=lambda row: print(f"{row['verdict']:4s} {row['cell']:34s} "
+                               f"[{row['mode']}]"))
+failed = [c for c in report["cells"] if c["verdict"] != "pass"]
+assert not failed, f"conformance failures: {[c['cell'] for c in failed]}"
+
+cells = {c["cell"] for c in report["cells"]}
+for name in sorted(api.ALGORITHMS):
+    alg = api.ALGORITHMS[name]
+    for comm in ("dense", "sparse"):
+        for op in ("sddmm", "spmm", "spmm_t"):
+            assert f"{name}.{op}[{comm}]" in cells, (name, op, comm)
+        for el in alg.elisions:
+            assert f"{name}.fusedmm[{el}][{comm}]" in cells, (name, el)
+for c in report["cells"]:
+    want = "full" if c["comm"] == "dense" else "structural"
+    assert c["mode"] == want, c["cell"]
+    assert c["checks"]["replica_groups"] == "pass", c["cell"]
+    assert c["checks"]["rendezvous"] == "pass", c["cell"]
+n_sess = sum(1 for c in report["cells"] if c["session"])
+assert n_sess >= 10, "session-replay variants missing from the grid"
+print(f"grid: {len(report['cells'])} cells "
+      f"({report['structural']} structural, {n_sess} +session) all pass")
+
+# --- 2a. corrupted expected event lists flip the verdict -------------------
+prob = conformance._make_problem("d15", "dense", m=64, n=64, r=16, c=2,
+                                 nnz_row=4)
+good = conformance.verify_cell(prob, "sddmm")
+assert good.ok and good["mode"] == "full"
+expected = conformance.expected_collectives(prob, "sddmm")
+
+dropped = expected[1:]                        # lose the fiber all-gather
+bad = conformance.verify_cell(prob, "sddmm", expected_override=dropped)
+assert not bad.ok and any("mismatch" in e for e in bad["errors"])
+
+mislabeled = [conformance.ExpectedEvent(e.point, e.phase,
+                                        "reduce-scatter", e.words)
+              if e.kind == "all-gather" else e for e in expected]
+bad = conformance.verify_cell(prob, "sddmm", expected_override=mislabeled)
+assert not bad.ok
+
+inflated = [conformance.ExpectedEvent(e.point, e.phase, e.kind,
+                                      e.words * 2) for e in expected]
+bad = conformance.verify_cell(prob, "sddmm", expected_override=inflated)
+assert not bad.ok and any("words" in e for e in bad["errors"])
+print("corrupted event lists: drop/mislabel/inflate all caught")
+
+# --- 2b. rendezvous deadlock on the real per-rank program ------------------
+from repro.roofline.hlo_parse import ordered_collectives
+
+hlo = prob.alg.lower_fusedmm(prob, "none").compile().as_text()
+instrs = ordered_collectives(hlo)
+prog = conformance.rank_programs(instrs, 8)
+assert conformance.simulate_rendezvous(prog)["ok"]
+prog[2] = prog[2][1:]                  # rank 2 skips its first collective
+sim = conformance.simulate_rendezvous(prog)
+assert not sim["ok"] and 2 in sim["stuck"]
+prog = conformance.rank_programs(instrs, 8)
+prog[6][0], prog[6][1] = prog[6][1], prog[6][0]   # cross-rank reorder
+assert not conformance.simulate_rendezvous(prog)["ok"]
+print(f"rendezvous: {len(instrs)} collectives drain; "
+      f"skip/reorder corruptions deadlock")
+
+# --- 4. artifact -----------------------------------------------------------
+path = conformance.write_report({"schema": 1, "conformance": report},
+                                "ANALYSIS_report.json")
+loaded = conformance.load_report(path)
+assert loaded == json.loads(json.dumps({"schema": 1,
+                                        "conformance": report}))
+assert loaded["conformance"]["fail"] == 0
+print(f"wrote {path} ({len(report['cells'])} cell verdicts)")
+print("ALL ANALYSIS OK")

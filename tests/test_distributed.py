@@ -158,6 +158,17 @@ def test_remesh_8_to_4_bitwise():
 
 
 @pytest.mark.slow
+def test_static_schedule_conformance_8dev():
+    """Every registry cell's lowered HLO collective sequence matches its
+    published schedule (kind, order, replica groups) with the SPMD
+    rendezvous simulation deadlock-free; corrupted event lists and
+    per-rank programs are caught.  Writes ANALYSIS_report.json."""
+    out = run_script("check_analysis.py")
+    assert "ALL ANALYSIS OK" in out
+    assert "all pass" in out
+
+
+@pytest.mark.slow
 def test_obs_traced_smoke_8dev():
     """Traced 8-device smoke across all four families: every dense
     round's measured/modeled wire-word ratio inside [0.99, 1.01] (the
